@@ -1,0 +1,45 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import sys
+from typing import Callable, Dict, List
+
+from repro.core import NumaSim, PAPER_8SOCKET, Policy
+from repro.core.pagetable import PERM_R, PERM_RW
+
+
+def csv(name: str, rows: List[Dict]) -> None:
+    """Print one benchmark table as CSV (name,key=value pairs per row)."""
+    for row in rows:
+        parts = [name] + [f"{k}={v}" for k, v in row.items()]
+        print(",".join(parts))
+    sys.stdout.flush()
+
+
+def make_spinners(sim: NumaSim, per_socket: int, skip_cpu0: bool = True):
+    """Spinning threads on every socket (the Fig 1/10 workload)."""
+    topo = sim.topo
+    tids = []
+    for node in range(topo.n_nodes):
+        base = node * topo.hw_threads_per_node
+        for i in range(per_socket):
+            cpu = base + i + (1 if (skip_cpu0 and node == 0) else 0)
+            t = sim.spawn_thread(cpu)
+            v = sim.mmap(t, 1)
+            sim.touch(t, v.start_vpn, write=True)
+            tids.append(t)
+    return tids
+
+
+def mprotect_loop(sim: NumaSim, tid: int, vpn: int, iters: int) -> float:
+    t0 = sim.thread_time_ns(tid)
+    for i in range(iters):
+        sim.mprotect(tid, vpn, 1, PERM_R if i % 2 == 0 else PERM_RW)
+    return (sim.thread_time_ns(tid) - t0) / iters
+
+
+def policies():
+    return [("linux", Policy.LINUX, False),
+            ("mitosis", Policy.MITOSIS, False),
+            ("numapte-nofilter", Policy.NUMAPTE, False),
+            ("numapte", Policy.NUMAPTE, True)]

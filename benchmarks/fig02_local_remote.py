@@ -1,0 +1,39 @@
+"""Fig 2a: mprotect slowdown with spinners on the LOCAL socket only vs
+spinners on REMOTE sockets only — remote IPIs dominate the cost."""
+from __future__ import annotations
+
+from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core.pagetable import Policy
+
+from .common import csv, mprotect_loop
+
+
+def run_one(spin: int, where: str, iters: int = 200) -> float:
+    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX)
+    main = sim.spawn_thread(cpu=0)
+    nodes = [0] if where == "local" else list(range(1, sim.topo.n_nodes))
+    for node in nodes:
+        base = node * sim.topo.hw_threads_per_node
+        for i in range(spin):
+            cpu = base + i + (1 if node == 0 else 0)
+            t = sim.spawn_thread(cpu)
+            v = sim.mmap(t, 1)
+            sim.touch(t, v.start_vpn, write=True)
+    vma = sim.mmap(main, 1)
+    sim.touch(main, vma.start_vpn, write=True)
+    return mprotect_loop(sim, main, vma.start_vpn, iters)
+
+
+def main(quick: bool = False) -> None:
+    base = run_one(0, "local")
+    rows = []
+    for where in ("local", "remote"):
+        for spin in ([4, 18] if quick else [1, 2, 4, 9, 18, 35]):
+            ns = run_one(spin, where)
+            rows.append({"spinners_on": where, "spin_per_socket": spin,
+                         "slowdown": round(ns / base, 2)})
+    csv("fig02_local_remote", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Fig 3 (Mitosis reproduction): impact of page-table vs data placement.
+
+Configs (Table 2): LP/RP = local/remote page-tables, LD/RD = local/remote
+data, I = interconnect interference.  A single worker streams over a large
+array; page-tables and data are pre-placed per config.  The paper's
+observation: RP hurts as much as or more than RD, and interference
+amplifies remote page-walks dramatically.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core.pagetable import Policy
+
+from .common import csv
+
+N_PAGES = 1 << 15        # 128MB scaled
+
+
+def run_config(pt_remote: bool, data_remote: bool, interfere: bool,
+               accesses: int = 60_000) -> float:
+    inter = (1,) if interfere else ()
+    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, interference_nodes=inter)
+    # loader thread on the node that should own PT+data initially
+    setup_node = 1 if (pt_remote or data_remote) else 0
+    loader = sim.spawn_thread(setup_node * sim.topo.hw_threads_per_node)
+    worker = sim.spawn_thread(0)
+    vma = sim.mmap(loader, N_PAGES)
+    for vpn in range(vma.start_vpn, vma.end_vpn):
+        sim.touch(loader, vpn, write=True)     # PT + data on setup node
+    if pt_remote and not data_remote:
+        # migrate data pages back to node 0 (AutoNUMA analogue), PTs stay
+        for frame, node in list(sim._frame_nodes.items()):
+            sim._frame_nodes[frame] = 0
+    order = np.random.default_rng(0).integers(0, N_PAGES, accesses)
+    t0 = sim.thread_time_ns(worker)
+    for off in order:
+        sim.touch(worker, vma.start_vpn + int(off))
+    return sim.thread_time_ns(worker) - t0
+
+
+def main(quick: bool = False) -> None:
+    acc = 20_000 if quick else 60_000
+    base = run_config(False, False, False, acc)
+    rows = []
+    for name, (pt_r, d_r, i) in {
+        "LP-LD": (False, False, False),
+        "LP-RD": (False, True, False),
+        "LP-RDI": (False, True, True),
+        "RP-LD": (True, False, False),
+        "RPI-LD": (True, False, True),
+        "RP-RD": (True, True, False),
+        "RPI-RDI": (True, True, True),
+    }.items():
+        ns = run_config(pt_r, d_r, i, acc)
+        rows.append({"config": name, "slowdown": round(ns / base, 2)})
+    csv("fig03_placement", rows)
+
+
+if __name__ == "__main__":
+    main()

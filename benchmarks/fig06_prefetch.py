@@ -1,0 +1,49 @@
+"""Fig 6: PTE-prefetch degree sweep on the worst-case microbenchmark.
+
+A 1GB array (scaled) is set up on node 0 and traversed once, in random
+order, from node 1 — every access is a first touch from the new socket.
+Paper claim: degree 9 (512 PTEs) fully recovers the laziness penalty and
+matches Mitosis; subsequent traversals are identical regardless of degree.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core.pagetable import Policy
+
+from .common import csv
+
+
+def run_one(policy: Policy, degree: int, n_pages: int) -> float:
+    sim = NumaSim(PAPER_8SOCKET, policy, prefetch_degree=degree)
+    t0 = sim.spawn_thread(0)
+    t1 = sim.spawn_thread(sim.topo.hw_threads_per_node)
+    vma = sim.mmap(t0, n_pages)
+    for v in range(vma.start_vpn, vma.end_vpn):
+        sim.touch(t0, v, write=True)
+    order = np.random.default_rng(0).permutation(n_pages)
+    before = sim.thread_time_ns(t1)
+    for off in order:
+        sim.touch(t1, vma.start_vpn + int(off))
+    sim.check_invariants()
+    return sim.thread_time_ns(t1) - before
+
+
+def main(quick: bool = False) -> None:
+    n_pages = 1 << (14 if quick else 16)
+    mitosis = run_one(Policy.MITOSIS, 0, n_pages)
+    linux = run_one(Policy.LINUX, 0, n_pages)
+    rows = [{"config": "linux", "ms": round(linux / 1e6, 2),
+             "vs_mitosis": round(linux / mitosis, 3)},
+            {"config": "mitosis", "ms": round(mitosis / 1e6, 2),
+             "vs_mitosis": 1.0}]
+    for d in ([0, 3, 9] if quick else [0, 1, 2, 3, 4, 5, 6, 7, 8, 9]):
+        ns = run_one(Policy.NUMAPTE, d, n_pages)
+        rows.append({"config": f"numapte-d{d}", "ms": round(ns / 1e6, 2),
+                     "vs_mitosis": round(ns / mitosis, 3)})
+    csv("fig06_prefetch", rows)
+
+
+if __name__ == "__main__":
+    main()

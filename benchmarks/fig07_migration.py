@@ -1,0 +1,51 @@
+"""Fig 7: workload migration.  A worker sets up data on node 0, then
+migrates to node 1 (where it keeps accessing the same data) while another
+application interferes with inter-socket traffic.
+
+Configs: RPI-LD (Linux: PTs stay remote, interference), RPI-LD-M (Mitosis:
+PTs pre-replicated), RPI-LD-N (numaPTE lazy), RPI-LD-NP (numaPTE +
+prefetch d=9).  Paper claim: Mitosis avoids the penalty; numaPTE pays a
+small lazy cost that prefetching eliminates.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core.pagetable import Policy
+
+from .common import csv
+
+N_PAGES = 1 << 15
+
+
+def run_one(policy: Policy, degree: int, accesses: int) -> float:
+    sim = NumaSim(PAPER_8SOCKET, policy, prefetch_degree=degree,
+                  interference_nodes=(0,))
+    w = sim.spawn_thread(0)
+    vma = sim.mmap(w, N_PAGES)
+    for v in range(vma.start_vpn, vma.end_vpn):
+        sim.touch(w, v, write=True)
+    # data pages stay on node 0; thread moves to node 1
+    sim.migrate_thread(w, sim.topo.hw_threads_per_node)
+    order = np.random.default_rng(1).integers(0, N_PAGES, accesses)
+    t0 = sim.thread_time_ns(w)
+    for off in order:
+        sim.touch(w, vma.start_vpn + int(off))
+    return sim.thread_time_ns(w) - t0
+
+
+def main(quick: bool = False) -> None:
+    acc = 20_000 if quick else 80_000
+    base = run_one(Policy.LINUX, 0, acc)       # RPI-LD
+    rows = [{"config": "RPI-LD(linux)", "norm_time": 1.0}]
+    for name, pol, d in [("RPI-LD-M(mitosis)", Policy.MITOSIS, 0),
+                         ("RPI-LD-N(numapte)", Policy.NUMAPTE, 0),
+                         ("RPI-LD-NP(numapte-pf9)", Policy.NUMAPTE, 9)]:
+        ns = run_one(pol, d, acc)
+        rows.append({"config": name, "norm_time": round(ns / base, 3)})
+    csv("fig07_migration", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fig 8 + Table 4: the five big-memory applications.
+
+Loading phase (page-table UPDATE heavy) and execution phase (page-table
+READ heavy) per policy, plus the page-table footprints.  Paper claims:
+numaPTE matches Mitosis's execution speedups with Linux's loading speed
+and a fraction of the replica footprint (except XSBench, which shares
+everything and converges to Mitosis).
+"""
+from __future__ import annotations
+
+from repro.core import APPS, PAPER_8SOCKET, Policy, run_app
+
+from .common import csv
+
+
+def main(quick: bool = False) -> None:
+    acc = 8_000 if quick else 40_000
+    ppg = 256
+    rows = []
+    apps = ["btree", "xsbench"] if quick else list(APPS)
+    for app in apps:
+        spec = APPS[app]
+        base = None
+        for pol in (Policy.LINUX, Policy.MITOSIS, Policy.NUMAPTE):
+            r = run_app(pol, spec, PAPER_8SOCKET, accesses_per_thread=acc,
+                        pages_per_gb=ppg, touch_stride=1)
+            if pol is Policy.LINUX:
+                base = r
+            rows.append({
+                "app": app, "policy": pol.value,
+                "load_norm": round(r["loading_ns"] / base["loading_ns"], 3),
+                "exec_speedup": round(base["exec_ns"] / r["exec_ns"], 3),
+                "pt_mb": round(r["pt_bytes"] / 1e6, 2),
+                "pt_vs_linux": round(r["pt_bytes"] / base["pt_bytes"], 2),
+            })
+    csv("fig08_apps_table4", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fig 9 (+ Fig 2b): mmap / munmap / mprotect cost vs range size.
+
+No spinning threads.  Paper claims: mmap is largely policy-insensitive;
+mprotect/munmap pay Mitosis's replica-coherence cost (which grows with the
+range), while numaPTE avoids it entirely; at 512KB Mitosis *slows down*
+vs Linux while numaPTE speeds up (Fig 2b).
+"""
+from __future__ import annotations
+
+from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core.pagetable import PERM_R, PERM_RW, Policy
+
+from .common import csv, policies
+
+
+def run_one(policy: Policy, filt: bool, op: str, n_pages: int,
+            iters: int = 50) -> float:
+    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
+    main = sim.spawn_thread(0)
+    total = 0.0
+    if op == "mprotect":
+        vma = sim.mmap(main, n_pages)
+        for v in range(vma.start_vpn, vma.end_vpn):
+            sim.touch(main, v, write=True)
+        t0 = sim.thread_time_ns(main)
+        for i in range(iters):
+            sim.mprotect(main, vma.start_vpn, n_pages,
+                         PERM_R if i % 2 == 0 else PERM_RW)
+        return (sim.thread_time_ns(main) - t0) / iters
+    for _ in range(iters):
+        t0 = sim.thread_time_ns(main)
+        vma = sim.mmap(main, n_pages)
+        t_mmap = sim.thread_time_ns(main) - t0
+        for v in range(vma.start_vpn, vma.end_vpn):
+            sim.touch(main, v, write=True)
+        t0 = sim.thread_time_ns(main)
+        sim.munmap(main, vma.start_vpn, n_pages)
+        t_munmap = sim.thread_time_ns(main) - t0
+        total += t_mmap if op == "mmap" else t_munmap
+    return total / iters
+
+
+def main(quick: bool = False) -> None:
+    sizes = {"4KB": 1, "128KB": 32, "512KB": 128} if quick else \
+        {"4KB": 1, "64KB": 16, "128KB": 32, "512KB": 128, "2MB": 512}
+    rows = []
+    for op in ("mmap", "munmap", "mprotect"):
+        for label, n in sizes.items():
+            base = run_one(Policy.LINUX, False, op, n)
+            for name, pol, filt in policies():
+                ns = run_one(pol, filt, op, n)
+                rows.append({"op": op, "range": label, "policy": name,
+                             "ns": round(ns), "vs_linux": round(ns / base, 3)})
+    csv("fig09_mm_ops", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Figs 11/12: stateless and stateful malloc benchmarks.
+
+Gamma-distributed allocation sizes (~3.3MB mean), three allocator models
+(mmap / glibc / tcmalloc), one worker per socket, varying socket counts.
+Paper claims: Mitosis costs 1.4-1.9x on malloc-heavy loops; numaPTE is at
+or better than Linux thanks to minimal page-table coherence.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import MallocModel, NumaSim, NumaTopology, Policy, \
+    gamma_sizes_pages
+
+from .common import csv, policies
+
+
+def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
+            stateful: bool, iters: int = 150) -> float:
+    topo = NumaTopology(n_nodes=max(2, n_sockets), cores_per_node=18)
+    sim = NumaSim(topo, policy, tlb_filter=filt)
+    rng = np.random.default_rng(7)
+    workers = []
+    for node in range(n_sockets):
+        tid = sim.spawn_thread(node * topo.hw_threads_per_node)
+        workers.append((tid, MallocModel(sim, tid, flavor)))
+    total = 0.0
+    for tid, mall in workers:
+        sizes = gamma_sizes_pages(rng, iters)
+        t0 = sim.thread_time_ns(tid)
+        if stateful:
+            live = [mall.alloc(int(s)) for s in
+                    gamma_sizes_pages(rng, 32)]           # scaled-down 256
+            for s in sizes:
+                mall.free(live.pop(0))
+                live.append(mall.alloc(int(s)))
+            for sp in live:
+                mall.free(sp)
+        else:
+            for s in sizes:
+                sp = mall.alloc(int(s))
+                mall.free(sp)
+        total += sim.thread_time_ns(tid) - t0
+    return total / (iters * len(workers))
+
+
+def main(quick: bool = False) -> None:
+    rows = []
+    sockets = [2, 8] if quick else [1, 2, 4, 8]
+    flavors = ["mmap", "glibc"] if quick else ["mmap", "glibc", "tcmalloc"]
+    for stateful in (False, True):
+        for flavor in flavors:
+            for ns_ in sockets:
+                base = run_one(Policy.LINUX, False, ns_, flavor, stateful)
+                for name, pol, filt in policies():
+                    if quick and name == "numapte-nofilter":
+                        continue
+                    v = run_one(pol, filt, ns_, flavor, stateful)
+                    rows.append({
+                        "bench": "stateful" if stateful else "stateless",
+                        "alloc": flavor, "sockets": ns_, "policy": name,
+                        "us_per_cycle": round(v / 1e3, 2),
+                        "vs_linux": round(v / base, 3)})
+    csv("fig11_12_malloc", rows)
+
+
+if __name__ == "__main__":
+    main()

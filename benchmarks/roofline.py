@@ -1,0 +1,39 @@
+"""Roofline table: read every dry-run artifact and print the three terms.
+
+Run ``python -m repro.launch.dryrun --all`` (and --multi-pod) first; this
+bench aggregates experiments/dryrun/*.json into the §Roofline table.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import csv
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main(quick: bool = False) -> None:
+    rows = []
+    for path in sorted(ART_DIR.glob("*.json")):
+        d = json.loads(path.read_text())
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "roofline_frac": round(r["roofline_fraction"], 4),
+            "useful_flops": round(r["useful_flops_ratio"], 3),
+            "arg_gb_per_dev": round(
+                d["memory_analysis"].get("argument_size_in_bytes", 0)
+                / d["chips"] / 1e9, 3),
+        })
+    if not rows:
+        rows = [{"note": "no dry-run artifacts; run repro.launch.dryrun"}]
+    csv("roofline", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one function per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only NAME]``
+prints ``name,key=value,...`` CSV rows for every reproduced artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig01_mprotect, fig02_local_remote, fig03_placement,
+               fig06_prefetch, fig07_migration, fig08_apps, fig09_mm_ops,
+               fig10_munmap, fig11_malloc, fig13_webserver, fig14_memcached,
+               roofline, serving_coherence)
+
+BENCHES = {
+    "fig01_mprotect": fig01_mprotect.main,
+    "fig02_local_remote": fig02_local_remote.main,
+    "fig03_placement": fig03_placement.main,
+    "fig06_prefetch": fig06_prefetch.main,
+    "fig07_migration": fig07_migration.main,
+    "fig08_apps_table4": fig08_apps.main,
+    "fig09_mm_ops": fig09_mm_ops.main,
+    "fig10_munmap": fig10_munmap.main,
+    "fig11_12_malloc": fig11_malloc.main,
+    "fig13_webserver": fig13_webserver.main,
+    "fig14_memcached": fig14_memcached.main,
+    "serving_coherence": serving_coherence.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", choices=list(BENCHES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    for name in names:
+        t0 = time.time()
+        print(f"# --- {name} ---", file=sys.stderr)
+        BENCHES[name](quick=args.quick)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

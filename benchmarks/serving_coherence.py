@@ -1,0 +1,36 @@
+"""TPU-substrate benchmark: block-table coherence traffic per serving mode.
+
+The device-level analogue of Figs 13/14: the same request churn driven
+through the real JAX serving path (smoke model on CPU) under LOCAL / EAGER
+(Mitosis) / NUMAPTE block-table coherence, reporting exact invalidation
+messages, filtered fraction, fetch/prefetch counts, and host coherence
+bytes — plus the steady-state per-step collective bytes each mode adds to
+the jitted serve step (from repro.pagedpt budget model).
+"""
+from __future__ import annotations
+
+from repro.launch.serve import serve
+from repro.pagedpt import BlockTableSpec, eager_sync_bytes, numapte_fetch_bytes
+
+from .common import csv
+
+
+def main(quick: bool = False) -> None:
+    rows = []
+    for mode in ("local", "eager", "numapte"):
+        r = serve("qwen3_14b", n_requests=8 if quick else 24,
+                  prompt_len=32, gen_len=8 if quick else 16, batch=4,
+                  n_pods=4, mode=mode, verbose=False)
+        rows.append({k: (round(v, 1) if isinstance(v, float) else v)
+                     for k, v in r.items()})
+    spec = BlockTableSpec(n_pods=2, n_tables=512)
+    rows.append({"mode": "per-step-collective-bytes",
+                 "eager": eager_sync_bytes(spec),
+                 "numapte": numapte_fetch_bytes(spec),
+                 "ratio": round(eager_sync_bytes(spec)
+                                / numapte_fetch_bytes(spec), 1)})
+    csv("serving_coherence", rows)
+
+
+if __name__ == "__main__":
+    main()

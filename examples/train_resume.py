@@ -1,0 +1,50 @@
+"""Fault-tolerance demo: train, crash mid-run, restore, verify the replayed
+trajectory is bit-identical to an uninterrupted run.
+
+    PYTHONPATH=src python examples/train_resume.py
+"""
+import shutil
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_smoke_config                    # noqa: E402
+from repro.data import SyntheticLMDataset                     # noqa: E402
+from repro.runtime import (FailureInjector, Trainer,          # noqa: E402
+                           TrainerConfig)
+
+CKPT_A = "/tmp/resume_demo_clean"
+CKPT_B = "/tmp/resume_demo_faulty"
+
+
+def run(schedule, ckpt_dir):
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    cfg = get_smoke_config("qwen3_14b")
+    dataset = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=64,
+                                 global_batch=4)
+    trainer = Trainer(cfg, TrainerConfig(total_steps=30, checkpoint_every=10,
+                                         checkpoint_dir=ckpt_dir,
+                                         log_every=10),
+                      dataset, injector=FailureInjector(schedule))
+    return trainer.run()
+
+
+def main() -> None:
+    print("=== clean run ===")
+    clean = run({}, CKPT_A)
+    print("=== run with a crash at step 17 (and a straggler at 23) ===")
+    faulty = run({17: "crash", 23: "slow"}, CKPT_B)
+
+    assert faulty["restarts"] == 1
+    clean_by_step = {h["step"]: h["loss"] for h in clean["history"]}
+    drift = max(abs(h["loss"] - clean_by_step[h["step"]])
+                for h in faulty["history"])
+    print(f"\nrestarts={faulty['restarts']} "
+          f"stragglers={faulty['stragglers']} "
+          f"max loss drift vs clean replay = {drift:.2e}")
+    assert drift < 1e-5, "restore+replay must reproduce the clean trajectory"
+    print("fault-tolerant replay verified")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Atomic sharded checkpointing with resharding-on-restore.
+
+Layout:  <dir>/step_<N>.tmp-<nonce>/   (written)
+         <dir>/step_<N>/               (atomic rename on completion)
+             manifest.json             step, leaf index, shapes/dtypes, meta
+             leaf_<i>.npy              one file per pytree leaf
+
+Crash-safety: a checkpoint is visible iff the rename committed; partial
+writes are left as .tmp-* and garbage-collected on the next save.  Restore
+accepts ANY target sharding — leaves are loaded on host then device_put to
+the new mesh layout, which is what makes elastic restarts (different pod
+counts) work.  An async mode hands the host arrays to a writer thread so
+the train loop only blocks on the previous save.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+import uuid
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_names(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save_pytree(directory: str, step: int, tree: PyTree,
+                extra: Optional[Dict] = None) -> pathlib.Path:
+    base = pathlib.Path(directory)
+    base.mkdir(parents=True, exist_ok=True)
+    for stale in base.glob("step_*.tmp-*"):
+        shutil.rmtree(stale, ignore_errors=True)
+    tmp = base / f"step_{step}.tmp-{uuid.uuid4().hex[:8]}"
+    tmp.mkdir()
+    names, leaves, _ = _flatten_with_names(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {},
+                "time": time.time()}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"leaf_{i}.npy", arr)
+        manifest["leaves"].append(
+            {"i": i, "name": name, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    final = base / f"step_{step}"
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)        # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    base = pathlib.Path(directory)
+    if not base.exists():
+        return None
+    steps = []
+    for p in base.glob("step_*"):
+        if p.name.endswith("}") or ".tmp-" in p.name:
+            continue
+        if (p / "manifest.json").exists():
+            try:
+                steps.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore_pytree(directory: str, step: int, like: PyTree,
+                   shardings: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of `like`; if `shardings` is given the
+    leaves are placed with those shardings (resharding restore)."""
+    path = pathlib.Path(directory) / f"step_{step}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    names, like_leaves, treedef = _flatten_with_names(like)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    out: List[Any] = []
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(like_leaves))
+    for name, ref, sh in zip(names, like_leaves, shard_leaves):
+        entry = by_name.get(name)
+        if entry is None:
+            raise KeyError(f"checkpoint {path} missing leaf {name}")
+        arr = np.load(path / f"leaf_{entry['i']}.npy")
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{arr.shape} vs {ref.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Keeps the last `keep` checkpoints; optional async writes."""
+
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None
+             ) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)),
+                                 tree)
+
+        def _write():
+            try:
+                save_pytree(str(self.directory), step, host_tree, extra)
+                self._gc()
+            except BaseException as e:     # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+            self.wait()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.directory.glob("step_*")
+            if ".tmp-" not in p.name and (p / "manifest.json").exists())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s}", ignore_errors=True)
+
+    def latest(self) -> Optional[int]:
+        self.wait()
+        return latest_step(str(self.directory))
+
+    def restore(self, step: int, like: PyTree,
+                shardings: Optional[PyTree] = None) -> PyTree:
+        self.wait()
+        return restore_pytree(str(self.directory), step, like, shardings)

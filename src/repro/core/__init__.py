@@ -1,0 +1,31 @@
+"""numaPTE core: the paper's page-table management mechanism.
+
+Two cooperating implementations live here:
+
+  * an exact protocol simulator (``NumaSim``) reproducing the paper's OS
+    mechanism — lazy/partial page-table replication, owner-based coherence,
+    sharer-filtered TLB shootdowns, degree-d PTE prefetch — used by every
+    paper figure/table benchmark and by the hypothesis invariant tests;
+  * the device-resident analogue for TPU pods lives in ``repro.pagedpt``
+    (block tables with per-pod replicas and sharer masks) and is consumed by
+    the serving runtime and the Pallas paged-attention kernel.
+"""
+from .costmodel import CostModel
+from .malloc import MallocModel, gamma_sizes_pages
+from .pagetable import (PERM_R, PERM_RW, PERM_W, PERM_X, PTES_PER_TABLE,
+                        LeafTable, PageTableStore, Policy, VMA, leaf_id,
+                        leaf_index)
+from .sim import Counters, NumaSim, SegfaultError, Thread
+from .tlb import TLB
+from .topology import (PAPER_4SOCKET, PAPER_8SOCKET, TPU_2POD, NumaTopology,
+                       socket_pair)
+from .workloads import APPS, AppSpec, build_app, run_app, run_exec_phase
+
+__all__ = [
+    "APPS", "AppSpec", "CostModel", "Counters", "LeafTable", "MallocModel",
+    "NumaSim", "NumaTopology", "PAPER_4SOCKET", "PAPER_8SOCKET",
+    "PERM_R", "PERM_RW", "PERM_W", "PERM_X", "PTES_PER_TABLE",
+    "PageTableStore", "Policy", "SegfaultError", "TLB", "TPU_2POD", "Thread",
+    "VMA", "build_app", "gamma_sizes_pages", "leaf_id", "leaf_index",
+    "run_app", "run_exec_phase", "socket_pair",
+]

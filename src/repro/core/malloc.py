@@ -1,0 +1,115 @@
+"""User-level allocator models on top of the simulator's mmap/munmap.
+
+The paper's malloc case study (Figs 11/12) compares three allocators whose
+relevant difference is *how often they issue mmap/munmap* (i.e., how much
+page-table mutation and TLB-shootdown traffic they generate):
+
+  * ``mmap``     — every allocation is mmap'd, every free munmap'd.
+  * ``glibc``    — arena allocator; allocations >= 128KB go to mmap, smaller
+    ones are served from an arena that trims back to the OS only when the
+    free top exceeds a trim threshold.
+  * ``tcmalloc`` — thread-caching allocator; spans are cached per thread and
+    returned to the OS rarely (we model a large span cache, so steady-state
+    alloc/free cycles touch page-tables only on cache misses).
+
+Sizes follow the paper: Gamma-distributed with mean ~3.3MB.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .pagetable import PAGE_BYTES
+from .sim import NumaSim
+
+MMAP_THRESHOLD_PAGES = 32          # 128KB / 4KB: glibc's mmap threshold
+GLIBC_TRIM_PAGES = 32              # trim threshold (M_TRIM_THRESHOLD=128KB)
+TCMALLOC_CACHE_PAGES = 1 << 18     # 1GB span cache per thread
+
+
+def gamma_sizes_pages(rng: np.random.Generator, n: int,
+                      mean_bytes: float = 3.3e6, shape: float = 2.0) -> np.ndarray:
+    """Allocation sizes (in pages) ~ Gamma with the paper's ~3.3MB mean."""
+    scale = mean_bytes / shape
+    sizes = rng.gamma(shape, scale, size=n)
+    return np.maximum(1, (sizes / PAGE_BYTES).astype(np.int64))
+
+
+@dataclasses.dataclass
+class _Span:
+    start_vpn: int
+    n_pages: int
+
+
+class MallocModel:
+    """One allocator instance bound to one simulator thread."""
+
+    def __init__(self, sim: NumaSim, tid: int, flavor: str = "glibc"):
+        if flavor not in ("mmap", "glibc", "tcmalloc"):
+            raise ValueError(flavor)
+        self.sim = sim
+        self.tid = tid
+        self.flavor = flavor
+        self._free_spans: List[_Span] = []     # per-thread cache / arena top
+        self._cached_pages = 0
+
+    # -- public API -----------------------------------------------------------
+    def alloc(self, n_pages: int, touch: bool = True) -> _Span:
+        span = self._take_cached(n_pages)
+        if span is None:
+            vma = self.sim.mmap(self.tid, int(n_pages))
+            span = _Span(vma.start_vpn, int(n_pages))
+        if touch:
+            # first-touch the allocation (glibc memset-on-use analogue):
+            # touch one page per 16 to model sparse initialization quickly.
+            step = 16 if n_pages > 64 else 1
+            for vpn in range(span.start_vpn, span.start_vpn + span.n_pages, step):
+                self.sim.touch(self.tid, vpn, write=True)
+        return span
+
+    def free(self, span: _Span) -> None:
+        if self.flavor == "mmap":
+            self.sim.munmap(self.tid, span.start_vpn, span.n_pages)
+            return
+        if self.flavor == "glibc":
+            if span.n_pages >= MMAP_THRESHOLD_PAGES:
+                self.sim.munmap(self.tid, span.start_vpn, span.n_pages)
+            else:
+                self._cache(span)
+                self._trim(GLIBC_TRIM_PAGES)
+            return
+        # tcmalloc: cache aggressively, release only beyond the huge cap
+        self._cache(span)
+        self._trim(TCMALLOC_CACHE_PAGES)
+
+    # -- internals --------------------------------------------------------------
+    def _cache(self, span: _Span) -> None:
+        self._free_spans.append(span)
+        self._cached_pages += span.n_pages
+
+    def _take_cached(self, n_pages: int) -> Optional[_Span]:
+        if self.flavor == "mmap":
+            return None
+        best = None
+        for i, s in enumerate(self._free_spans):
+            if s.n_pages >= n_pages and (best is None or s.n_pages < self._free_spans[best].n_pages):
+                best = i
+        if best is None:
+            return None
+        s = self._free_spans.pop(best)
+        self._cached_pages -= s.n_pages
+        if s.n_pages > n_pages:
+            # split; remainder stays cached
+            rest = _Span(s.start_vpn + n_pages, s.n_pages - n_pages)
+            self._free_spans.append(rest)
+            self._cached_pages += rest.n_pages
+        return _Span(s.start_vpn, n_pages)
+
+    def _trim(self, threshold_pages: int) -> None:
+        while self._cached_pages > threshold_pages and self._free_spans:
+            s = self._free_spans.pop()
+            self._cached_pages -= s.n_pages
+            self.sim.munmap(self.tid, s.start_vpn, s.n_pages)

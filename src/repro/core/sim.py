@@ -1,0 +1,559 @@
+"""numaPTE protocol simulator: the paper's mechanism, exactly.
+
+One `NumaSim` instance models one machine running one process (the paper's
+benchmarks are all single-process).  It implements, switchable per run:
+
+  * ``Policy.LINUX``   — no replication, first-touch page-table placement,
+    process-wide TLB shootdowns (baseline Linux v4.17 semantics).
+  * ``Policy.MITOSIS`` — eager full replication on every node, coherence
+    writes to every replica on every PTE change, process-wide shootdowns.
+  * ``Policy.NUMAPTE`` — lazy, partial, on-demand replication with the
+    owner invariant (I1), per-table sharer masks, degree-d prefetch, and
+    (optionally) sharer-filtered TLB shootdowns (I2).
+
+Every operation updates exact event counters and charges modeled nanoseconds
+(see ``costmodel.CostModel``) to the calling thread; IPI receive cost is
+charged to the interrupted target threads, which is what the webserver /
+memcached throughput benchmarks measure.
+
+Invariants maintained (property-tested in tests/test_core_invariants.py):
+  I1: a valid PTE for a page exists somewhere  =>  the VMA owner's (NUMAPTE)
+      or canonical (LINUX/MITOSIS) copy holds it.
+  I2: CPU c on node n holds vpn in its TLB     =>  n is in the sharer mask of
+      leaf_table(vpn) and the local replica holds (or held until the very
+      shootdown that is removing it) that PTE.
+  I3: translations always agree with a flat oracle map.
+  I4: after munmap returns, no TLB in the system holds any unmapped vpn.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .costmodel import CostModel
+from .pagetable import (PERM_RW, PTE, PTES_PER_TABLE, LeafTable,
+                        PageTableStore, Policy, VMA, leaf_base_vpn, leaf_id,
+                        leaf_index)
+from .tlb import DEFAULT_TLB_ENTRIES, TLB
+from .topology import NumaTopology
+
+IPI_RECEIVE_NS = 700.0  # cost charged to each interrupted target thread
+
+
+@dataclasses.dataclass
+class Counters:
+    tlb_hits: int = 0
+    tlb_misses: int = 0
+    walks_local: int = 0
+    walks_remote: int = 0
+    faults: int = 0
+    first_touches: int = 0
+    pte_copies: int = 0          # PTEs copied from owner on demand
+    pte_prefetched: int = 0      # additional PTEs brought in by prefetch
+    replica_writes_local: int = 0
+    replica_writes_remote: int = 0
+    shootdown_rounds: int = 0
+    ipis_local: int = 0
+    ipis_remote: int = 0
+    ipis_filtered: int = 0       # IPIs numaPTE proved unnecessary (saved)
+    pt_pages_alloc: int = 0
+    pt_pages_freed: int = 0
+    data_pages_alloc: int = 0
+    data_pages_freed: int = 0
+    remote_data_accesses: int = 0
+    local_data_accesses: int = 0
+
+    def snapshot(self) -> "Counters":
+        return dataclasses.replace(self)
+
+    def diff(self, earlier: "Counters") -> "Counters":
+        return Counters(**{f.name: getattr(self, f.name) - getattr(earlier, f.name)
+                           for f in dataclasses.fields(Counters)})
+
+
+@dataclasses.dataclass
+class Thread:
+    tid: int
+    cpu: int
+    time_ns: float = 0.0         # modeled time consumed by this thread
+    ipis_received: int = 0
+
+
+class SegfaultError(Exception):
+    pass
+
+
+class NumaSim:
+    def __init__(self,
+                 topology: NumaTopology,
+                 policy: Policy = Policy.NUMAPTE,
+                 *,
+                 prefetch_degree: int = 0,
+                 tlb_filter: bool = True,
+                 cost: Optional[CostModel] = None,
+                 tlb_entries: int = DEFAULT_TLB_ENTRIES,
+                 interference_nodes: Sequence[int] = ()):
+        if policy is not Policy.NUMAPTE:
+            tlb_filter = False  # the optimization needs sharer info
+        self.topo = topology
+        self.policy = policy
+        self.prefetch_degree = prefetch_degree
+        self.tlb_filter = tlb_filter
+        self.cost = cost or CostModel.paper_default()
+        self.store = PageTableStore(topology.n_nodes)
+        self.tlbs: Dict[int, TLB] = {}
+        self.tlb_entries = tlb_entries
+        self.threads: Dict[int, Thread] = {}
+        self.vmas: List[VMA] = []
+        self.counters = Counters()
+        self._next_tid = itertools.count()
+        self._next_vma = itertools.count()
+        self._next_frame = itertools.count()
+        self._next_vpn = 1 << 20     # start allocations at 4GB
+        self._oracle: Dict[int, Tuple[int, int]] = {}  # vpn -> (frame, perms)
+        self._frame_nodes: Dict[int, int] = {}         # frame -> data node
+        self._cpu_threads: Dict[int, List[Thread]] = {}
+        self._interference = frozenset(interference_nodes)
+
+    # ------------------------------------------------------------------ utils
+    def spawn_thread(self, cpu: int) -> int:
+        self.topo.validate_cpu(cpu)
+        tid = next(self._next_tid)
+        thr = Thread(tid=tid, cpu=cpu)
+        self.threads[tid] = thr
+        self.tlbs.setdefault(cpu, TLB(self.tlb_entries))
+        self._cpu_threads.setdefault(cpu, []).append(thr)
+        return tid
+
+    def thread_node(self, tid: int) -> int:
+        return self.topo.node_of_cpu(self.threads[tid].cpu)
+
+    def _charge(self, tid: int, ns: float) -> None:
+        self.threads[tid].time_ns += ns
+
+    def _interfered(self, a: int, b: int) -> bool:
+        """Cross-socket traffic between a,b competes with interference apps."""
+        return a != b and (a in self._interference or b in self._interference)
+
+    def find_vma(self, vpn: int) -> Optional[VMA]:
+        for vma in self.vmas:
+            if vpn in vma:
+                return vma
+        return None
+
+    # ----------------------------------------------------------------- mmap
+    def mmap(self, tid: int, n_pages: int, *, perms: int = PERM_RW,
+             owner_node: Optional[int] = None, populate: bool = False,
+             at_vpn: Optional[int] = None) -> VMA:
+        c = self.cost
+        node = owner_node if owner_node is not None else self.thread_node(tid)
+        if at_vpn is None:
+            # Distinct VMAs live in distinct leaf tables: mmap'd areas get
+            # their own PT pages in practice (per-thread arenas, guard gaps,
+            # top-down mmap layout); co-locating unrelated VMAs in one leaf
+            # table would charge numaPTE for false table-level sharing.
+            start = self._next_vpn
+            self._next_vpn = (-(-(start + n_pages) // PTES_PER_TABLE)
+                              * PTES_PER_TABLE)
+        else:
+            start = at_vpn
+        vma = VMA(next(self._next_vma), start, start + n_pages, node, perms)
+        self.vmas.append(vma)
+        self._charge(tid, c.syscall_fixed_ns + c.mmap_extra_ns)
+        if populate:
+            for vpn in range(vma.start_vpn, vma.end_vpn):
+                self.touch(tid, vpn)
+        return vma
+
+    # ---------------------------------------------------------------- access
+    def touch(self, tid: int, vpn: int, write: bool = False) -> int:
+        """One memory access by thread `tid` to `vpn`. Returns the frame id."""
+        thr = self.threads[tid]
+        node = self.topo.node_of_cpu(thr.cpu)
+        tlb = self.tlbs[thr.cpu]
+        hit = tlb.lookup(vpn)
+        ctr, c = self.counters, self.cost
+        if hit is not None:
+            ctr.tlb_hits += 1
+            frame = hit[0]
+            self._count_data(node, vpn, tid)
+            return frame
+        ctr.tlb_misses += 1
+        tid_table = leaf_id(vpn)
+        table = self.store.get(tid_table)
+        # -- hardware walk against the local (or canonical) copy ------------
+        if table is not None:
+            walk_node, pte = self._walk(table, node, leaf_index(vpn))
+            if pte is not None:
+                local = walk_node == node
+                ctr.walks_local += local
+                ctr.walks_remote += not local
+                self._charge(tid, c.walk_cost_ns(
+                    local=local,
+                    interference=self._interfered(walk_node, node)))
+                tlb.fill(vpn, pte.frame, pte.perms)
+                self._count_data(node, vpn, tid)
+                return pte.frame
+            # charge the failed walk too (reached the leaf, found not-present)
+            local = walk_node == node if walk_node is not None else True
+            self._charge(tid, c.walk_cost_ns(local=local))
+        # -- page fault -------------------------------------------------------
+        frame = self._page_fault(tid, node, vpn, write)
+        pte = self._lookup_for_fill(tid_table, node, vpn)
+        assert pte is not None
+        tlb.fill(vpn, pte.frame, pte.perms)
+        self._count_data(node, vpn, tid)
+        return frame
+
+    def access_many(self, tid: int, vpns: Iterable[int],
+                    write: bool = False) -> None:
+        touch = self.touch
+        for vpn in vpns:
+            touch(tid, vpn, write)
+
+    def _count_data(self, node: int, vpn: int, tid: int) -> None:
+        entry = self._oracle.get(vpn)
+        if entry is None:
+            return
+        # oracle stores (frame, perms); data node tracked separately
+        data_node = self._frame_nodes.get(entry[0], node)
+        if data_node == node:
+            self.counters.local_data_accesses += 1
+            self._charge(tid, self.cost.local_mem_ns)
+        else:
+            self.counters.remote_data_accesses += 1
+            self._charge(tid, self.cost.walk_cost_ns(
+                local=False, interference=self._interfered(data_node, node)))
+
+    def _walk(self, table: LeafTable, node: int,
+              idx: int) -> Tuple[Optional[int], Optional[PTE]]:
+        """Return (node_walked, pte) per policy for a hardware walk."""
+        if self.policy is Policy.LINUX:
+            # single canonical copy; hardware walks it wherever it is
+            canon = table.owner
+            return canon, table.lookup(canon, idx)
+        # MITOSIS / NUMAPTE: hardware only ever walks the local replica
+        if node in table.copies:
+            return node, table.lookup(node, idx)
+        return None, None
+
+    def _lookup_for_fill(self, tid_table: int, node: int,
+                         vpn: int) -> Optional[PTE]:
+        table = self.store.get(tid_table)
+        if table is None:
+            return None
+        if self.policy is Policy.LINUX:
+            return table.lookup(table.owner, leaf_index(vpn))
+        return table.lookup(node, leaf_index(vpn))
+
+    # ------------------------------------------------------------ page fault
+    def _page_fault(self, tid: int, node: int, vpn: int, write: bool) -> int:
+        ctr, c = self.counters, self.cost
+        ctr.faults += 1
+        self._charge(tid, c.fault_fixed_ns)
+        vma = self.find_vma(vpn)
+        if vma is None:
+            raise SegfaultError(f"vpn {vpn} not mapped")
+        tbl_id = leaf_id(vpn)
+        idx = leaf_index(vpn)
+        table = self.store.get(tbl_id)
+
+        if self.policy is Policy.LINUX:
+            if table is None:
+                table = self.store.create(tbl_id, owner=node)  # first touch
+                ctr.pt_pages_alloc += 1
+                self._charge(tid, c.pt_alloc_ns)
+            pte = table.lookup(table.owner, idx)
+            if pte is None:
+                pte = self._alloc_page(tid, node, vma, table, table.owner, idx)
+            return pte.frame
+
+        if self.policy is Policy.MITOSIS:
+            if table is None:
+                table = self.store.create(tbl_id, owner=node)
+                ctr.pt_pages_alloc += 1
+                self._charge(tid, c.pt_alloc_ns)
+                # eager: replicate the table page on every node immediately
+                for n in range(self.topo.n_nodes):
+                    if n not in table.copies:
+                        self.store.install_replica(table, n)
+                        ctr.pt_pages_alloc += 1
+                        self._charge(tid, c.pt_alloc_ns)
+            pte = table.lookup(node, idx)
+            if pte is None:
+                pte = self._alloc_page(tid, node, vma, table, node, idx)
+                # eager coherence: install into every replica
+                for n in table.copies:
+                    if n == node:
+                        continue
+                    table.copies[n][idx] = PTE(pte.frame, pte.frame_node, pte.perms)
+                    ctr.replica_writes_remote += 1
+                    self._charge(tid, c.pte_write_remote_ns)
+            return pte.frame
+
+        # ---- NUMAPTE --------------------------------------------------------
+        owner = vma.owner
+        if table is None:
+            table = self.store.create(tbl_id, owner=owner)
+            ctr.pt_pages_alloc += 1
+            self._charge(tid, c.pt_alloc_ns)
+        if node not in table.copies:
+            self.store.install_replica(table, node)
+            ctr.pt_pages_alloc += 1
+            self._charge(tid, c.pt_alloc_ns)
+        owner_pte = table.lookup(table.owner, idx)
+        if owner_pte is None:
+            # page never touched anywhere: create it (I1: owner gets it too)
+            pte = self._alloc_page(tid, node, vma, table, node, idx)
+            if table.owner != node:
+                table.copies[table.owner][idx] = PTE(pte.frame, pte.frame_node,
+                                                     pte.perms)
+                ctr.replica_writes_remote += 1
+                self._charge(tid, c.pte_write_remote_ns)
+            return pte.frame
+        # owner has it: copy on demand, with degree-d prefetch
+        if node != table.owner:
+            self._charge(tid, c.pte_copy_remote_ns)
+        ctr.pte_copies += 1
+        local = table.copies[node]
+        local[idx] = PTE(owner_pte.frame, owner_pte.frame_node, owner_pte.perms)
+        if self.prefetch_degree > 0 and node != table.owner:
+            self._prefetch(tid, table, node, vma, vpn)
+        return owner_pte.frame
+
+    def _prefetch(self, tid: int, table: LeafTable, node: int, vma: VMA,
+                  vpn: int) -> None:
+        """Copy 2^d neighbouring PTEs, clipped to the table and VMA bounds
+        (Fig 5).  Centered on the requested entry, like a cache-line fill."""
+        c = self.cost
+        want = 1 << self.prefetch_degree
+        base = leaf_base_vpn(table.tid)
+        lo = max(vma.start_vpn, base, vpn - want // 2)
+        hi = min(vma.end_vpn, base + PTES_PER_TABLE, lo + want)
+        lo = max(lo, hi - want)
+        owner_copy = table.copies[table.owner]
+        local = table.copies[node]
+        fetched = 0
+        for v in range(lo, hi):
+            i = leaf_index(v)
+            if v == vpn or i in local:
+                continue
+            src = owner_copy.get(i)
+            if src is not None:
+                local[i] = PTE(src.frame, src.frame_node, src.perms)
+                fetched += 1
+        self.counters.pte_prefetched += fetched
+        # streamed from the same (already open) remote PT page
+        self._charge(tid, fetched * c.pte_copy_stream_ns)
+
+    def _alloc_page(self, tid: int, toucher_node: int, vma: VMA,
+                    table: LeafTable, copy_node: int, idx: int) -> PTE:
+        """First touch of a page: allocate the data frame on the toucher's
+        node (Linux first-touch data policy) and install the PTE."""
+        ctr, c = self.counters, self.cost
+        frame = next(self._next_frame)
+        ctr.first_touches += 1
+        ctr.data_pages_alloc += 1
+        self._charge(tid, c.page_alloc_ns)
+        pte = PTE(frame, toucher_node, vma.perms)
+        table.copies[copy_node][idx] = pte
+        if copy_node == toucher_node:
+            ctr.replica_writes_local += 1
+            self._charge(tid, c.pte_write_local_ns)
+        else:
+            ctr.replica_writes_remote += 1
+            self._charge(tid, c.pte_write_remote_ns)
+        vpn = leaf_base_vpn(table.tid) + idx
+        self._oracle[vpn] = (frame, vma.perms)
+        if not hasattr(self, "_frame_nodes"):
+            self._frame_nodes: Dict[int, int] = {}
+        self._frame_nodes[frame] = toucher_node
+        return pte
+
+    # ------------------------------------------------------------- mutation
+    def mprotect(self, tid: int, start_vpn: int, n_pages: int,
+                 perms: int) -> None:
+        self._charge(tid, self.cost.syscall_fixed_ns)
+        touched_tables = self._update_range(
+            tid, start_vpn, n_pages,
+            lambda pte: dataclasses.replace(pte, perms=perms))
+        for vpn in range(start_vpn, start_vpn + n_pages):
+            if vpn in self._oracle:
+                self._oracle[vpn] = (self._oracle[vpn][0], perms)
+        vma = self.find_vma(start_vpn)
+        if vma is not None and vma.start_vpn == start_vpn and vma.n_pages == n_pages:
+            vma.perms = perms
+        self._shootdown(tid, start_vpn, start_vpn + n_pages, touched_tables)
+
+    def munmap(self, tid: int, start_vpn: int, n_pages: int) -> None:
+        ctr, c = self.counters, self.cost
+        self._charge(tid, c.syscall_fixed_ns)
+        end_vpn = start_vpn + n_pages
+        touched_tables = self._update_range(tid, start_vpn, n_pages, None)
+        # free data pages
+        for vpn in range(start_vpn, end_vpn):
+            entry = self._oracle.pop(vpn, None)
+            if entry is not None:
+                ctr.data_pages_freed += 1
+        # shootdown BEFORE page-table pages are freed (kernel ordering)
+        self._shootdown(tid, start_vpn, end_vpn, touched_tables)
+        # tear down empty leaf tables (and their replicas)
+        for tbl_id in touched_tables:
+            table = self.store.get(tbl_id)
+            if table is not None and table.empty():
+                freed = table.n_copies()
+                ctr.pt_pages_freed += freed
+                self._charge(tid, c.pt_teardown_ns * freed)
+                self.store.drop_table(tbl_id)
+        # shrink VMA list
+        self._carve_vmas(start_vpn, end_vpn)
+
+    def _carve_vmas(self, start: int, end: int) -> None:
+        out: List[VMA] = []
+        for vma in self.vmas:
+            if vma.end_vpn <= start or vma.start_vpn >= end:
+                out.append(vma)
+                continue
+            if vma.start_vpn < start:
+                out.append(dataclasses.replace(vma, end_vpn=start))
+            if vma.end_vpn > end:
+                out.append(dataclasses.replace(vma, start_vpn=end))
+        self.vmas = out
+
+    def _update_range(self, tid: int, start_vpn: int, n_pages: int,
+                      fn) -> List[int]:
+        """Apply fn (None = clear) to every present PTE in range, in the
+        canonical copy and per-policy replicas.  Returns touched table ids."""
+        ctr, c = self.counters, self.cost
+        node = self.thread_node(tid)
+        end_vpn = start_vpn + n_pages
+        touched: List[int] = []
+        t0 = leaf_id(start_vpn)
+        t1 = leaf_id(end_vpn - 1)
+        for tbl_id in range(t0, t1 + 1):
+            table = self.store.get(tbl_id)
+            if table is None:
+                continue
+            touched.append(tbl_id)
+            lo = max(start_vpn, leaf_base_vpn(tbl_id))
+            hi = min(end_vpn, leaf_base_vpn(tbl_id) + PTES_PER_TABLE)
+            targets = self._coherence_targets(table)
+            for copy_node in targets:
+                copy = table.copies.get(copy_node)
+                if copy is None:
+                    continue
+                wrote = 0
+                for vpn in range(lo, hi):
+                    i = leaf_index(vpn)
+                    if i in copy:
+                        if fn is None:
+                            del copy[i]
+                        else:
+                            copy[i] = fn(copy[i])
+                        wrote += 1
+                if wrote:
+                    if copy_node == node:
+                        ctr.replica_writes_local += wrote
+                        self._charge(tid, c.pte_write_local_ns * wrote)
+                    else:
+                        ctr.replica_writes_remote += wrote
+                        self._charge(tid, c.pte_write_remote_ns * wrote)
+        return touched
+
+    def _coherence_targets(self, table: LeafTable) -> List[int]:
+        if self.policy is Policy.LINUX:
+            return [table.owner]
+        if self.policy is Policy.MITOSIS:
+            return list(range(self.topo.n_nodes))
+        return table.sharer_nodes()      # NUMAPTE: sharers only
+
+    # ------------------------------------------------------------ shootdowns
+    def _shootdown(self, tid: int, start_vpn: int, end_vpn: int,
+                   touched_tables: Sequence[int]) -> None:
+        """IPI round for a PTE-range change, with numaPTE's sharer filter."""
+        ctr, c = self.counters, self.cost
+        me = self.threads[tid]
+        my_node = self.topo.node_of_cpu(me.cpu)
+        # cores that currently run a thread of this process (mm_cpumask)
+        running_cpus = {t.cpu for t in self.threads.values()}
+        if self.tlb_filter:
+            allowed_nodes = 0
+            for tbl_id in touched_tables:
+                table = self.store.get(tbl_id)
+                if table is not None:
+                    allowed_nodes |= table.sharers
+            targets = {cpu for cpu in running_cpus
+                       if (allowed_nodes >> self.topo.node_of_cpu(cpu)) & 1}
+        else:
+            targets = set(running_cpus)
+        targets.discard(me.cpu)
+        filtered = len(running_cpus - {me.cpu}) - len(targets)
+        ctr.ipis_filtered += filtered
+        n_local = sum(1 for cpu in targets
+                      if self.topo.node_of_cpu(cpu) == my_node)
+        n_remote = len(targets) - n_local
+        ctr.shootdown_rounds += 1
+        ctr.ipis_local += n_local
+        ctr.ipis_remote += n_remote
+        self._charge(tid, c.shootdown_cost_ns(n_local, n_remote)
+                     + c.tlb_invalidate_self_ns)
+        # apply invalidations on targets (and self)
+        self.tlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
+        for cpu in targets:
+            self.tlbs[cpu].invalidate_range(start_vpn, end_vpn)
+            for t in self._cpu_threads.get(cpu, ()):
+                t.time_ns += IPI_RECEIVE_NS
+                t.ipis_received += 1
+
+    # ------------------------------------------------------------ migration
+    def migrate_thread(self, tid: int, new_cpu: int) -> None:
+        self.topo.validate_cpu(new_cpu)
+        thr = self.threads[tid]
+        old_cpu = thr.cpu
+        thr.cpu = new_cpu
+        self._cpu_threads[old_cpu].remove(thr)
+        self._cpu_threads.setdefault(new_cpu, []).append(thr)
+        self.tlbs.setdefault(new_cpu, TLB(self.tlb_entries))
+        # context switch on the old cpu flushes its (non-PCID) TLB state;
+        # conservatively drop this process's entries there.
+        if all(t.cpu != old_cpu for t in self.threads.values()):
+            self.tlbs[old_cpu].flush()
+
+    # ------------------------------------------------------------ reporting
+    def total_time_ns(self) -> float:
+        return sum(t.time_ns for t in self.threads.values())
+
+    def thread_time_ns(self, tid: int) -> float:
+        return self.threads[tid].time_ns
+
+    def pt_footprint_bytes(self) -> int:
+        return self.store.footprint_bytes()
+
+    # ----------------------------------------------------------- validation
+    def check_invariants(self) -> None:
+        """Raise AssertionError if any paper invariant is violated."""
+        for table in self.store.tables.values():
+            owner_copy = table.copies.get(table.owner, {})
+            for node, copy in table.copies.items():
+                assert table.is_sharer(node), \
+                    f"node {node} holds copy of T{table.tid} but not a sharer"
+                if self.policy is Policy.NUMAPTE and node != table.owner:
+                    for i, pte in copy.items():
+                        assert i in owner_copy, \
+                            f"I1 violated: T{table.tid}[{i}] on {node} not on owner"
+                        o = owner_copy[i]
+                        assert (pte.frame, pte.perms) == (o.frame, o.perms), \
+                            f"replica divergence at T{table.tid}[{i}]"
+        for cpu, tlb in self.tlbs.items():
+            node = self.topo.node_of_cpu(cpu)
+            for vpn in tlb.vpns():
+                table = self.store.get(leaf_id(vpn))
+                assert table is not None, f"I4: TLB holds unmapped vpn {vpn}"
+                if self.policy is not Policy.LINUX:
+                    assert table.is_sharer(node), \
+                        f"I2 violated: cpu {cpu} caches vpn {vpn}, node {node}" \
+                        f" not in sharers of T{table.tid}"
+                frame, perms = tlb.lookup(vpn)
+                assert vpn in self._oracle, f"I4: stale TLB for freed vpn {vpn}"
+                assert self._oracle[vpn][0] == frame, f"I3: wrong frame {vpn}"

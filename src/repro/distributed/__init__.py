@@ -1,0 +1,7 @@
+"""Distribution substrate: logical-axis sharding rules, collective helpers,
+and gradient compression for the pod axis."""
+from .sharding import (ShardingRules, constrain, current_rules, logical_spec,
+                       param_pspec, use_rules)
+
+__all__ = ["ShardingRules", "constrain", "current_rules", "logical_spec",
+           "param_pspec", "use_rules"]

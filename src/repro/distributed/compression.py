@@ -1,0 +1,69 @@
+"""Int8 error-feedback gradient compression for the pod axis.
+
+Cross-pod (DCI) links are the scarce bandwidth at 1000+ node scale, so the
+pod-axis gradient all-reduce runs on int8-quantized tensors with per-tensor
+scales and an error-feedback buffer (the quantization residual is carried
+into the next step, so compression error does not bias the gradient —
+Karimireddy et al.-style EF).  In-pod (ICI) reduction stays full precision.
+
+Usage inside a step:
+    grads, ef = compress_allreduce_pods(grads, ef, axis="pod")
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(grads: PyTree) -> PyTree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_allreduce_pods(grads: PyTree, ef: Optional[PyTree],
+                            axis: str = "pod") -> Tuple[PyTree, PyTree]:
+    """All-reduce each gradient leaf over `axis` in int8 with error
+    feedback.  Must run inside shard_map (or any context where `axis` is a
+    bound mesh axis).  Returns (averaged grads f32, new error buffers)."""
+    if ef is None:
+        ef = ef_init(grads)
+    n = lax.psum(1, axis)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        sent = dequantize_int8(q, scale)
+        new_e = g32 - sent                       # residual carried forward
+        # the WIRE carries int8 payloads + one f32 scale per tensor:
+        # all-gather the quantized tensors and reduce locally (int8 psum
+        # would overflow; gathering keeps the wire at 1 byte/element)
+        q_all = lax.all_gather(q, axis)          # [n_pods, ...] int8
+        s_all = lax.all_gather(scale, axis)      # [n_pods]
+        summed = jnp.tensordot(s_all, q_all.astype(jnp.float32), axes=1)
+        return (summed / n).astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def compression_wire_bytes(grads: PyTree) -> Tuple[int, int]:
+    """(bytes_fp32, bytes_int8) that one pod-axis all-reduce would move."""
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    return total * 4, total * 1 + len(jax.tree.leaves(grads)) * 4

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for blocked causal (optionally windowed) attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: [B,H,S,hd]; k,v: [B,K,S,hd] (GQA).  Returns [B,H,S,hd] f32."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, K, G, S, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg, k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qi[:, None] >= qi[None, :]
+    if window is not None:
+        mask &= (qi[:, None] - qi[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd)

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for paged decode attention.
+
+On CPU (this container) the Pallas kernel runs in interpret mode; on TPU
+set ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile the
+Mosaic kernel.  ``backend='ref'`` selects the jnp oracle — used by the
+dry-run lowering so XLA sees a pure-HLO path with identical semantics.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from .kernel import paged_attention_kernel
+from .ref import paged_attention_ref
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def paged_attention(q: jax.Array, k_slabs: jax.Array, v_slabs: jax.Array,
+                    block_tables: jax.Array, seq_lens: jax.Array, *,
+                    window: Optional[int] = None,
+                    backend: str = "pallas") -> jax.Array:
+    if backend == "ref":
+        return paged_attention_ref(q, k_slabs, v_slabs, block_tables,
+                                   seq_lens, window=window)
+    return paged_attention_kernel(q, k_slabs, v_slabs, block_tables,
+                                  seq_lens, window=window,
+                                  interpret=_interpret_default())

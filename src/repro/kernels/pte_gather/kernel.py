@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused block-table walk + degree-d PTE prefetch.
+
+The paper's page-fault fast path as one TPU kernel: translate a batch of
+logical block ids against the local table replica and, for each, stream the
+2^d-entry neighbourhood out of the covering table page (Fig 5 semantics —
+never crossing the page boundary).  The table page index is a
+scalar-prefetch operand so the right 2KB table row is DMA'd to VMEM before
+the vector work, exactly one row per miss — the TPU shape of "the walk is
+always local, the prefetch is free because the PT page is already open".
+
+Grid: (M/bm,) over miss batches; table rows blocked [bm_rows, epb].  For
+simplicity each grid step handles one miss (bm=1): one row of the table in
+VMEM (epb*4B = 2KB) + the tiny output block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PERM_SHIFT = 28
+FRAME_MASK = (1 << PERM_SHIFT) - 1
+
+
+def _kernel(tids_ref, logical_ref,          # scalar prefetch
+            row_ref,                        # [1, epb] the covering table page
+            frames_ref, present_ref, window_ref,
+            *, epb: int, width: int, n_tables: int):
+    m = pl.program_id(0)
+    logical = logical_ref[m]
+    idx = logical % epb
+    row = row_ref[0]                                        # [epb]
+    raw = jax.lax.dynamic_index_in_dim(row, jnp.maximum(idx, 0), keepdims=False)
+    ok = (logical >= 0) & (logical < n_tables * epb) & (raw >= 0)
+    frame = jnp.where(raw < 0, -1, raw & FRAME_MASK)
+    frames_ref[0] = jnp.where(ok, frame, -1)
+    present_ref[0] = ok.astype(jnp.int32)
+    start = jnp.clip(idx - width // 2, 0, epb - width)
+    win = jax.lax.dynamic_slice_in_dim(row, start, width)
+    window_ref[0] = jnp.where(logical >= 0, win, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("prefetch_degree", "interpret"))
+def pte_gather_kernel(entries: jax.Array, logical: jax.Array,
+                      prefetch_degree: int, *, interpret: bool = True
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """entries: [T, epb] packed PTEs; logical: [M].  Returns
+    (frames [M] i32, present [M] bool, window [M, 2^d] i32)."""
+    T, epb = entries.shape
+    M = logical.shape[0]
+    W = 1 << prefetch_degree
+    assert W <= epb, (W, epb)
+    tids = jnp.clip(jnp.where(logical >= 0, logical // epb, 0), 0, T - 1)
+    kernel = functools.partial(_kernel, epb=epb, width=W, n_tables=T)
+    frames, present, window = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(M,),
+            in_specs=[
+                pl.BlockSpec((1, epb), lambda m, tids, logical: (tids[m], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1,), lambda m, tids, logical: (m,)),
+                pl.BlockSpec((1,), lambda m, tids, logical: (m,)),
+                pl.BlockSpec((1, W), lambda m, tids, logical: (m, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((M,), jnp.int32),
+            jax.ShapeDtypeStruct((M,), jnp.int32),
+            jax.ShapeDtypeStruct((M, W), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tids, logical, entries)
+    return frames, present.astype(jnp.bool_), window

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the fused walk+prefetch kernel."""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+
+from .kernel import pte_gather_kernel
+from .ref import pte_gather_ref
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def pte_gather(entries: jax.Array, logical: jax.Array,
+               prefetch_degree: int, *, backend: str = "pallas"
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    if backend == "ref":
+        return pte_gather_ref(entries, logical, prefetch_degree)
+    return pte_gather_kernel(entries, logical, prefetch_degree,
+                             interpret=_interpret_default())

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused block-table walk + degree-d prefetch.
+
+Given a local block-table replica and a batch of logical block ids, return
+for each id: the translated physical frame (-1 on miss / invalid), a present
+flag, and the 2^d-entry prefetch window around the entry (the paper's Fig 5
+semantics: the window is clipped to the covering table page).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...pagedpt.blocktable import FRAME_MASK, unpack_entry
+
+
+def pte_gather_ref(entries: jax.Array, logical: jax.Array,
+                   prefetch_degree: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """entries: [T, epb] int32 packed PTEs; logical: [M] ids (-1 = none).
+
+    Returns (frames [M], present [M] bool, window [M, 2^d] raw entries)."""
+    T, epb = entries.shape
+    W = 1 << prefetch_degree
+    tid = jnp.clip(logical // epb, 0, T - 1)
+    idx = logical % epb
+    raw = entries[tid, idx]
+    ok = (logical >= 0) & (logical < T * epb) & (raw >= 0)
+    frame, _ = unpack_entry(raw)
+    frames = jnp.where(ok, frame, -1)
+    start = jnp.clip(idx - W // 2, 0, epb - W)
+    cols = start[:, None] + jnp.arange(W)[None, :]
+    window = entries[tid[:, None], cols]
+    window = jnp.where((logical >= 0)[:, None], window, -1)
+    return frames, ok, window

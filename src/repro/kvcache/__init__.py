@@ -1,0 +1,3 @@
+from .manager import PagedKVManager, ServingStats
+
+__all__ = ["PagedKVManager", "ServingStats"]

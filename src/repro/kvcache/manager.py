@@ -1,0 +1,104 @@
+"""Paged KV-cache manager: sequences -> logical blocks -> physical frames.
+
+The serving-side owner of the numaPTE substrate.  Each active sequence holds
+a list of *logical* blocks (stable ids, the VMA analogue); the
+``HostBlockManager`` maps them to physical KV frames and maintains the
+per-pod replicas, sharer masks and invalidation filtering.  Every decode
+step translates the logical tables to physical tables (the page walk; on
+device via ``repro.kernels.pte_gather`` or ``repro.pagedpt.lookup_blocks``)
+and hands the physical tables to the paged-attention kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..pagedpt import BlockTableSpec, HostBlockManager
+from ..pagedpt.blocktable import CoherenceMode
+
+
+@dataclasses.dataclass
+class ServingStats:
+    steps: int = 0
+    tokens: int = 0
+    seqs_started: int = 0
+    seqs_finished: int = 0
+
+
+class PagedKVManager:
+    """Host-side manager for a fixed-capacity paged KV pool."""
+
+    def __init__(self, *, n_frames: int, block_tokens: int = 16,
+                 max_blocks_per_seq: int, n_pods: int = 1,
+                 mode: CoherenceMode = CoherenceMode.NUMAPTE,
+                 entries_per_table: int = 512, prefetch_degree: int = 3):
+        # table pages are metadata (one per active sequence at minimum, each
+        # sequence opens its own VMA/table): keep a healthy pool
+        n_tables = max(64, -(-n_frames // entries_per_table))
+        self.spec = BlockTableSpec(
+            n_pods=n_pods, n_tables=n_tables,
+            entries_per_table=entries_per_table,
+            prefetch_degree=prefetch_degree)
+        self.host = HostBlockManager(self.spec, mode,
+                                     block_tokens=block_tokens)
+        self.block_tokens = block_tokens
+        self.max_blocks = max_blocks_per_seq
+        self.n_frames = n_frames
+        self._seq_pod: Dict[int, int] = {}
+        self.stats = ServingStats()
+
+    # ------------------------------------------------------------- lifecycle
+    def start_sequence(self, seq_id: int, prompt_len: int, pod: int = 0
+                       ) -> None:
+        n_blocks = max(1, -(-prompt_len // self.block_tokens))
+        self.host.alloc_sequence(seq_id, n_blocks, pod)
+        self._seq_pod[seq_id] = pod
+        self.stats.seqs_started += 1
+
+    def maybe_extend(self, seq_id: int, new_len: int) -> None:
+        have = len(self.host.seqs[seq_id].logical_blocks)
+        need = -(-new_len // self.block_tokens)
+        if need > have:
+            self.host.extend_sequence(seq_id, need - have)
+
+    def finish_sequence(self, seq_id: int) -> None:
+        self.host.free_sequence(seq_id)
+        self._seq_pod.pop(seq_id, None)
+        self.stats.seqs_finished += 1
+
+    # ------------------------------------------------------------ tables
+    def logical_tables(self, seq_ids: List[int]) -> np.ndarray:
+        """[len(seq_ids), max_blocks] logical block ids, -1 padded."""
+        out = np.full((len(seq_ids), self.max_blocks), -1, np.int32)
+        for r, sid in enumerate(seq_ids):
+            blocks = self.host.seqs[sid].logical_blocks
+            out[r, :len(blocks)] = blocks[:self.max_blocks]
+        return out
+
+    def physical_tables(self, seq_ids: List[int], pod: int = 0,
+                        record: bool = True) -> np.ndarray:
+        """Translate to physical frame ids via the pod's replica (the page
+        walk).  Misses trigger the numaPTE on-demand fetch protocol."""
+        logical = self.logical_tables(seq_ids)
+        epb = self.spec.entries_per_table
+        out = np.full_like(logical, -1)
+        for r in range(logical.shape[0]):
+            for c in range(logical.shape[1]):
+                lb = int(logical[r, c])
+                if lb < 0:
+                    continue
+                if record:
+                    self.host.record_access(pod, lb)
+                tid, slot = divmod(lb, epb)
+                raw = int(self.host.canonical[tid, slot])
+                out[r, c] = raw & ((1 << 28) - 1) if raw >= 0 else -1
+        return out
+
+    # ------------------------------------------------------------ accounting
+    def utilization(self) -> float:
+        return 1.0 - len(self.host.free_frames) / self.n_frames
+
+    def footprint_pages(self) -> int:
+        return self.host.footprint_table_pages()

@@ -1,0 +1,241 @@
+"""Roofline-term extraction from AOT-compiled artifacts.
+
+Three terms per (arch x shape x mesh), per the brief:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_wire_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+not in cost_analysis, so we parse the optimized HLO: for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute we take the
+result shapes and convert to wire bytes with the standard ring formulas
+(xN for all-reduce, (n-1)/n factors folded in).  Hardware constants are the
+TPU v5e datasheet values given in the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# --- hardware constants (TPU v5e, from the brief) ---------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota format
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]
+    wire_bytes: Dict[str, float]
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    result_bytes: Dict[str, int] = {}
+    wire: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rest = m.group(1)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rest):
+                op = c
+                break
+        if op is None or f"{op}-done(" in rest:
+            continue        # -done carries no new bytes (counted at -start)
+        shape_part = rest.split(op)[0]
+        rbytes = _shape_bytes(shape_part)
+        n = _group_size(line)
+        if op == "all-gather":
+            w = rbytes * (n - 1) / max(n, 1)
+        elif op == "all-reduce":
+            w = 2 * rbytes * (n - 1) / max(n, 1)
+        elif op == "reduce-scatter":
+            w = rbytes * (n - 1)
+        elif op == "all-to-all":
+            w = rbytes * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            w = rbytes
+        counts[op] = counts.get(op, 0) + 1
+        result_bytes[op] = result_bytes.get(op, 0) + rbytes
+        wire[op] = wire.get(op, 0.0) + w
+    return CollectiveStats(counts, result_bytes, wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    per_device_peak_bytes: Optional[float]
+    collectives: Dict[str, float]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction at the bound: how close the step would
+        run to the compute roofline if it achieved the bound time."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_s if self.bound_s > 0 else 0.0
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, bound_s=self.bound_s,
+                 roofline_fraction=self.roofline_fraction,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def model_flops_train(cfg, shape) -> float:
+    """6*N_active*D for a training step (fwd+bwd)."""
+    from ..models import active_param_count
+    tokens = shape.global_batch * shape.seq_len
+    return 6.0 * active_param_count(cfg) * tokens
+
+
+def model_flops_decode(cfg, shape) -> float:
+    """2*N_active per token + attention KV reads (2*T*d per kv-layer pair)."""
+    from ..models import active_param_count
+    flops = 2.0 * active_param_count(cfg) * shape.global_batch
+    # attention over the cache: 2 * 2 * T * n_kv_heads*hd per global layer
+    hd = cfg.resolved_head_dim
+    n_global = _n_paged_layers(cfg)
+    flops += (4.0 * shape.seq_len * cfg.n_heads * hd
+              * n_global * shape.global_batch)
+    return flops
+
+
+def model_flops_prefill(cfg, shape) -> float:
+    from ..models import active_param_count
+    tokens = shape.global_batch * shape.seq_len
+    flops = 2.0 * active_param_count(cfg) * tokens
+    hd = cfg.resolved_head_dim
+    for g in _groups(cfg):
+        if g.kind not in ("attn", "enc_attn", "dec_attn"):
+            continue
+        span = min(g.window or shape.seq_len, shape.seq_len)
+        flops += (2.0 * 2.0 * shape.global_batch * shape.seq_len * span
+                  * cfg.n_heads * hd * g.n_layers) / 2.0
+    return flops
+
+
+def _groups(cfg):
+    from ..models import layer_groups
+    return layer_groups(cfg)
+
+
+def _n_paged_layers(cfg) -> int:
+    return sum(g.n_layers for g in _groups(cfg)
+               if g.kind in ("attn", "dec_attn") and g.window is None)
+
+
+def model_flops(cfg, shape) -> float:
+    return {"train": model_flops_train,
+            "prefill": model_flops_prefill,
+            "decode": model_flops_decode}[shape.step](cfg, shape)
+
+
+def roofline_from_compiled(arch: str, shape, mesh_name: str, chips: int,
+                           cfg, compiled) -> Roofline:
+    """Derive the three terms from the compiled artifact.
+
+    ``cost_analysis`` counts while-loop (scan) bodies once, so we use the
+    trip-count-aware HLO analyzer for FLOPs/bytes/collectives and keep
+    cost_analysis only as a cross-check (stored alongside).
+    """
+    from .hlo_analysis import analyze
+    hlo = compiled.as_text()
+    totals = analyze(hlo, n_devices=chips)
+    # the SPMD module is per-device: scale to whole-machine totals
+    flops = totals.flops * chips
+    hbytes = totals.bytes_rw * chips
+    coll_wire_per_dev = totals.collective_wire
+    coll = CollectiveStats(
+        counts={k: int(v) for k, v in totals.collective_counts.items()},
+        result_bytes={},
+        wire_bytes={k: v * chips for k, v in coll_wire_per_dev.items()})
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "peak_memory_in_bytes", 0)) or None
+        if peak is None:
+            peak = (getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)) or None
+    except Exception:
+        peak = None
+    # cost_analysis flops on the host backend are per-program (global);
+    # normalize to per-chip.
+    mf = model_flops(cfg, shape)
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = hbytes / (chips * HBM_BW)
+    collective_s = coll.total_wire_bytes / (chips * LINK_BW)
+    return Roofline(arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops, hlo_bytes=hbytes,
+                    collective_bytes=coll.total_wire_bytes, model_flops=mf,
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, per_device_peak_bytes=peak,
+                    collectives=coll.wire_bytes)

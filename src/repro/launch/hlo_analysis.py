@@ -1,0 +1,437 @@
+"""Trip-count-aware HLO analyzer: FLOPs, HBM bytes, collective bytes.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+undercounts a scanned 40-layer model by ~40x.  Since every model here scans
+over layers, we analyze the optimized HLO text directly and build an
+explicit cost model over the call graph:
+
+  * **FLOPs** — dots contribute 2 * prod(result) * prod(contracted dims),
+    wherever they live (fusion bodies included), multiplied by the
+    enclosing while-loop trip counts.
+  * **HBM bytes** — post-fusion, each top-level instruction of a dataflow
+    computation (entry / while body / branch) is one kernel launch: result
+    is written once, operands are read once per consumer.  Fusion bodies
+    count only their boundary: unique parameters read + root written, with
+    gather / dynamic-slice reading only the sliced bytes and (in-place)
+    dynamic-update-slice / scatter moving only the update bytes.  Bodies of
+    reduce/map/sort combinators are scalar code: zero.
+  * **VMEM-declared fusions** — regions wrapped in
+    ``jax.named_scope("vmem_*")`` ship as Pallas kernels on TPU (flash
+    attention, paged attention, SSD core; validated against oracles in
+    tests/).  Their intermediates never touch HBM, so only tensors crossing
+    the scope boundary are counted.
+  * **Collectives** — result bytes x ring wire factors, x trip counts.
+
+This is the "profile" the perf loop reads — no real-TPU timings exist in
+this container, so the lowered IR is the ground truth (per the brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_CALLEE_RES = (
+    (re.compile(r"\bcondition=%?([\w.\-]+)"), "cond"),
+    (re.compile(r"\bbody=%?([\w.\-]+)"), "body"),
+    (re.compile(r"\bcalls=%?([\w.\-]+)"), "calls"),
+    (re.compile(r"\bto_apply=%?([\w.\-]+)"), "scalar"),
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+#: metadata marker for declared-VMEM-resident (Pallas-fused) regions
+VMEM_SCOPE_MARKER = "vmem_"
+
+_META_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota")
+_CONTROL_OPS = ("while", "conditional", "call", "fusion", "custom-call")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",") if d] if dim_str else []
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        total += math.prod(_dims(dims) or [1]) * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return m.group(1), _dims(m.group(2))
+
+
+def _split_result_op(rest: str) -> Tuple[str, str, str]:
+    m = re.match(r"((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+                 r"([\w\-]+)\(", rest)
+    if not m:
+        return "", "", ""
+    return m.group(1), m.group(2), rest[m.end() - 1:]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str
+    operands: List[str]
+    scoped: bool
+    is_root: bool
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    flops: float = 0.0
+    trip_const: int = 1
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    params: Set[str] = dataclasses.field(default_factory=set)
+    collectives: List[Tuple[str, int, int]] = dataclasses.field(
+        default_factory=list)
+    # (callee, kind, callsite_scoped); kind: cond|body|calls|scalar|branch
+    callees: List[Tuple[str, str, bool]] = dataclasses.field(
+        default_factory=list)
+    fusion_callees: Set[str] = dataclasses.field(default_factory=set)
+    op_of: Dict[str, str] = dataclasses.field(default_factory=dict)
+    fusion_of: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    # -- byte models -----------------------------------------------------------
+    def _instr_bytes(self, i: Instr) -> float:
+        if i.op in _META_OPS or i.op in _CONTROL_OPS:
+            return 0.0
+        if i.op in ("gather", "dynamic-slice"):
+            return 2.0 * _shape_bytes(i.type_str)
+        if i.op == "dynamic-update-slice":
+            upd = self.shapes.get(i.operands[1], "") if len(i.operands) > 1 else ""
+            return 2.0 * _shape_bytes(upd)
+        if i.op == "scatter":
+            upd = self.shapes.get(i.operands[-1], "") if i.operands else ""
+            return 2.0 * _shape_bytes(upd)
+        b = _shape_bytes(i.type_str)
+        for o in i.operands:
+            b += _shape_bytes(self.shapes.get(o, ""))
+        return b
+
+    def dataflow_bytes(self) -> float:
+        """Top-level computation: every instruction is a kernel launch;
+        VMEM-scoped instructions count only boundary crossings."""
+        if not any(i.scoped for i in self.instrs):
+            return sum(self._instr_bytes(i) for i in self.instrs)
+        scoped_names = {i.name for i in self.instrs if i.scoped}
+        read_by_unscoped: Set[str] = set()
+        for i in self.instrs:
+            if not i.scoped:
+                read_by_unscoped.update(i.operands)
+        total = 0.0
+        for i in self.instrs:
+            if not i.scoped:
+                total += self._instr_bytes(i)
+                continue
+            # reads crossing INTO the scope: indexed reads move only the
+            # touched slice (the fused kernel streams what it needs)
+            if i.op in ("gather", "dynamic-slice"):
+                if any(o not in scoped_names for o in i.operands):
+                    total += _shape_bytes(i.type_str)
+            elif i.op == "dynamic-update-slice" and len(i.operands) > 1:
+                total += _shape_bytes(self.shapes.get(i.operands[1], ""))
+            elif i.op == "scatter" and i.operands:
+                total += _shape_bytes(self.shapes.get(i.operands[-1], ""))
+            else:
+                for o in i.operands:
+                    if o not in scoped_names:
+                        total += _shape_bytes(self.shapes.get(o, ""))
+            # writes crossing OUT of the scope
+            if i.name in read_by_unscoped or i.is_root:
+                if i.op == "dynamic-update-slice" and len(i.operands) > 1:
+                    total += _shape_bytes(self.shapes.get(i.operands[1], ""))
+                elif i.op == "scatter" and i.operands:
+                    total += _shape_bytes(self.shapes.get(i.operands[-1], ""))
+                else:
+                    total += _shape_bytes(i.type_str)
+        return total
+
+    def fused_bytes(self) -> float:
+        """Fusion body: unique params read + root written; indexed ops
+        move only the touched slices.  Pure dtype-converts are looked
+        through: XLA's CPU backend materializes f32 double-buffers for
+        bf16 while-carries (convert + DUS + convert-back) that no TPU
+        lowering would create — the slice semantics must survive the
+        convert, or a one-token KV write would bill the whole cache."""
+        # look-through map for converts/bitcasts/copies
+        alias = {i.name: i.operands[0] for i in self.instrs
+                 if i.op in ("convert", "bitcast", "copy", "reshape")
+                 and i.operands}
+
+        def resolve(name: str) -> str:
+            seen = set()
+            while name in alias and name not in seen:
+                seen.add(name)
+                name = alias[name]
+            return name
+
+        transparent = ("convert", "bitcast", "copy", "reshape")
+        if all(i.op in transparent for i in self.instrs):
+            return 0.0            # pure aliasing fusion (backend artifact)
+
+        sliced_params: Set[str] = set()
+        extra = 0.0
+        for i in self.instrs:
+            if i.op in ("gather", "dynamic-slice"):
+                extra += _shape_bytes(i.type_str)
+                src = resolve(i.operands[0]) if i.operands else ""
+                if src in self.params:
+                    sliced_params.add(src)
+            elif i.op == "dynamic-update-slice" and len(i.operands) > 1:
+                upd = resolve(i.operands[1])
+                extra += _shape_bytes(
+                    self.shapes.get(upd, self.shapes.get(i.operands[1], "")))
+                src = resolve(i.operands[0])
+                if src in self.params:
+                    sliced_params.add(src)
+        used: Set[str] = set()
+        for i in self.instrs:
+            if i.op in ("convert", "bitcast", "copy", "reshape"):
+                continue          # transparent: counted at real consumers
+            used.update(resolve(o) for o in i.operands)
+        used &= self.params
+        reads = sum(_shape_bytes(self.shapes.get(p, ""))
+                    for p in used - sliced_params)
+        root = next((i for i in self.instrs if i.is_root), None)
+        writes = 0.0
+        if root is not None:
+            tgt = root
+            # a root convert of a DUS (the f32->bf16 write-back) writes
+            # only the updated slice
+            rname = resolve(root.name)
+            tgt = next((i for i in self.instrs if i.name == rname), root)
+            if tgt.op == "dynamic-update-slice" and len(tgt.operands) > 1:
+                writes = _shape_bytes(self.shapes.get(
+                    resolve(tgt.operands[1]), ""))
+            else:
+                writes = _shape_bytes(root.type_str)
+        return reads + extra + writes
+
+
+def parse_module(hlo: str, n_devices: int = 1) -> Tuple[Dict[str, Comp], str]:
+    comps: Dict[str, Comp] = {}
+    entry = ""
+    cur: Optional[Comp] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.endswith("{"):
+            cur = Comp(hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            continue
+        if cur is None or not line.strip() or line.strip() == "}":
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        is_root = bool(m.group(1))
+        name, rest = m.group(2), m.group(3)
+        type_str, op, tail = _split_result_op(rest)
+        if not op:
+            continue
+        cur.shapes[name] = type_str
+        if op == "parameter":
+            cur.params.add(name)
+
+        if "metadata=" in line:
+            scoped = VMEM_SCOPE_MARKER in line
+        else:
+            # XLA-introduced helpers (e.g. reduce-window for softmax max)
+            # carry no metadata: inherit the scope when every data operand
+            # is scoped.
+            scoped_names = {i.name for i in cur.instrs if i.scoped}
+            data_ops = [om.group(1) for om in
+                        re.finditer(r"%([\w.\-]+)", rest.split(")")[0])
+                        if not om.group(1).startswith("constant")]
+            scoped = bool(data_ops) and all(o in scoped_names
+                                            or o.startswith("constant")
+                                            for o in data_ops)
+        for rex, kind in _CALLEE_RES:
+            for cm in rex.finditer(line):
+                cur.callees.append((cm.group(1), kind, scoped))
+                if kind == "calls" and op == "fusion":
+                    cur.fusion_callees.add(cm.group(1))
+                    cur.fusion_of[name] = cm.group(1)
+        bm = _BRANCHES_RE.search(line)
+        if bm:
+            for callee in re.split(r"\s*,\s*", bm.group(1)):
+                if callee:
+                    cur.callees.append((callee.lstrip("%"), "branch", scoped))
+
+        if op == "constant" and "s32[]" in type_str:
+            c = re.search(r"constant\((\d+)\)", rest)
+            if c:
+                cur.trip_const = max(cur.trip_const, int(c.group(1)))
+
+        operands = [om.group(1) for om in
+                    re.finditer(r"%([\w.\-]+)", tail.split(")")[0])]
+
+        if op == "dot":
+            res = _first_shape(type_str)
+            cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            if res and operands and cdims:
+                lhs_shape = _first_shape(cur.shapes.get(operands[0], ""))
+                if lhs_shape:
+                    contracted = math.prod(
+                        lhs_shape[1][int(i)] for i in
+                        _dims(cdims.group(1))) if cdims.group(1) else 1
+                    cur.flops += 2.0 * math.prod(res[1] or [1]) * contracted
+        elif op == "convolution":
+            res = _first_shape(type_str)
+            if res:
+                cur.flops += 2.0 * math.prod(res[1] or [1])
+
+        cur.instrs.append(Instr(name, op, type_str, operands, scoped, is_root))
+        cur.op_of[name] = op
+
+        for c in _COLLECTIVES:
+            if op in (c, c + "-start"):
+                cur.collectives.append(
+                    (c, _shape_bytes(type_str), _group_size(line, n_devices),
+                     operands[0] if operands else "", type_str))
+                break
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloTotals:
+    flops: float = 0.0
+    bytes_rw: float = 0.0
+    collective_wire: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective_wire.values())
+
+
+def _wire(op: str, rbytes: int, n: int) -> float:
+    if op == "all-gather":
+        return rbytes * (n - 1) / max(n, 1)
+    if op == "all-reduce":
+        return 2.0 * rbytes * (n - 1) / max(n, 1)
+    if op == "reduce-scatter":
+        return rbytes * (n - 1)
+    if op == "all-to-all":
+        return rbytes * (n - 1) / max(n, 1)
+    return float(rbytes)      # collective-permute
+
+
+def _promoted_bf16(comp: Comp, comps: Dict[str, Comp], operand: str,
+                   depth: int = 0) -> bool:
+    """True when a collective's f32 operand is semantically a bf16 tensor
+    (a convert / reduce-precision plumbing chain) — XLA keeps bf16 values
+    in f32 storage around collectives on some backends; TPU collectives
+    run natively in bf16, so the wire is counted at 2 bytes/elt."""
+    if depth > 4:
+        return False
+    op = comp.op_of.get(operand)
+    if op == "convert":
+        conv = next((i for i in comp.instrs if i.name == operand), None)
+        return bool(conv and conv.operands
+                    and "bf16" in comp.shapes.get(conv.operands[0], ""))
+    if op in ("copy", "bitcast", "reshape"):
+        inst = next((i for i in comp.instrs if i.name == operand), None)
+        return bool(inst and inst.operands and _promoted_bf16(
+            comp, comps, inst.operands[0], depth + 1))
+    if op == "fusion":
+        body = comps.get(comp.fusion_of.get(operand, ""))
+        if body is None:
+            return False
+        plumbing = ("convert", "reduce-precision", "bitcast", "copy",
+                    "reshape", "parameter", "constant")
+        if not all(i.op in plumbing for i in body.instrs):
+            return False
+        return (any(i.op == "reduce-precision" for i in body.instrs)
+                or any("bf16" in body.shapes.get(i.name, "")
+                       for i in body.instrs))
+    return False
+
+
+def analyze(hlo: str, n_devices: int = 1) -> HloTotals:
+    comps, entry = parse_module(hlo, n_devices)
+    totals = HloTotals()
+    stack: List[str] = []
+
+    def trip_of(cond_name: str) -> int:
+        c = comps.get(cond_name)
+        return max(1, c.trip_const) if c else 1
+
+    def walk(name: str, mult: float, mode: str, suppress_bytes: bool) -> None:
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        stack.append(name)
+        totals.flops += comp.flops * mult
+        if not suppress_bytes:
+            if mode == "fused":
+                totals.bytes_rw += comp.fused_bytes() * mult
+            elif mode == "dataflow":
+                totals.bytes_rw += comp.dataflow_bytes() * mult
+            # scalar: no bytes
+        for op, rbytes, n, operand, tstr in comp.collectives:
+            if "f32" in tstr and _promoted_bf16(comp, comps, operand):
+                rbytes //= 2
+            totals.collective_wire[op] = (
+                totals.collective_wire.get(op, 0.0)
+                + _wire(op, rbytes, n) * mult)
+            totals.collective_counts[op] = (
+                totals.collective_counts.get(op, 0.0) + mult)
+        conds = [c for c, k, _ in comp.callees if k == "cond"]
+        bodies = [c for c, k, _ in comp.callees if k == "body"]
+        trip_by_body = {b: trip_of(c) for c, b in zip(conds, bodies)}
+        for callee, kind, scoped in comp.callees:
+            if kind == "body":
+                walk(callee, mult * trip_by_body.get(callee, 1), "dataflow",
+                     suppress_bytes)
+            elif kind == "cond":
+                walk(callee, mult * trip_of(callee), "dataflow",
+                     suppress_bytes)
+            elif kind == "scalar":
+                walk(callee, mult, "scalar", True)
+            elif kind == "calls" and callee in comp.fusion_callees:
+                # fused body: bytes suppressed if the callsite is inside a
+                # declared-VMEM scope (boundary handled at the callsite)
+                walk(callee, mult, "fused", suppress_bytes or scoped)
+            else:
+                walk(callee, mult, "dataflow", suppress_bytes)
+        stack.pop()
+
+    walk(entry, 1.0, "dataflow", False)
+    return totals

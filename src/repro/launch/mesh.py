@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module does not touch jax device state — the dry-run sets
+XLA_FLAGS for 512 host devices before any jax initialization, and smoke
+tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods x
+    256 chips as (pod=2, data=16, model=16); the 'pod' axis carries pure DP
+    plus the numaPTE block-table coherence domain."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 8, *, multi_pod: bool = False):
+    """Small mesh for CI-scale distributed tests (8 host devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, 2, n_devices // 4), ("pod", "data", "model"))
+    return jax.make_mesh((2, n_devices // 2), ("data", "model"))

@@ -1,0 +1,13 @@
+"""Model zoo: all assigned architectures as composable layer-group stacks."""
+from .common import LayerGroup, ModelConfig, layer_groups
+from .transformer import (DecodeState, active_param_count, decode_step,
+                          forward_encdec, forward_lm, greedy_sample,
+                          init_decode_state, init_params, lm_loss,
+                          param_count, prefill)
+
+__all__ = [
+    "DecodeState", "LayerGroup", "ModelConfig", "active_param_count",
+    "decode_step", "forward_encdec", "forward_lm", "greedy_sample",
+    "init_decode_state", "init_params", "layer_groups", "lm_loss",
+    "param_count", "prefill",
+]

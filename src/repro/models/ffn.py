@@ -1,0 +1,33 @@
+"""Dense feed-forward blocks: SwiGLU, GeGLU, GELU, squared-ReLU."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import constrain
+from .common import KeyGen, ModelConfig, _dense, activation, ffn_has_gate
+
+
+def init_ffn(cfg: ModelConfig, keys: KeyGen, d_ff: int = 0
+             ) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    p = {
+        "w_in": _dense(keys(), (d, f), cfg.param_dtype),
+        "w_out": _dense(keys(), (f, d), cfg.param_dtype),
+    }
+    if ffn_has_gate(cfg.ffn_act):
+        p["w_gate"] = _dense(keys(), (d, f), cfg.param_dtype)
+    return p
+
+
+def ffn_forward(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array
+                ) -> jax.Array:
+    h = x @ p["w_in"].astype(cfg.dtype)
+    h = constrain(h, "batch", "seq", "ff")
+    gate = (x @ p["w_gate"].astype(cfg.dtype)) if "w_gate" in p else None
+    h = activation(cfg.ffn_act, h, gate)
+    out = h @ p["w_out"].astype(cfg.dtype)
+    return constrain(out, "batch", "act_seq", None)

@@ -1,0 +1,98 @@
+"""Mixture-of-Experts with expert parallelism (EP over the 'model' axis).
+
+Sort-based capacity dispatch with static shapes: assignments are ranked
+within their expert by a stable sort; tokens beyond the per-expert capacity
+are dropped (Switch-style).  Expert weights are sharded on the expert axis,
+so the per-expert einsums run expert-parallel under pjit and the
+gather/scatter at the boundaries lowers to the EP all-to-all/reduce pattern
+in SPMD.  Memory: the dispatched activations are [E, C, D] with
+E*C = tokens*top_k*capacity_factor — independent of expert count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import constrain
+from .common import KeyGen, ModelConfig, _dense, activation, ffn_has_gate
+from .ffn import ffn_forward, init_ffn
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(cfg: ModelConfig, keys: KeyGen) -> Dict[str, jax.Array]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    p = {
+        "router": _dense(keys(), (d, e), cfg.param_dtype, scale=0.1),
+        "we_in": _dense(keys(), (e, d, f), cfg.param_dtype),
+        "we_out": _dense(keys(), (e, f, d), cfg.param_dtype),
+    }
+    if ffn_has_gate(cfg.ffn_act):
+        p["we_gate"] = _dense(keys(), (e, d, f), cfg.param_dtype)
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(cfg, keys, d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int,
+                    factor: float = CAPACITY_FACTOR) -> int:
+    c = int(n_tokens * top_k * factor / n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8 for layout friendliness
+
+
+def moe_forward(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    N = B * S
+    xf = x.reshape(N, D)
+
+    logits = (xf @ p["router"].astype(cfg.dtype)).astype(jnp.float32)  # [N,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, K)                 # [N,K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balance auxiliary loss (Switch) --------------------------------
+    me = jnp.mean(probs, axis=0)                              # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[eids.reshape(-1)].add(1.0) / N
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based capacity dispatch ----------------------------------------
+    C = expert_capacity(N, E, K, cfg.moe_capacity_factor)
+    flat_e = eids.reshape(-1)                                 # [N*K]
+    flat_tok = jnp.repeat(jnp.arange(N), K)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_tok[order], flat_w[order]
+    # rank of each assignment within its expert
+    first = jnp.searchsorted(se, jnp.arange(E), side="left")  # [E]
+    rank = jnp.arange(N * K) - first[se]
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)              # sentinel slot
+    disp_tok = jnp.full((E * C + 1,), N, jnp.int32).at[slot].set(
+        st.astype(jnp.int32))[:-1].reshape(E, C)
+    disp_w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        sw)[:-1].reshape(E, C)
+
+    # ---- expert computation (expert axis sharded -> EP) -----------------------
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)])
+    xe = x_pad[jnp.minimum(disp_tok, N)]                      # [E, C, D]
+    xe = constrain(xe, "experts", None, None)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["we_in"].astype(cfg.dtype))
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["we_gate"].astype(cfg.dtype)) \
+        if "we_gate" in p else None
+    h = activation(cfg.ffn_act, h, gate)
+    h = constrain(h, "experts", None, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we_out"].astype(cfg.dtype))
+    ye = ye * disp_w[..., None].astype(cfg.dtype)
+
+    # ---- combine back to tokens ----------------------------------------------
+    out = jnp.zeros((N + 1, D), cfg.dtype).at[disp_tok.reshape(-1)].add(
+        ye.reshape(E * C, D))[:N]
+    if cfg.n_shared_experts:
+        out = out + ffn_forward(cfg, p["shared"], xf[None])[0]
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_r x_t)                    (recurrence gate)
+    i_t = sigmoid(W_i x_t)                    (input gate)
+    a_t = a ^ (c * r_t),  a = sigmoid(Lambda) (learned, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence form uses an associative scan over the affine recurrence
+(h_t = a_t h_{t-1} + b_t); decode is the O(1) recurrence.  The block wraps
+the RG-LRU with the Griffin recurrent-block structure: linear in, short
+causal conv, RG-LRU, gated output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import constrain
+from .common import KeyGen, ModelConfig, _dense
+from .ssm import _causal_conv
+
+RG_C = 8.0
+
+
+def init_rglru(cfg: ModelConfig, keys: KeyGen) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "rg_in": _dense(keys(), (d, w), cfg.param_dtype),      # x branch
+        "rg_gate": _dense(keys(), (d, w), cfg.param_dtype),    # output gate br.
+        "conv_w": _dense(keys(), (cfg.conv_width, w), cfg.param_dtype),
+        "conv_b": jnp.zeros((w,), cfg.param_dtype),
+        "w_r": _dense(keys(), (w, w), cfg.param_dtype, scale=0.5),
+        "w_i": _dense(keys(), (w, w), cfg.param_dtype, scale=0.5),
+        # Lambda such that the retention a = exp(-softplus(Lambda)) at full
+        # recurrence gate spans [0.9, 0.999]:  Lambda = ln(expm1(-ln a))
+        "rg_a": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)))).astype(cfg.param_dtype),
+        "out_proj": _dense(keys(), (w, d), cfg.param_dtype),
+    }
+
+
+def _gates(p: Dict[str, jax.Array], xb: jax.Array):
+    r = jax.nn.sigmoid(xb @ p["w_r"].astype(xb.dtype))
+    i = jax.nn.sigmoid(xb @ p["w_i"].astype(xb.dtype))
+    log_a = -RG_C * jax.nn.softplus(p["rg_a"].astype(jnp.float32)) \
+        * r.astype(jnp.float32) * 0.125
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) \
+        * (i.astype(jnp.float32) * xb.astype(jnp.float32))
+    return a, b
+
+
+def rglru_forward(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+                  return_state: bool = False):
+    """x: [B, S, D] -> [B, S, D] via associative scan over the recurrence.
+    With return_state=True also returns {'h', 'conv'} for decode."""
+    xin = x @ p["rg_in"].astype(cfg.dtype)
+    xb = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    gate = jax.nn.gelu(x @ p["rg_gate"].astype(cfg.dtype), approximate=True)
+    a, b = _gates(p, xb)                       # [B,S,W] f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate.astype(jnp.float32)).astype(cfg.dtype)
+    out = y @ p["out_proj"].astype(cfg.dtype)
+    out = constrain(out, "batch", "seq", None)
+    if not return_state:
+        return out
+    W = cfg.conv_width
+    pre = jnp.pad(xin, ((0, 0), (W - 1, 0), (0, 0)))
+    conv_tail = pre[:, xin.shape[1]:xin.shape[1] + W - 1]
+    return out, {"h": h[:, -1], "conv": conv_tail.astype(cfg.dtype)}
+
+
+def rglru_decode(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+                 h: jax.Array, conv_state: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) decode.  x: [B,1,D]; h: [B,W] f32; conv_state: [B,W-1?,W]."""
+    xin = x @ p["rg_in"].astype(cfg.dtype)
+    new_conv = jnp.concatenate([conv_state.astype(x.dtype), xin], axis=1)
+    xb = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"],
+                                  state=conv_state))
+    conv_state = new_conv[:, 1:]
+    gate = jax.nn.gelu(x @ p["rg_gate"].astype(cfg.dtype), approximate=True)
+    a, b = _gates(p, xb[:, 0])
+    h = a * h + b
+    y = (h * gate[:, 0].astype(jnp.float32)).astype(cfg.dtype)
+    out = (y @ p["out_proj"].astype(cfg.dtype))[:, None]
+    return out, h, conv_state

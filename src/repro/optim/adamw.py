@@ -1,0 +1,76 @@
+"""AdamW with decoupled weight decay + cosine schedule (pure pytree ops).
+
+States inherit the parameter sharding (first/second moments are tree-mapped
+from params), so ZeRO-style state sharding falls out of the param specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw_init(params: PyTree, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def cosine_lr(step: jax.Array, *, peak: float = 3e-4, warmup: int = 100,
+              total: int = 10_000, floor: float = 0.1) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = peak * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: AdamWState, *,
+                 lr: Optional[jax.Array] = None, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: Optional[float] = 1.0
+                 ) -> Tuple[PyTree, AdamWState, jax.Array]:
+    step = state.step + 1
+    if lr is None:
+        lr = cosine_lr(step)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.ones((), jnp.float32)
+    if grad_clip is not None:
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1t = 1 - b1 ** step.astype(jnp.float32)
+    b2t = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / b1t
+        vhat = v / b2t
+        step_ = mhat / (jnp.sqrt(vhat) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step_ + decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), gnorm

@@ -1,0 +1,27 @@
+"""Device-resident paged block tables with numaPTE coherence (JAX).
+
+The TPU-pod analogue of the paper's mechanism: a paged KV-cache block table
+is a page table; pods are NUMA nodes; per-device translation caches are
+TLBs; block-table mutations require cross-pod invalidation (shootdowns).
+
+``CoherenceMode.EAGER``   == Mitosis: every pod holds a full replica, every
+mutation epoch all-gathers the dirty buffer to every pod.
+``CoherenceMode.NUMAPTE`` == the paper: replicas fill lazily on miss from the
+owner pod; sharer bitmasks bound both the fetch traffic and the invalidation
+scope.  In steady-state decode the coherence collective disappears from the
+step entirely — which is exactly how the paper's win shows up in the
+collective roofline term (EXPERIMENTS.md §Perf).
+"""
+from .blocktable import (BlockTableSpec, CoherenceMode, DeviceBlockTables,
+                         apply_mutations, eager_sync_bytes, init_block_tables,
+                         lookup_blocks, numapte_fetch_bytes)
+from .coherence import (eager_sync, numapte_miss_fetch, sharer_filter_mask,
+                        shootdown_scope)
+from .host import HostBlockManager
+
+__all__ = [
+    "BlockTableSpec", "CoherenceMode", "DeviceBlockTables", "HostBlockManager",
+    "apply_mutations", "eager_sync", "eager_sync_bytes", "init_block_tables",
+    "lookup_blocks", "numapte_fetch_bytes", "numapte_miss_fetch",
+    "sharer_filter_mask", "shootdown_scope",
+]

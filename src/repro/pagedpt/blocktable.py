@@ -1,0 +1,129 @@
+"""Block-table state and pure-array operations (no collectives here).
+
+Layout notes (TPU-minded):
+  * `entries` is int32 — a physical KV-slab index, -1 when not present.  One
+    row of 512 entries is one "leaf page-table page": the unit of sharer
+    tracking and replication, exactly as in the paper.
+  * the per-pod replica dimension leads so `P('pod', None, None)` shards one
+    replica per pod; inside `shard_map` each pod sees only its own replica.
+  * `sharers` is a uint32 bitmask per table page (32 pods; the paper's
+    circular sharer list carries the same information).
+  * permissions ride in the entry's high bits so a permission flip is a
+    single int32 store, like the paper's single-PTE mprotect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ENTRIES_PER_TABLE = 512
+PERM_SHIFT = 28          # bits 28..30 hold perms; bit 31 stays for sign
+PERM_MASK = 0x7 << PERM_SHIFT
+FRAME_MASK = (1 << PERM_SHIFT) - 1
+PERM_R = 1
+PERM_W = 2
+PERM_RW = 3
+
+
+class CoherenceMode(enum.Enum):
+    LOCAL = "local"      # single pod, no coherence (baseline Linux analogue)
+    EAGER = "eager"      # Mitosis: full replicas, broadcast on mutation
+    NUMAPTE = "numapte"  # the paper: lazy partial replication + sharer masks
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTableSpec:
+    n_pods: int
+    n_tables: int                       # leaf table pages
+    entries_per_table: int = ENTRIES_PER_TABLE
+    mutation_budget: int = 1024         # max mutations applied per step
+    miss_budget: int = 256              # max on-demand fetches per step
+    prefetch_degree: int = 3            # 2^d neighbouring entries per miss
+
+    @property
+    def total_entries(self) -> int:
+        return self.n_tables * self.entries_per_table
+
+
+class DeviceBlockTables(NamedTuple):
+    """Device arrays; `entries` leading dim is the per-pod replica axis."""
+    entries: jax.Array     # i32 [n_pods, n_tables, entries_per_table]
+    sharers: jax.Array     # u32 [n_tables] — bitmask of pods holding a replica
+    owner: jax.Array       # i32 [n_tables] — owner pod per table page
+
+
+def pack_entry(frame: jax.Array, perms: jax.Array) -> jax.Array:
+    return (frame & FRAME_MASK) | (perms.astype(jnp.int32) << PERM_SHIFT)
+
+
+def unpack_entry(entry: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    frame = jnp.where(entry < 0, -1, entry & FRAME_MASK)
+    perms = jnp.where(entry < 0, 0, (entry & PERM_MASK) >> PERM_SHIFT)
+    return frame, perms
+
+
+def init_block_tables(spec: BlockTableSpec) -> DeviceBlockTables:
+    return DeviceBlockTables(
+        entries=jnp.full((spec.n_pods, spec.n_tables, spec.entries_per_table),
+                         -1, dtype=jnp.int32),
+        sharers=jnp.zeros((spec.n_tables,), dtype=jnp.uint32),
+        owner=jnp.full((spec.n_tables,), -1, dtype=jnp.int32),
+    )
+
+
+def lookup_blocks(local_entries: jax.Array, logical_blocks: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Translate logical block ids -> (physical frame, present mask).
+
+    `local_entries` is ONE pod's replica [n_tables, entries_per_table]
+    (inside shard_map) — the hardware page walk of the paper, always local.
+    `logical_blocks` is any-int32-shaped [...]; -1 entries pass through.
+    """
+    n_tables, epb = local_entries.shape
+    tid = logical_blocks // epb
+    idx = logical_blocks % epb
+    safe_tid = jnp.clip(tid, 0, n_tables - 1)
+    raw = local_entries[safe_tid, idx]
+    ok = (logical_blocks >= 0) & (logical_blocks < n_tables * epb) & (raw >= 0)
+    frame, _ = unpack_entry(raw)
+    return jnp.where(ok, frame, -1), ok
+
+
+def apply_mutations(entries: jax.Array, mut_tables: jax.Array,
+                    mut_idx: jax.Array, mut_value: jax.Array,
+                    apply_mask: jax.Array) -> jax.Array:
+    """Apply a mutation buffer to one replica [n_tables, epb].
+
+    Masked-out slots write to a scratch row so the op stays dense/static —
+    the numaPTE sharer filter zeroes `apply_mask` for non-sharer pods, the
+    device analogue of not receiving a shootdown.
+    """
+    n_tables, epb = entries.shape
+    # route masked-out mutations to a dummy slot (last entry of last table),
+    # writing back its existing value so they are no-ops.
+    tid = jnp.where(apply_mask, mut_tables, n_tables - 1)
+    idx = jnp.where(apply_mask, mut_idx, epb - 1)
+    current = entries[n_tables - 1, epb - 1]
+    val = jnp.where(apply_mask, mut_value, current)
+    flat = entries.reshape(-1)
+    flat = flat.at[tid * epb + idx].set(val)
+    return flat.reshape(n_tables, epb)
+
+
+def eager_sync_bytes(spec: BlockTableSpec) -> int:
+    """Collective bytes per step for EAGER coherence (per pod): the dirty
+    buffer (table, idx, value) is all-gathered to every pod."""
+    per_pod = spec.mutation_budget * 3 * 4
+    return per_pod * spec.n_pods
+
+
+def numapte_fetch_bytes(spec: BlockTableSpec) -> int:
+    """Collective bytes per step for NUMAPTE: miss requests + responses,
+    each response carrying 2^d prefetched entries."""
+    req = spec.miss_budget * 2 * 4
+    resp = spec.miss_budget * (1 << spec.prefetch_degree) * 4
+    return req + resp

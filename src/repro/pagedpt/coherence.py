@@ -1,0 +1,162 @@
+"""Cross-pod coherence collectives for device block tables.
+
+These functions run inside ``shard_map`` over the ``pod`` mesh axis.  They
+are the TPU translation of the paper's two coherence styles:
+
+  * ``eager_sync``        — Mitosis.  Every pod broadcasts its mutation
+    buffer to every other pod each step (all-gather over `pod`), because
+    with full replication any pod may cache any entry.  Collective bytes
+    scale with n_pods * mutation_budget, *every step*, mutations or not.
+  * ``numapte_miss_fetch`` — the paper.  Pods fetch only the entries they
+    miss, from the owner pod, with degree-d prefetch; sharer bitmasks are
+    maintained with a tiny OR-reduce.  Steady-state decode has near-zero
+    coherence traffic, mirroring the paper's elimination of shootdowns for
+    unshared page-tables.
+
+The *shootdown filter* (invariant I2) appears as ``sharer_filter_mask``:
+mutations are applied on a pod only if that pod is in the sharer mask of the
+touched table — other pods provably cannot hold the entry in any on-device
+translation cache, so they skip the invalidation work.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .blocktable import apply_mutations, pack_entry
+
+
+def _my_pod(axis_name: str) -> jax.Array:
+    return lax.axis_index(axis_name)
+
+
+def eager_sync(local_entries: jax.Array,
+               mut_tables: jax.Array, mut_idx: jax.Array,
+               mut_value: jax.Array, mut_valid: jax.Array,
+               axis_name: str = "pod") -> jax.Array:
+    """Mitosis-style coherence: broadcast + apply everyone's mutations.
+
+    Args are this pod's outbound mutation buffer ([B] each).  Returns the
+    updated local replica.  HLO cost: one all-gather of B*3 int32 words over
+    the pod axis — this is the collective the paper's lazy protocol deletes.
+    """
+    # [P, B] each after gathering every pod's buffer
+    g_tables = lax.all_gather(mut_tables, axis_name)
+    g_idx = lax.all_gather(mut_idx, axis_name)
+    g_value = lax.all_gather(mut_value, axis_name)
+    g_valid = lax.all_gather(mut_valid, axis_name)
+    flat = lambda x: x.reshape(-1)
+    return apply_mutations(local_entries, flat(g_tables), flat(g_idx),
+                           flat(g_value), flat(g_valid))
+
+
+def sharer_filter_mask(sharers: jax.Array, mut_tables: jax.Array,
+                       mut_valid: jax.Array, axis_name: str = "pod"
+                       ) -> jax.Array:
+    """numaPTE's shootdown filter: keep only mutations whose table lists this
+    pod as a sharer.  `sharers` u32 [n_tables]; returns bool [B]."""
+    me = _my_pod(axis_name)
+    n_tables = sharers.shape[0]
+    tid = jnp.clip(mut_tables, 0, n_tables - 1)
+    bit = (sharers[tid] >> me.astype(jnp.uint32)) & jnp.uint32(1)
+    return mut_valid & (bit == 1)
+
+
+def shootdown_scope(sharers: jax.Array, mut_tables: jax.Array,
+                    mut_valid: jax.Array) -> jax.Array:
+    """Union of sharer masks over the touched tables: the set of pods that
+    must participate in the invalidation barrier (u32 scalar)."""
+    n_tables = sharers.shape[0]
+    tid = jnp.clip(mut_tables, 0, n_tables - 1)
+    masks = jnp.where(mut_valid, sharers[tid], jnp.uint32(0))
+    return jax.lax.reduce_or(masks, axes=(0,))
+
+
+def numapte_apply_filtered(local_entries: jax.Array, sharers: jax.Array,
+                           mut_tables: jax.Array, mut_idx: jax.Array,
+                           mut_value: jax.Array, mut_valid: jax.Array,
+                           axis_name: str = "pod") -> jax.Array:
+    """numaPTE coherence for *updates* (mprotect/munmap analogue): the owner
+    broadcasts its (small) update buffer, but each pod applies only entries
+    for tables it shares — the device-side shootdown filter.  The buffer
+    here is sized by actual mutations, typically << EAGER's budget."""
+    g_tables = lax.all_gather(mut_tables, axis_name).reshape(-1)
+    g_idx = lax.all_gather(mut_idx, axis_name).reshape(-1)
+    g_value = lax.all_gather(mut_value, axis_name).reshape(-1)
+    g_valid = lax.all_gather(mut_valid, axis_name).reshape(-1)
+    keep = sharer_filter_mask(sharers, g_tables, g_valid, axis_name)
+    return apply_mutations(local_entries, g_tables, g_idx, g_value, keep)
+
+
+def numapte_miss_fetch(local_entries: jax.Array, sharers: jax.Array,
+                       owner: jax.Array, miss_blocks: jax.Array,
+                       prefetch_degree: int, axis_name: str = "pod"
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Lazy on-demand fetch of missing block-table entries from owner pods.
+
+    miss_blocks: int32 [M] logical block ids this pod missed (-1 = no miss).
+    Returns (updated local replica, updated sharer masks).
+
+    Protocol (all static-shape SPMD):
+      1. all-gather the [M] request buffers (tiny).
+      2. every pod answers the requests whose table it OWNS, reading a
+         2^d-entry window from its replica (the paper's prefetch, Fig 5).
+      3. all_to_all routes each answer back to the requester.
+      4. requester installs the window; an OR-reduce adds it to the sharer
+         mask of every fetched table (each pod contributes only its own bit,
+         so a sum-reduce is an OR).
+    """
+    me = _my_pod(axis_name)
+    n_tables, epb = local_entries.shape
+    width = 1 << prefetch_degree
+    n_pods = lax.psum(1, axis_name)
+
+    reqs = lax.all_gather(miss_blocks, axis_name)            # [P, M]
+    valid = reqs >= 0
+    tid = jnp.clip(reqs // epb, 0, n_tables - 1)             # [P, M]
+    base_idx = reqs % epb
+    # window start, clipped to the table page (paper: prefetch never crosses
+    # the page-table page boundary)
+    start = jnp.clip(base_idx - width // 2, 0, epb - width)  # [P, M]
+
+    i_am_owner = (owner[tid] == me) & valid                  # [P, M]
+    # read the window from MY replica (owner invariant I1: owner has it)
+    win_off = start[..., None] + jnp.arange(width)[None, None, :]  # [P,M,W]
+    window = local_entries[tid[..., None], win_off]          # [P, M, W]
+    window = jnp.where(i_am_owner[..., None], window, -1)
+
+    # route answers back: my window[p] -> pod p; I receive [P, M, W] where
+    # slice q is pod q's answer to MY requests.
+    answers = lax.all_to_all(window, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
+    if answers.ndim == 4:   # some backends keep a leading singleton
+        answers = answers.reshape((-1,) + answers.shape[-2:])
+    merged = jnp.max(answers, axis=0)                        # [M, W] owner's
+    # install into local replica at [my_tid, start:start+W].  Windows from
+    # different misses may overlap on the same table; duplicates carry the
+    # same canonical value so a flat scatter with a scratch slot is exact.
+    my_reqs = miss_blocks
+    my_valid = my_reqs >= 0
+    my_tid = jnp.clip(my_reqs // epb, 0, n_tables - 1)
+    my_start = jnp.clip(my_reqs % epb - width // 2, 0, epb - width)
+    scatter_tid = jnp.where(my_valid, my_tid, n_tables - 1)
+    col = my_start[:, None] + jnp.arange(width)[None, :]     # [M, W]
+    flat_idx = scatter_tid[:, None] * epb + col              # [M, W]
+    writable = my_valid[:, None] & (merged >= 0)
+    scratch = n_tables * epb                                 # dummy slot
+    idx = jnp.where(writable, flat_idx, scratch)
+    flat = jnp.concatenate(
+        [local_entries.reshape(-1), jnp.full((1,), -1, local_entries.dtype)])
+    flat = flat.at[idx.reshape(-1)].set(merged.reshape(-1))
+    updated = flat[:-1].reshape(n_tables, epb)
+
+    # sharer-mask maintenance: add my bit to fetched tables (OR via psum of
+    # disjoint per-pod bits)
+    my_bit = (jnp.uint32(1) << me.astype(jnp.uint32))
+    add = jnp.zeros_like(sharers).at[scatter_tid].max(
+        jnp.where(my_valid, my_bit, jnp.uint32(0)))
+    new_bits = lax.psum(add, axis_name)
+    return updated, sharers | new_bits

@@ -1,0 +1,3 @@
+from .trainer import FailureInjector, StragglerMonitor, Trainer, TrainerConfig
+
+__all__ = ["FailureInjector", "StragglerMonitor", "Trainer", "TrainerConfig"]
