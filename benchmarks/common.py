@@ -8,12 +8,16 @@ from repro.core import NumaSim, PAPER_8SOCKET, Policy
 from repro.core.pagetable import PERM_R, PERM_RW
 
 
-def csv(name: str, rows: List[Dict]) -> None:
-    """Print one benchmark table as CSV (name,key=value pairs per row)."""
+def csv(name: str, rows: List[Dict]) -> List[Dict]:
+    """Print one benchmark table as CSV (name,key=value pairs per row) and
+    return the rows so the harness can also emit machine-readable JSON.
+    Nested values (dicts/lists, e.g. raw counters) are JSON-only."""
     for row in rows:
-        parts = [name] + [f"{k}={v}" for k, v in row.items()]
+        parts = [name] + [f"{k}={v}" for k, v in row.items()
+                          if not isinstance(v, (dict, list))]
         print(",".join(parts))
     sys.stdout.flush()
+    return rows
 
 
 def make_spinners(sim: NumaSim, per_socket: int, skip_cpu0: bool = True):

@@ -18,21 +18,22 @@ def run_one(spin: int, where: str, iters: int = 200) -> float:
             cpu = base + i + (1 if node == 0 else 0)
             t = sim.spawn_thread(cpu)
             v = sim.mmap(t, 1)
-            sim.touch(t, v.start_vpn, write=True)
+            sim.touch_batch(t, [v.start_vpn], write_mask=True)
     vma = sim.mmap(main, 1)
-    sim.touch(main, vma.start_vpn, write=True)
+    sim.touch_batch(main, [vma.start_vpn], write_mask=True)
     return mprotect_loop(sim, main, vma.start_vpn, iters)
 
 
-def main(quick: bool = False) -> None:
-    base = run_one(0, "local")
+def main(quick: bool = False, scale: int = 1) -> list:
+    iters = 200 * scale
+    base = run_one(0, "local", iters)
     rows = []
     for where in ("local", "remote"):
         for spin in ([4, 18] if quick else [1, 2, 4, 9, 18, 35]):
-            ns = run_one(spin, where)
+            ns = run_one(spin, where, iters)
             rows.append({"spinners_on": where, "spin_per_socket": spin,
                          "slowdown": round(ns / base, 2)})
-    csv("fig02_local_remote", rows)
+    return csv("fig02_local_remote", rows)
 
 
 if __name__ == "__main__":

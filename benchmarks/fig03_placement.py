@@ -19,30 +19,31 @@ N_PAGES = 1 << 15        # 128MB scaled
 
 
 def run_config(pt_remote: bool, data_remote: bool, interfere: bool,
-               accesses: int = 60_000) -> float:
+               accesses: int = 60_000, n_pages: int = N_PAGES) -> float:
     inter = (1,) if interfere else ()
     sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, interference_nodes=inter)
     # loader thread on the node that should own PT+data initially
     setup_node = 1 if (pt_remote or data_remote) else 0
     loader = sim.spawn_thread(setup_node * sim.topo.hw_threads_per_node)
     worker = sim.spawn_thread(0)
-    vma = sim.mmap(loader, N_PAGES)
-    for vpn in range(vma.start_vpn, vma.end_vpn):
-        sim.touch(loader, vpn, write=True)     # PT + data on setup node
+    vma = sim.mmap(loader, n_pages)
+    # PT + data land on the setup node (batched first-touch)
+    sim.touch_batch(loader, np.arange(vma.start_vpn, vma.end_vpn),
+                    write_mask=True)
     if pt_remote and not data_remote:
         # migrate data pages back to node 0 (AutoNUMA analogue), PTs stay
         for frame, node in list(sim._frame_nodes.items()):
             sim._frame_nodes[frame] = 0
-    order = np.random.default_rng(0).integers(0, N_PAGES, accesses)
+    order = np.random.default_rng(0).integers(0, n_pages, accesses)
     t0 = sim.thread_time_ns(worker)
-    for off in order:
-        sim.touch(worker, vma.start_vpn + int(off))
+    sim.touch_batch(worker, vma.start_vpn + order)
     return sim.thread_time_ns(worker) - t0
 
 
-def main(quick: bool = False) -> None:
-    acc = 20_000 if quick else 60_000
-    base = run_config(False, False, False, acc)
+def main(quick: bool = False, scale: int = 1) -> list:
+    acc = (20_000 if quick else 60_000) * scale
+    n_pages = N_PAGES * scale
+    base = run_config(False, False, False, acc, n_pages)
     rows = []
     for name, (pt_r, d_r, i) in {
         "LP-LD": (False, False, False),
@@ -53,9 +54,9 @@ def main(quick: bool = False) -> None:
         "RP-RD": (True, True, False),
         "RPI-RDI": (True, True, True),
     }.items():
-        ns = run_config(pt_r, d_r, i, acc)
+        ns = run_config(pt_r, d_r, i, acc, n_pages)
         rows.append({"config": name, "slowdown": round(ns / base, 2)})
-    csv("fig03_placement", rows)
+    return csv("fig03_placement", rows)
 
 
 if __name__ == "__main__":

@@ -20,18 +20,17 @@ def run_one(policy: Policy, degree: int, n_pages: int) -> float:
     t0 = sim.spawn_thread(0)
     t1 = sim.spawn_thread(sim.topo.hw_threads_per_node)
     vma = sim.mmap(t0, n_pages)
-    for v in range(vma.start_vpn, vma.end_vpn):
-        sim.touch(t0, v, write=True)
+    sim.touch_batch(t0, np.arange(vma.start_vpn, vma.end_vpn),
+                    write_mask=True)
     order = np.random.default_rng(0).permutation(n_pages)
     before = sim.thread_time_ns(t1)
-    for off in order:
-        sim.touch(t1, vma.start_vpn + int(off))
+    sim.touch_batch(t1, vma.start_vpn + order)
     sim.check_invariants()
     return sim.thread_time_ns(t1) - before
 
 
-def main(quick: bool = False) -> None:
-    n_pages = 1 << (14 if quick else 16)
+def main(quick: bool = False, scale: int = 1) -> list:
+    n_pages = (1 << (14 if quick else 16)) * scale
     mitosis = run_one(Policy.MITOSIS, 0, n_pages)
     linux = run_one(Policy.LINUX, 0, n_pages)
     rows = [{"config": "linux", "ms": round(linux / 1e6, 2),
@@ -42,7 +41,7 @@ def main(quick: bool = False) -> None:
         ns = run_one(Policy.NUMAPTE, d, n_pages)
         rows.append({"config": f"numapte-d{d}", "ms": round(ns / 1e6, 2),
                      "vs_mitosis": round(ns / mitosis, 3)})
-    csv("fig06_prefetch", rows)
+    return csv("fig06_prefetch", rows)
 
 
 if __name__ == "__main__":

@@ -35,7 +35,7 @@ def run_one(policy: Policy, degree: int, accesses: int) -> float:
     return sim.thread_time_ns(w) - t0
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False) -> list:
     acc = 20_000 if quick else 80_000
     base = run_one(Policy.LINUX, 0, acc)       # RPI-LD
     rows = [{"config": "RPI-LD(linux)", "norm_time": 1.0}]
@@ -44,7 +44,7 @@ def main(quick: bool = False) -> None:
                          ("RPI-LD-NP(numapte-pf9)", Policy.NUMAPTE, 9)]:
         ns = run_one(pol, d, acc)
         rows.append({"config": name, "norm_time": round(ns / base, 3)})
-    csv("fig07_migration", rows)
+    return csv("fig07_migration", rows)
 
 
 if __name__ == "__main__":

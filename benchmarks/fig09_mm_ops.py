@@ -40,7 +40,7 @@ def run_one(policy: Policy, filt: bool, op: str, n_pages: int,
     return total / iters
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False) -> list:
     sizes = {"4KB": 1, "128KB": 32, "512KB": 128} if quick else \
         {"4KB": 1, "64KB": 16, "128KB": 32, "512KB": 128, "2MB": 512}
     rows = []
@@ -51,7 +51,7 @@ def main(quick: bool = False) -> None:
                 ns = run_one(pol, filt, op, n)
                 rows.append({"op": op, "range": label, "policy": name,
                              "ns": round(ns), "vs_linux": round(ns / base, 3)})
-    csv("fig09_mm_ops", rows)
+    return csv("fig09_mm_ops", rows)
 
 
 if __name__ == "__main__":

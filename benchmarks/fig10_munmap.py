@@ -26,7 +26,7 @@ def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150) -> dict:
             "ipis_filtered": c.ipis_filtered}
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False) -> list:
     spins = [0, 18, 35] if quick else [0, 1, 2, 4, 9, 18, 27, 35]
     base = run_one(Policy.LINUX, False, 0)["ns_per_op"]
     rows = []
@@ -36,7 +36,7 @@ def main(quick: bool = False) -> None:
             rows.append({"policy": name, "spin_per_socket": spin,
                          "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
                          **r})
-    csv("fig10_munmap", rows)
+    return csv("fig10_munmap", rows)
 
 
 if __name__ == "__main__":

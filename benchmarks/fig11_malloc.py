@@ -44,7 +44,7 @@ def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
     return total / (iters * len(workers))
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False) -> list:
     rows = []
     sockets = [2, 8] if quick else [1, 2, 4, 8]
     flavors = ["mmap", "glibc"] if quick else ["mmap", "glibc", "tcmalloc"]
@@ -61,7 +61,7 @@ def main(quick: bool = False) -> None:
                         "alloc": flavor, "sockets": ns_, "policy": name,
                         "us_per_cycle": round(v / 1e3, 2),
                         "vs_linux": round(v / base, 3)})
-    csv("fig11_12_malloc", rows)
+    return csv("fig11_12_malloc", rows)
 
 
 if __name__ == "__main__":

@@ -20,7 +20,8 @@ STATIC_PAGES = 2048            # shared docroot cache
 
 
 def run_one(policy: Policy, filt: bool, n_threads: int,
-            requests_per_thread: int = 120) -> dict:
+            requests_per_thread: int = 120,
+            static_pages: int = STATIC_PAGES) -> dict:
     sim = NumaSim(PAPER_4SOCKET, policy, tlb_filter=filt, prefetch_degree=9)
     topo = sim.topo
     threads = []
@@ -28,21 +29,21 @@ def run_one(policy: Policy, filt: bool, n_threads: int,
         node = i % topo.n_nodes
         cpu = node * topo.hw_threads_per_node + i // topo.n_nodes
         threads.append(sim.spawn_thread(cpu))
-    # shared static content, loaded once by thread 0
-    static = sim.mmap(threads[0], STATIC_PAGES)
-    for v in range(static.start_vpn, static.end_vpn, 4):
-        sim.touch(threads[0], v, write=True)
+    # shared static content, loaded once by thread 0 (batched first-touch)
+    static = sim.mmap(threads[0], static_pages)
+    sim.touch_batch(threads[0],
+                    np.arange(static.start_vpn, static.end_vpn, 4),
+                    write_mask=True)
     rng = np.random.default_rng(3)
     t_before = {t: sim.thread_time_ns(t) for t in threads}
     for r in range(requests_per_thread):
         for t in threads:
             buf = sim.mmap(t, RESP_PAGES)
-            for v in range(buf.start_vpn, buf.end_vpn):
-                sim.touch(t, v, write=True)
+            sim.touch_batch(t, np.arange(buf.start_vpn, buf.end_vpn),
+                            write_mask=True)
             # read a few static pages (shared read traffic)
-            for _ in range(4):
-                off = int(rng.integers(0, STATIC_PAGES))
-                sim.touch(t, static.start_vpn + off)
+            offs = rng.integers(0, static_pages, size=4)
+            sim.touch_batch(t, static.start_vpn + offs)
             sim.munmap(t, buf.start_vpn, RESP_PAGES)
             sim.threads[t].time_ns += REQUEST_WORK_NS
     total_reqs = requests_per_thread * n_threads
@@ -54,7 +55,7 @@ def run_one(policy: Policy, filt: bool, n_threads: int,
             "ipis_filtered": c.ipis_filtered}
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, scale: int = 1) -> list:
     rows = []
     counts = [8, 32] if quick else [4, 8, 16, 24, 32]
     for n in counts:
@@ -63,7 +64,8 @@ def main(quick: bool = False) -> None:
                                 ("mitosis", Policy.MITOSIS, False),
                                 ("numapte-nofilter", Policy.NUMAPTE, False),
                                 ("numapte", Policy.NUMAPTE, True)]:
-            r = run_one(pol, filt, n, 40 if quick else 120)
+            r = run_one(pol, filt, n, (40 if quick else 120) * scale,
+                        STATIC_PAGES * scale)
             if base is None:
                 base = r
             sd_total = r["shootdown_ipis"]
@@ -72,7 +74,7 @@ def main(quick: bool = False) -> None:
                 "thr_vs_linux": round(r["req_per_s"] / base["req_per_s"], 3),
                 "shootdown_reduction": round(
                     1 - sd_total / max(base["shootdown_ipis"], 1), 3)})
-    csv("fig13_webserver", rows)
+    return csv("fig13_webserver", rows)
 
 
 if __name__ == "__main__":

@@ -23,10 +23,17 @@ STORE_PAGES_PER_WORKER = 512      # 2MB slab per worker (scaled from 10GB)
 META_PAGES = 4                    # protected critical section per worker
 GET_WORK_NS = 1_500.0
 SET_WORK_NS = 2_500.0
+SEGMENT_ROUNDS = 16               # GETs are batched per worker per segment
 
 
 def run_one(policy: Policy, filt: bool, n_threads: int,
-            ops_per_thread: int = 400) -> dict:
+            ops_per_thread: int = 400,
+            store_pages: int = STORE_PAGES_PER_WORKER) -> dict:
+    """Ops run in segments of SEGMENT_ROUNDS rounds: within a segment every
+    worker's GETs go through the batch engine first, then the segment's SETs
+    (mprotect flips + writes) run in round order.  Reordering reads ahead of
+    writes inside a segment only grows the sharer masks a SET's shootdown
+    must honor, so the reported numaPTE filtering is conservative."""
     sim = NumaSim(PAPER_4SOCKET, policy, tlb_filter=filt, prefetch_degree=9)
     topo = sim.topo
     workers, slabs, metas = [], [], []
@@ -35,33 +42,45 @@ def run_one(policy: Policy, filt: bool, n_threads: int,
         cpu = node * topo.hw_threads_per_node + i // topo.n_nodes
         t = sim.spawn_thread(cpu)
         workers.append(t)
-        slab = sim.mmap(t, STORE_PAGES_PER_WORKER)
-        for v in range(slab.start_vpn, slab.end_vpn, 2):
-            sim.touch(t, v, write=True)
+        slab = sim.mmap(t, store_pages)
+        sim.touch_batch(t, np.arange(slab.start_vpn, slab.end_vpn, 2),
+                        write_mask=True)
         meta = sim.mmap(t, META_PAGES)
-        for v in range(meta.start_vpn, meta.end_vpn):
-            sim.touch(t, v, write=True)
+        sim.touch_batch(t, np.arange(meta.start_vpn, meta.end_vpn),
+                        write_mask=True)
         sim.mprotect(t, meta.start_vpn, META_PAGES, PERM_R)
         slabs.append(slab)
         metas.append(meta)
     rng = np.random.default_rng(11)
     t_before = {t: sim.thread_time_ns(t) for t in workers}
     c_before = sim.counters.snapshot()
-    for op in range(ops_per_thread):
+    n_ops = ops_per_thread
+    is_set = rng.random((n_ops, n_threads)) >= 0.9
+    get_j = rng.integers(0, n_threads, size=(n_ops, n_threads))
+    get_off = rng.integers(0, store_pages, size=(n_ops, n_threads))
+    set_off = rng.integers(0, store_pages, size=(n_ops, n_threads))
+    set_prot = rng.random((n_ops, n_threads)) < 0.3
+    slab_starts = np.array([s.start_vpn for s in slabs], dtype=np.int64)
+    for seg0 in range(0, n_ops, SEGMENT_ROUNDS):
+        seg = slice(seg0, min(seg0 + SEGMENT_ROUNDS, n_ops))
         for i, t in enumerate(workers):
-            if rng.random() < 0.9:       # GET: read any worker's slab
-                j = int(rng.integers(0, n_threads))
-                off = int(rng.integers(0, STORE_PAGES_PER_WORKER))
-                sim.touch(t, slabs[j].start_vpn + off)
-                sim.threads[t].time_ns += GET_WORK_NS
-            else:                         # SET: protect-write-unprotect
+            gm = ~is_set[seg, i]
+            n_gets = int(np.count_nonzero(gm))
+            if n_gets:                   # GET: read any worker's slab
+                vpns = slab_starts[get_j[seg, i][gm]] + get_off[seg, i][gm]
+                sim.touch_batch(t, vpns)
+                sim.threads[t].time_ns += GET_WORK_NS * n_gets
+        for op in range(seg.start, seg.stop):
+            for i, t in enumerate(workers):
+                if not is_set[op, i]:
+                    continue              # SET: protect-write-unprotect
                 meta = metas[i]
                 sim.mprotect(t, meta.start_vpn, META_PAGES, PERM_RW)
                 sim.touch(t, meta.start_vpn, write=True)
-                off = int(rng.integers(0, STORE_PAGES_PER_WORKER))
+                off = int(set_off[op, i])
                 sim.touch(t, slabs[i].start_vpn + off, write=True)
                 sim.mprotect(t, meta.start_vpn, META_PAGES, PERM_R)
-                if rng.random() < 0.3:
+                if set_prot[op, i]:
                     # some SETs protect the stored page itself; the store is
                     # read-shared, so these shootdowns cannot be filtered
                     page = slabs[i].start_vpn + off
@@ -78,7 +97,7 @@ def run_one(policy: Policy, filt: bool, n_threads: int,
             "ipis_filtered": d.ipis_filtered}
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, scale: int = 1) -> list:
     rows = []
     counts = [8] if quick else [4, 8, 16, 32]
     for n in counts:
@@ -86,7 +105,8 @@ def main(quick: bool = False) -> None:
         for name, pol, filt in [("linux", Policy.LINUX, False),
                                 ("mitosis", Policy.MITOSIS, False),
                                 ("numapte", Policy.NUMAPTE, True)]:
-            r = run_one(pol, filt, n, 150 if quick else 400)
+            r = run_one(pol, filt, n, (150 if quick else 400) * scale,
+                        STORE_PAGES_PER_WORKER * scale)
             if base is None:
                 base = r
             rows.append({
@@ -95,7 +115,7 @@ def main(quick: bool = False) -> None:
                 "shootdown_reduction": round(
                     1 - r["shootdown_ipis"] / max(base["shootdown_ipis"], 1),
                     3)})
-    csv("fig14_memcached", rows)
+    return csv("fig14_memcached", rows)
 
 
 if __name__ == "__main__":

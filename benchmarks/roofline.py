@@ -13,7 +13,7 @@ from .common import csv
 ART_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False) -> list:
     rows = []
     for path in sorted(ART_DIR.glob("*.json")):
         d = json.loads(path.read_text())
@@ -32,7 +32,7 @@ def main(quick: bool = False) -> None:
         })
     if not rows:
         rows = [{"note": "no dry-run artifacts; run repro.launch.dryrun"}]
-    csv("roofline", rows)
+    return csv("roofline", rows)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,33 @@
 """Benchmark harness: one function per paper table/figure.
 
-``python -m benchmarks.run [--quick] [--only NAME]``
-prints ``name,key=value,...`` CSV rows for every reproduced artifact.
+``python -m benchmarks.run [--quick] [--only NAME] [--scale N]
+                           [--outdir DIR] [--strict]``
+
+prints ``name,key=value,...`` CSV rows for every reproduced artifact and
+writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
+``bench_out/``) so the perf trajectory is machine-readable and CI can
+archive it.  JSON schema (version 1):
+
+    {"schema_version": 1, "name": str, "quick": bool, "scale": int,
+     "elapsed_s": float, "rows": [ {column: value, ...}, ... ],
+     "error": str | null}
+
+``rows`` carries everything the CSV shows (per-policy modeled times,
+counters, speedups) plus JSON-only nested fields such as raw counter
+dicts.  ``--scale`` multiplies dataset/iteration sizes for the benchmarks
+that support it (the batch-engine ones), letting access streams reach
+paper scale.  A benchmark that raises is recorded in its JSON ``error``
+field and the harness continues, unless ``--strict``.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import time
+from typing import Dict, Iterable, Optional
 
 from . import (fig01_mprotect, fig02_local_remote, fig03_placement,
                fig06_prefetch, fig07_migration, fig08_apps, fig09_mm_ops,
@@ -30,18 +50,82 @@ BENCHES = {
     "roofline": roofline.main,
 }
 
+SCHEMA_VERSION = 1
+
+
+def _jsonable(obj):
+    """json.dump default hook: NumPy scalars -> Python scalars."""
+    if hasattr(obj, "item"):
+        return obj.item()
+    return str(obj)
+
+
+def run_benchmarks(names: Optional[Iterable[str]] = None, *,
+                   quick: bool = False, scale: int = 1,
+                   outdir: str = "bench_out",
+                   strict: bool = False) -> Dict[str, str]:
+    """Run benchmarks, print their CSV, and write BENCH_<name>.json files.
+
+    Returns {benchmark name: json path}.  Used by __main__, CI and the
+    bench smoke test."""
+    names = list(names) if names is not None else list(BENCHES)
+    os.makedirs(outdir, exist_ok=True)
+    written: Dict[str, str] = {}
+    for name in names:
+        fn = BENCHES[name]
+        kwargs = {"quick": quick}
+        if "scale" in inspect.signature(fn).parameters:
+            kwargs["scale"] = scale
+        print(f"# --- {name} ---", file=sys.stderr)
+        t0 = time.time()
+        rows, error = None, None
+        try:
+            rows = fn(**kwargs)
+        except Exception as exc:                    # noqa: BLE001
+            if strict:
+                raise
+            error = f"{type(exc).__name__}: {exc}"
+            print(f"# {name} FAILED: {error}", file=sys.stderr)
+        elapsed = time.time() - t0
+        payload = {
+            "schema_version": SCHEMA_VERSION,
+            "name": name,
+            "quick": quick,
+            "scale": scale,
+            "elapsed_s": round(elapsed, 3),
+            "rows": rows or [],
+            "error": error,
+        }
+        path = os.path.join(outdir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, default=_jsonable)
+            f.write("\n")
+        written[name] = path
+        print(f"# {name} done in {elapsed:.1f}s -> {path}", file=sys.stderr)
+    return written
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", choices=list(BENCHES))
+    def positive_int(v: str) -> int:
+        n = int(v)
+        if n < 1:
+            raise argparse.ArgumentTypeError("--scale must be >= 1")
+        return n
+
+    ap.add_argument("--scale", type=positive_int, default=1,
+                    help="dataset/iteration multiplier for batch-engine "
+                         "benchmarks (4 = paper-trajectory scale check)")
+    ap.add_argument("--outdir", default="bench_out",
+                    help="directory for BENCH_<name>.json artifacts")
+    ap.add_argument("--strict", action="store_true",
+                    help="re-raise benchmark exceptions instead of "
+                         "recording them in the JSON artifact")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(BENCHES)
-    for name in names:
-        t0 = time.time()
-        print(f"# --- {name} ---", file=sys.stderr)
-        BENCHES[name](quick=args.quick)
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    run_benchmarks([args.only] if args.only else None, quick=args.quick,
+                   scale=args.scale, outdir=args.outdir, strict=args.strict)
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ from repro.pagedpt import BlockTableSpec, eager_sync_bytes, numapte_fetch_bytes
 from .common import csv
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False) -> list:
     rows = []
     for mode in ("local", "eager", "numapte"):
         r = serve("qwen3_14b", n_requests=8 if quick else 24,
@@ -29,7 +29,7 @@ def main(quick: bool = False) -> None:
                  "numapte": numapte_fetch_bytes(spec),
                  "ratio": round(eager_sync_bytes(spec)
                                 / numapte_fetch_bytes(spec), 1)})
-    csv("serving_coherence", rows)
+    return csv("serving_coherence", rows)
 
 
 if __name__ == "__main__":

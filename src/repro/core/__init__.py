@@ -10,6 +10,7 @@ Two cooperating implementations live here:
     (block tables with per-pod replicas and sharer masks) and is consumed by
     the serving runtime and the Pallas paged-attention kernel.
 """
+from .batch import access_stream, touch_batch
 from .costmodel import CostModel
 from .malloc import MallocModel, gamma_sizes_pages
 from .pagetable import (PERM_R, PERM_RW, PERM_W, PERM_X, PTES_PER_TABLE,
@@ -23,6 +24,7 @@ from .workloads import APPS, AppSpec, build_app, run_app, run_exec_phase
 
 __all__ = [
     "APPS", "AppSpec", "CostModel", "Counters", "LeafTable", "MallocModel",
+    "access_stream", "touch_batch",
     "NumaSim", "NumaTopology", "PAPER_4SOCKET", "PAPER_8SOCKET",
     "PERM_R", "PERM_RW", "PERM_W", "PERM_X", "PTES_PER_TABLE",
     "PageTableStore", "Policy", "SegfaultError", "TLB", "TPU_2POD", "Thread",

@@ -212,6 +212,16 @@ class NumaSim:
         for vpn in vpns:
             touch(tid, vpn, write)
 
+    def touch_batch(self, tid: int, vpns, write_mask=None, *,
+                    return_frames: bool = False):
+        """Vectorized equivalent of calling ``touch`` for every vpn in
+        order (see ``repro.core.batch``).  Counters and modeled nanoseconds
+        are byte-identical to the scalar loop; ``write_mask`` mirrors the
+        scalar ``write`` flag (which does not influence classification)."""
+        from .batch import touch_batch as _touch_batch
+        return _touch_batch(self, tid, vpns, write_mask,
+                            return_frames=return_frames)
+
     def _count_data(self, node: int, vpn: int, tid: int) -> None:
         entry = self._oracle.get(vpn)
         if entry is None:

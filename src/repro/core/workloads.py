@@ -88,11 +88,14 @@ class AppLayout:
 
 def build_app(sim: NumaSim, spec: AppSpec, *,
               pages_per_gb: int = PAGES_PER_GB_DEFAULT,
-              touch_stride: int = 1) -> Tuple[AppLayout, float]:
+              touch_stride: int = 1,
+              engine: str = "batch") -> Tuple[AppLayout, float]:
     """mmap + first-touch the dataset (the paper's loading phase).
 
     Returns (layout, loading_time_ns) where loading time is the sum of the
-    loading threads' modeled time for this phase.
+    loading threads' modeled time for this phase.  ``engine="batch"`` runs
+    the first-touch streams through the vectorized engine (byte-identical
+    counters/times); ``engine="scalar"`` keeps the per-page reference loop.
     """
     n_nodes = sim.topo.n_nodes
     threads = {node: sim.spawn_thread(node * sim.topo.hw_threads_per_node)
@@ -125,11 +128,13 @@ def build_app(sim: NumaSim, spec: AppSpec, *,
     for region in regions:
         if spec.loader == "partitioned" or region.kind != "all":
             tid = threads[region.home_node]
-            for vpn in range(region.start_vpn,
-                             region.start_vpn + region.n_pages, touch_stride):
-                sim.touch(tid, vpn, write=True)
         else:  # 'node0' loads even shared data
             tid = threads[0]
+        if engine == "batch":
+            sim.touch_batch(tid, np.arange(
+                region.start_vpn, region.start_vpn + region.n_pages,
+                touch_stride, dtype=np.int64), write_mask=True)
+        else:
             for vpn in range(region.start_vpn,
                              region.start_vpn + region.n_pages, touch_stride):
                 sim.touch(tid, vpn, write=True)
@@ -139,11 +144,52 @@ def build_app(sim: NumaSim, spec: AppSpec, *,
     return AppLayout(spec, regions, threads, total_pages), loading_ns
 
 
+def _exec_stream_vpns(kinds, kind_draw, offs, node, n_nodes,
+                      priv, pair, shared):
+    """Vectorized replica of the scalar region-selection logic below: the
+    produced vpn sequence is element-for-element identical.  Returns None
+    for layouts the closed form does not cover (caller falls back)."""
+    vpns = np.empty(offs.size, dtype=np.int64)
+    for k_i, kind in enumerate(kinds):
+        m = kind_draw == k_i
+        if not m.any():
+            continue
+        o = offs[m]
+        if kind == "private":
+            r = priv[node]
+            vpns[m] = r.start_vpn + (o * r.n_pages).astype(np.int64) % r.n_pages
+        elif kind == "pair":
+            nxt = (node + 1) % n_nodes
+            if node not in pair or nxt not in pair:
+                return None
+            own, nb = pair[node], pair[nxt]
+            # accesses alternate between own and neighbour's pair region
+            alt = ((o * 1024).astype(np.int64) & 1).astype(bool)
+            start = np.where(alt, nb.start_vpn, own.start_vpn)
+            npag = np.where(alt, nb.n_pages, own.n_pages)
+            vpns[m] = start + (o * npag).astype(np.int64) % npag
+        else:
+            n_sh = len(shared)
+            s_idx = (o * n_sh).astype(np.int64) % n_sh
+            starts = np.array([r.start_vpn for r in shared],
+                              dtype=np.int64)[s_idx]
+            npag = np.array([r.n_pages for r in shared],
+                            dtype=np.int64)[s_idx]
+            vpns[m] = starts + (o * npag).astype(np.int64) % npag
+    return vpns
+
+
 def run_exec_phase(sim: NumaSim, layout: AppLayout, *,
                    accesses_per_thread: int = 50_000,
-                   seed: int = 0) -> float:
+                   seed: int = 0,
+                   engine: str = "batch") -> float:
     """Execution phase: every node's worker issues an access stream with the
-    app's sharing profile.  Returns summed modeled thread time (ns)."""
+    app's sharing profile.  Returns summed modeled thread time (ns).
+
+    The stream (rng draws and region selection) is identical under both
+    engines; ``engine="batch"`` assembles it as one array per thread and
+    runs it through ``NumaSim.touch_batch``, which is differentially tested
+    to be byte-identical to the scalar loop."""
     spec = layout.spec
     rng = np.random.default_rng(seed)
     n_nodes = sim.topo.n_nodes
@@ -161,6 +207,13 @@ def run_exec_phase(sim: NumaSim, layout: AppLayout, *,
         kind_draw = rng.choice(len(kinds), size=accesses_per_thread, p=probs)
         offs = rng.random(accesses_per_thread)
         writes = rng.random(accesses_per_thread) >= spec.read_frac
+        vpns = None
+        if engine == "batch":
+            vpns = _exec_stream_vpns(kinds, kind_draw, offs, node, n_nodes,
+                                     priv, pair, shared)
+        if vpns is not None:
+            sim.touch_batch(tid, vpns, writes)
+            continue
         for k_i, off, wr in zip(kind_draw, offs, writes):
             kind = kinds[k_i]
             if kind == "private":
@@ -187,15 +240,16 @@ def run_app(policy: Policy, spec: AppSpec, topo, *,
             pages_per_gb: int = PAGES_PER_GB_DEFAULT,
             accesses_per_thread: int = 50_000,
             touch_stride: int = 1,
-            seed: int = 0):
+            seed: int = 0,
+            engine: str = "batch"):
     """Build + run one app under one policy.  Returns a result dict."""
     sim = NumaSim(topo, policy, prefetch_degree=prefetch_degree,
                   tlb_filter=tlb_filter)
     layout, loading_ns = build_app(sim, spec, pages_per_gb=pages_per_gb,
-                                   touch_stride=touch_stride)
+                                   touch_stride=touch_stride, engine=engine)
     exec_ns = run_exec_phase(sim, layout,
                              accesses_per_thread=accesses_per_thread,
-                             seed=seed)
+                             seed=seed, engine=engine)
     return {
         "app": spec.name,
         "policy": policy.value,

@@ -3,4 +3,7 @@ real single CPU device; only launch/dryrun.py forces 512 host devices."""
 import os
 import sys
 
+# src/ for the repro package; repo root so `benchmarks` (the harness the
+# bench smoke test drives) is importable regardless of invocation cwd.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

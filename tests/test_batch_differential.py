@@ -1,0 +1,182 @@
+"""Differential tests: the batched access engine vs the scalar `touch` loop.
+
+Identical streams must leave the two simulators in byte-identical states —
+every `Counters` field, every thread's modeled nanoseconds (exact float
+equality, no tolerance), TLB contents *and insertion order* (FIFO state),
+page-table replicas/sharer masks, and the translation oracle — across all
+three policies, with and without prefetch, interference (which exercises
+the non-integral-cost sequential fallback), and mid-stream mm-ops.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import NumaSim, NumaTopology, Policy, SegfaultError
+from repro.core.pagetable import PERM_R
+
+TOPO = NumaTopology(n_nodes=4, cores_per_node=4, threads_per_core=1)
+
+POLICIES = [Policy.LINUX, Policy.MITOSIS, Policy.NUMAPTE]
+
+
+def _build(policy, prefetch, interference=()):
+    sim = NumaSim(TOPO, policy, prefetch_degree=prefetch, tlb_entries=96,
+                  interference_nodes=interference)
+    tids = [sim.spawn_thread(n * TOPO.hw_threads_per_node)
+            for n in range(TOPO.n_nodes)]
+    return sim, tids
+
+
+def _table_state(sim):
+    return {ti: (t.owner, t.sharers,
+                 {m: {i: (p.frame, p.frame_node, p.perms)
+                      for i, p in cp.items()}
+                  for m, cp in t.copies.items()})
+            for ti, t in sim.store.tables.items()}
+
+
+def _assert_identical(a: NumaSim, b: NumaSim, tag=""):
+    assert a.counters == b.counters, f"{tag}: counters diverged"
+    for tid in a.threads:
+        # byte-identical modeled time: exact float equality, on purpose
+        assert a.threads[tid].time_ns == b.threads[tid].time_ns, \
+            f"{tag}: thread {tid} time {a.threads[tid].time_ns!r} " \
+            f"!= {b.threads[tid].time_ns!r}"
+        assert a.threads[tid].ipis_received == b.threads[tid].ipis_received
+    assert a._oracle == b._oracle, f"{tag}: oracle diverged"
+    for cpu in set(a.tlbs) | set(b.tlbs):
+        assert list(a.tlbs[cpu].entries.items()) == \
+            list(b.tlbs[cpu].entries.items()), \
+            f"{tag}: TLB state/order diverged on cpu {cpu}"
+    assert _table_state(a) == _table_state(b), f"{tag}: tables diverged"
+
+
+def _mk_streams(rng, vmas):
+    """Populate, strided, random cross-node, shuffled multi-VMA, and a
+    hot (TLB-hit + eviction churn) stream."""
+    streams = [
+        (0, np.arange(vmas[0].start_vpn, vmas[0].end_vpn)),
+        (1, np.arange(vmas[1].start_vpn, vmas[1].end_vpn, 3)),
+    ]
+    for _ in range(6):
+        ti = int(rng.integers(0, TOPO.n_nodes))
+        pick = vmas[int(rng.integers(0, len(vmas)))]
+        streams.append(
+            (ti, pick.start_vpn + rng.integers(0, pick.n_pages, size=400)))
+    big = np.concatenate([v.start_vpn + rng.integers(0, v.n_pages, 150)
+                          for v in vmas])
+    rng.shuffle(big)
+    streams.append((2, big))
+    streams.append(
+        (3, vmas[0].start_vpn + rng.integers(0, 120, size=1500)))
+    return streams
+
+
+@pytest.mark.parametrize("prefetch", [0, 9])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batch_matches_scalar_byte_identical(policy, prefetch):
+    rng = np.random.default_rng(1234)
+    sa, ta = _build(policy, prefetch)
+    sb, tb = _build(policy, prefetch)
+    vmas = []
+    for owner_i in (0, 1, 2):
+        for _ in range(2):
+            n = int(rng.integers(64, 1400))
+            va = sa.mmap(ta[owner_i], n)
+            vb = sb.mmap(tb[owner_i], n)
+            assert (va.start_vpn, va.end_vpn) == (vb.start_vpn, vb.end_vpn)
+            vmas.append(va)
+    for si, (ti, vpns) in enumerate(_mk_streams(rng, vmas)):
+        wm = rng.random(vpns.size) < 0.3
+        sa.touch_batch(ta[ti], vpns, wm)
+        for v, w in zip(vpns.tolist(), wm.tolist()):
+            sb.touch(tb[ti], v, w)
+        _assert_identical(sa, sb, f"{policy}/pf{prefetch}/stream{si}")
+    # interleave mm-ops, then keep streaming: state must stay in lockstep
+    sa.mprotect(ta[0], vmas[1].start_vpn, 32, PERM_R)
+    sb.mprotect(tb[0], vmas[1].start_vpn, 32, PERM_R)
+    sa.munmap(ta[0], vmas[0].start_vpn, vmas[0].n_pages // 2)
+    sb.munmap(tb[0], vmas[0].start_vpn, vmas[0].n_pages // 2)
+    tail = vmas[1].start_vpn + rng.integers(0, vmas[1].n_pages, size=600)
+    sa.touch_batch(ta[3], tail)
+    for v in tail.tolist():
+        sb.touch(tb[3], v)
+    _assert_identical(sa, sb, f"{policy}/pf{prefetch}/post-mmops")
+    sa.check_invariants()
+    sb.check_invariants()
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batch_matches_scalar_with_interference(policy):
+    """Interference multiplies remote charges by a non-integer factor,
+    forcing the engine's sequential (charge-order-preserving) path."""
+    rng = np.random.default_rng(7)
+    sa, ta = _build(policy, 9, interference=(1,))
+    sb, tb = _build(policy, 9, interference=(1,))
+    va = sa.mmap(ta[1], 900)
+    sb.mmap(tb[1], 900)
+    seq = np.arange(va.start_vpn, va.end_vpn)
+    sa.touch_batch(ta[1], seq, True)
+    for v in seq.tolist():
+        sb.touch(tb[1], v, True)
+    cross = va.start_vpn + rng.integers(0, 900, size=3000)
+    sa.touch_batch(ta[0], cross)
+    for v in cross.tolist():
+        sb.touch(tb[0], v)
+    _assert_identical(sa, sb, f"{policy}/interference")
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batch_returns_scalar_frames(policy):
+    rng = np.random.default_rng(5)
+    sa, ta = _build(policy, 9)
+    sb, tb = _build(policy, 9)
+    va = sa.mmap(ta[0], 700)
+    sb.mmap(tb[0], 700)
+    vpns = np.concatenate([np.arange(va.start_vpn, va.end_vpn),
+                           va.start_vpn + rng.integers(0, 700, size=900)])
+    got = sa.touch_batch(ta[2], vpns, return_frames=True)
+    want = [sb.touch(tb[2], v) for v in vpns.tolist()]
+    assert got.tolist() == want
+    _assert_identical(sa, sb, f"{policy}/frames")
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batch_segfault_leaves_scalar_partial_state(policy):
+    """A mid-batch unmapped access raises SegfaultError with exactly the
+    partial counters/times/TLB state the scalar loop accumulates."""
+    sa, ta = _build(policy, 9)
+    sb, tb = _build(policy, 9)
+    va = sa.mmap(ta[0], 256)
+    sb.mmap(tb[0], 256)
+    hole = va.end_vpn + 10_000  # never mapped
+    vpns = np.concatenate([np.arange(va.start_vpn, va.start_vpn + 100),
+                           np.asarray([hole]),
+                           np.arange(va.start_vpn + 100, va.end_vpn)])
+    with pytest.raises(SegfaultError):
+        sa.touch_batch(ta[0], vpns)
+    with pytest.raises(SegfaultError):
+        for v in vpns.tolist():
+            sb.touch(tb[0], v)
+    _assert_identical(sa, sb, f"{policy}/segfault")
+
+
+def test_access_stream_chunks_match_scalar():
+    from repro.core import access_stream
+    sa, ta = _build(Policy.NUMAPTE, 9)
+    sb, tb = _build(Policy.NUMAPTE, 9)
+    va = sa.mmap(ta[0], 600)
+    sb.mmap(tb[0], 600)
+    rng = np.random.default_rng(3)
+    chunks = [(ta[0], np.arange(va.start_vpn, va.end_vpn)),
+              (ta[1], va.start_vpn + rng.integers(0, 600, size=800)),
+              (ta[2], va.start_vpn + rng.integers(0, 600, size=800))]
+    deltas = access_stream(sa, chunks)
+    for tid, vpns in chunks:
+        b_tid = tb[ta.index(tid)]
+        t0 = sb.threads[b_tid].time_ns
+        for v in vpns.tolist():
+            sb.touch(b_tid, v)
+        assert deltas[tid] == sb.threads[b_tid].time_ns - t0
+    _assert_identical(sa, sb, "access_stream")

@@ -1,0 +1,63 @@
+"""Bench-gate smoke test: run two quick benchmarks in-process through the
+harness, validate the BENCH_<name>.json schema, and pin the headline
+paper claim the CI bench job guards (Fig 13: numaPTE's sharer-filtered
+shootdowns beat Linux webserver throughput)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.run import SCHEMA_VERSION, run_benchmarks
+
+SMOKE_BENCHES = ["fig06_prefetch", "fig13_webserver"]
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_bench_json_schema(tmp_path):
+    written = run_benchmarks(SMOKE_BENCHES, quick=True,
+                             outdir=str(tmp_path), strict=True)
+    assert sorted(written) == sorted(SMOKE_BENCHES)
+    for name, path in written.items():
+        d = _load(path)
+        assert d["schema_version"] == SCHEMA_VERSION
+        assert d["name"] == name
+        assert d["quick"] is True
+        assert d["scale"] == 1
+        assert d["error"] is None
+        assert d["elapsed_s"] >= 0
+        assert isinstance(d["rows"], list) and d["rows"], name
+        for row in d["rows"]:
+            assert isinstance(row, dict) and row
+        # artifacts must round-trip through plain JSON types
+        json.dumps(d)
+
+
+def test_fig13_numapte_beats_linux(tmp_path):
+    written = run_benchmarks(["fig13_webserver"], quick=True,
+                             outdir=str(tmp_path), strict=True)
+    rows = _load(written["fig13_webserver"])["rows"]
+    by_threads = {}
+    for row in rows:
+        by_threads.setdefault(row["threads"], {})[row["policy"]] = row
+    assert by_threads, "fig13 produced no rows"
+    for n, pol in by_threads.items():
+        assert {"linux", "numapte"} <= set(pol), f"missing policies at {n}"
+        assert pol["numapte"]["req_per_s"] >= pol["linux"]["req_per_s"], \
+            f"NUMAPTE below LINUX webserver throughput at {n} threads"
+        # the win must come with a real shootdown reduction
+        assert pol["numapte"]["shootdown_ipis"] <= \
+            pol["linux"]["shootdown_ipis"]
+
+
+def test_fig6_prefetch_rows_consistent(tmp_path):
+    written = run_benchmarks(["fig06_prefetch"], quick=True,
+                             outdir=str(tmp_path), strict=True)
+    rows = _load(written["fig06_prefetch"])["rows"]
+    cfg = {r["config"]: r for r in rows}
+    assert "mitosis" in cfg and "linux" in cfg
+    # degree-9 prefetch recovers the laziness penalty (Fig 6 claim)
+    assert cfg["numapte-d9"]["vs_mitosis"] < 1.1
+    assert cfg["numapte-d0"]["vs_mitosis"] > cfg["numapte-d9"]["vs_mitosis"]

@@ -13,6 +13,12 @@ are a subset of the unfiltered target set.
 """
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra "
+    "(pip install -e .[test])")
+
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 

@@ -2,11 +2,16 @@
 hypothesis sequences over the serving protocol)."""
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra "
+    "(pip install -e .[test])")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import HealthCheck, given, settings
 
 from repro.pagedpt import (BlockTableSpec, HostBlockManager, lookup_blocks)
