@@ -20,7 +20,8 @@ def csv(name: str, rows: List[Dict]) -> List[Dict]:
     return rows
 
 
-def make_spinners(sim: NumaSim, per_socket: int, skip_cpu0: bool = True):
+def make_spinners(sim: NumaSim, per_socket: int, skip_cpu0: bool = True,
+                  engine: str = "batch"):
     """Spinning threads on every socket (the Fig 1/10 workload)."""
     topo = sim.topo
     tids = []
@@ -28,17 +29,24 @@ def make_spinners(sim: NumaSim, per_socket: int, skip_cpu0: bool = True):
         base = node * topo.hw_threads_per_node
         for i in range(per_socket):
             cpu = base + i + (1 if (skip_cpu0 and node == 0) else 0)
-            t = sim.spawn_thread(cpu)
-            v = sim.mmap(t, 1)
-            sim.touch(t, v.start_vpn, write=True)
-            tids.append(t)
+            tids.append(sim.spawn_thread(cpu))
+    vmas = sim.apply_mm_ops([("mmap", t, 1) for t in tids], engine=engine)
+    sim.apply_mm_ops([("touch", t, [v.start_vpn], True)
+                      for t, v in zip(tids, vmas)], engine=engine)
     return tids
 
 
-def mprotect_loop(sim: NumaSim, tid: int, vpn: int, iters: int) -> float:
+def mprotect_loop(sim: NumaSim, tid: int, vpn: int, iters: int,
+                  engine: str = "batch") -> float:
+    """Fig 1's alternating-permission mprotect loop, on either engine."""
     t0 = sim.thread_time_ns(tid)
-    for i in range(iters):
-        sim.mprotect(tid, vpn, 1, PERM_R if i % 2 == 0 else PERM_RW)
+    if engine == "scalar":
+        for i in range(iters):
+            sim.mprotect(tid, vpn, 1, PERM_R if i % 2 == 0 else PERM_RW)
+    else:
+        sim.mprotect_batch(
+            tid, [vpn] * iters, 1,
+            [PERM_R if i % 2 == 0 else PERM_RW for i in range(iters)])
     return (sim.thread_time_ns(tid) - t0) / iters
 
 

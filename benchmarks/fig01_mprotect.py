@@ -3,6 +3,11 @@
 Paper claims reproduced: Linux degrades up to ~40x at full spin;
 Mitosis adds ~25% at zero spinners (replica coherence); numaPTE with the
 TLB-shootdown filter stays ~flat.  Values normalized to Linux/0-spinners.
+
+Runs on the batched mm-op engine (``NumaSim.mprotect_batch``) by default —
+byte-identical counters/times to the scalar loop (differentially tested) —
+so ``--scale`` can push the iteration count toward paper scale; pass
+``engine="scalar"`` for the per-op reference path.
 """
 from __future__ import annotations
 
@@ -13,27 +18,28 @@ from .common import csv, make_spinners, mprotect_loop, policies
 
 
 def run_one(policy: Policy, tlb_filter: bool, spin: int,
-            iters: int = 200) -> dict:
+            iters: int = 200, engine: str = "batch") -> dict:
     sim = NumaSim(PAPER_8SOCKET, policy, prefetch_degree=0,
                   tlb_filter=tlb_filter)
     main = sim.spawn_thread(cpu=0)
-    make_spinners(sim, spin)
+    make_spinners(sim, spin, engine=engine)
     vma = sim.mmap(main, 1)
     sim.touch(main, vma.start_vpn, write=True)
-    ns = mprotect_loop(sim, main, vma.start_vpn, iters)
+    ns = mprotect_loop(sim, main, vma.start_vpn, iters, engine=engine)
     c = sim.counters
     sim.check_invariants()
     return {"ns_per_op": round(ns, 1), "ipis_local": c.ipis_local,
             "ipis_remote": c.ipis_remote, "ipis_filtered": c.ipis_filtered}
 
 
-def main(quick: bool = False) -> list:
+def main(quick: bool = False, scale: int = 1) -> list:
+    iters = 200 * scale
     spins = [0, 4, 18, 35] if quick else [0, 1, 2, 4, 9, 18, 27, 35]
-    base = run_one(Policy.LINUX, False, 0)["ns_per_op"]
+    base = run_one(Policy.LINUX, False, 0, iters)["ns_per_op"]
     rows = []
     for name, policy, filt in policies():
         for spin in spins:
-            r = run_one(policy, filt, spin)
+            r = run_one(policy, filt, spin, iters)
             rows.append({"policy": name, "spin_per_socket": spin,
                          "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
                          **r})

@@ -4,8 +4,15 @@ No spinning threads.  Paper claims: mmap is largely policy-insensitive;
 mprotect/munmap pay Mitosis's replica-coherence cost (which grows with the
 range), while numaPTE avoids it entirely; at 512KB Mitosis *slows down*
 vs Linux while numaPTE speeds up (Fig 2b).
+
+The mmap/munmap workload is phased (mmap all, touch all, munmap all) and
+runs on the batched mm-op engine by default — byte-identical to the scalar
+reference (``engine="scalar"``) — so ``--scale`` raises the iteration
+count without leaving the per-op cost regime the figure measures.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from repro.core import NumaSim, PAPER_8SOCKET
 from repro.core.pagetable import PERM_R, PERM_RW, Policy
@@ -14,41 +21,58 @@ from .common import csv, policies
 
 
 def run_one(policy: Policy, filt: bool, op: str, n_pages: int,
-            iters: int = 50) -> float:
+            iters: int = 50, engine: str = "batch") -> float:
     sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
     main = sim.spawn_thread(0)
-    total = 0.0
     if op == "mprotect":
         vma = sim.mmap(main, n_pages)
-        for v in range(vma.start_vpn, vma.end_vpn):
-            sim.touch(main, v, write=True)
-        t0 = sim.thread_time_ns(main)
-        for i in range(iters):
-            sim.mprotect(main, vma.start_vpn, n_pages,
-                         PERM_R if i % 2 == 0 else PERM_RW)
+        span = np.arange(vma.start_vpn, vma.end_vpn, dtype=np.int64)
+        perms = [PERM_R if i % 2 == 0 else PERM_RW for i in range(iters)]
+        if engine == "scalar":
+            for v in span.tolist():
+                sim.touch(main, v, write=True)
+            t0 = sim.thread_time_ns(main)
+            for p in perms:
+                sim.mprotect(main, vma.start_vpn, n_pages, p)
+        else:
+            sim.touch_batch(main, span, True)
+            t0 = sim.thread_time_ns(main)
+            sim.mprotect_batch(main, [vma.start_vpn] * iters, n_pages, perms)
         return (sim.thread_time_ns(main) - t0) / iters
-    for _ in range(iters):
+    if engine == "scalar":
         t0 = sim.thread_time_ns(main)
-        vma = sim.mmap(main, n_pages)
+        vmas = [sim.mmap(main, n_pages) for _ in range(iters)]
         t_mmap = sim.thread_time_ns(main) - t0
-        for v in range(vma.start_vpn, vma.end_vpn):
-            sim.touch(main, v, write=True)
+        for vma in vmas:
+            for v in range(vma.start_vpn, vma.end_vpn):
+                sim.touch(main, v, write=True)
         t0 = sim.thread_time_ns(main)
-        sim.munmap(main, vma.start_vpn, n_pages)
+        for vma in vmas:
+            sim.munmap(main, vma.start_vpn, n_pages)
         t_munmap = sim.thread_time_ns(main) - t0
-        total += t_mmap if op == "mmap" else t_munmap
-    return total / iters
+    else:
+        t0 = sim.thread_time_ns(main)
+        vmas = sim.mmap_batch(main, [n_pages] * iters)
+        t_mmap = sim.thread_time_ns(main) - t0
+        sim.touch_batch(main, np.concatenate(
+            [np.arange(v.start_vpn, v.end_vpn, dtype=np.int64)
+             for v in vmas]), True)
+        t0 = sim.thread_time_ns(main)
+        sim.munmap_batch(main, [v.start_vpn for v in vmas], n_pages)
+        t_munmap = sim.thread_time_ns(main) - t0
+    return (t_mmap if op == "mmap" else t_munmap) / iters
 
 
-def main(quick: bool = False) -> list:
+def main(quick: bool = False, scale: int = 1) -> list:
+    iters = 50 * scale
     sizes = {"4KB": 1, "128KB": 32, "512KB": 128} if quick else \
         {"4KB": 1, "64KB": 16, "128KB": 32, "512KB": 128, "2MB": 512}
     rows = []
     for op in ("mmap", "munmap", "mprotect"):
         for label, n in sizes.items():
-            base = run_one(Policy.LINUX, False, op, n)
+            base = run_one(Policy.LINUX, False, op, n, iters)
             for name, pol, filt in policies():
-                ns = run_one(pol, filt, op, n)
+                ns = run_one(pol, filt, op, n, iters)
                 rows.append({"op": op, "range": label, "policy": name,
                              "ns": round(ns), "vs_linux": round(ns / base, 3)})
     return csv("fig09_mm_ops", rows)

@@ -1,7 +1,17 @@
 """Fig 10: munmap(4KB) vs spinning threads.  Paper claims: Mitosis ~30x at
 full spin (23% at zero); numaPTE+filter lands at ~2.6x (local-socket IPIs
-only) and matches Linux at zero spinners."""
+only) and matches Linux at zero spinners.
+
+The workload is phased — mmap all ranges, first-touch them, then munmap
+them back-to-back (the measured phase) — identically under both engines;
+``engine="batch"`` runs each phase through the batched mm-op engine
+(``mmap_batch`` / ``touch_batch`` / ``munmap_batch``), which is
+byte-identical in counters and modeled time, so ``--scale`` can raise the
+munmap count toward paper scale.
+"""
 from __future__ import annotations
+
+import numpy as np
 
 from repro.core import NumaSim, PAPER_8SOCKET
 from repro.core.pagetable import Policy
@@ -9,30 +19,39 @@ from repro.core.pagetable import Policy
 from .common import csv, make_spinners, policies
 
 
-def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150) -> dict:
+def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150,
+            engine: str = "batch") -> dict:
     sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
     main = sim.spawn_thread(0)
-    make_spinners(sim, spin)
-    total = 0.0
-    for _ in range(iters):
-        vma = sim.mmap(main, 1)
-        sim.touch(main, vma.start_vpn, write=True)
+    make_spinners(sim, spin, engine=engine)
+    if engine == "scalar":
+        vmas = [sim.mmap(main, 1) for _ in range(iters)]
+        for v in vmas:
+            sim.touch(main, v.start_vpn, write=True)
         t0 = sim.thread_time_ns(main)
-        sim.munmap(main, vma.start_vpn, 1)
-        total += sim.thread_time_ns(main) - t0
+        for v in vmas:
+            sim.munmap(main, v.start_vpn, 1)
+    else:
+        vmas = sim.mmap_batch(main, [1] * iters)
+        starts = np.asarray([v.start_vpn for v in vmas], dtype=np.int64)
+        sim.touch_batch(main, starts, True)
+        t0 = sim.thread_time_ns(main)
+        sim.munmap_batch(main, starts, 1)
+    total = sim.thread_time_ns(main) - t0
     sim.check_invariants()
     c = sim.counters
     return {"ns_per_op": round(total / iters, 1),
             "ipis_filtered": c.ipis_filtered}
 
 
-def main(quick: bool = False) -> list:
+def main(quick: bool = False, scale: int = 1) -> list:
+    iters = 150 * scale
     spins = [0, 18, 35] if quick else [0, 1, 2, 4, 9, 18, 27, 35]
-    base = run_one(Policy.LINUX, False, 0)["ns_per_op"]
+    base = run_one(Policy.LINUX, False, 0, iters)["ns_per_op"]
     rows = []
     for name, policy, filt in policies():
         for spin in spins:
-            r = run_one(policy, filt, spin)
+            r = run_one(policy, filt, spin, iters)
             rows.append({"policy": name, "spin_per_socket": spin,
                          "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
                          **r})

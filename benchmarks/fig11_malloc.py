@@ -16,14 +16,15 @@ from .common import csv, policies
 
 
 def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
-            stateful: bool, iters: int = 150) -> float:
+            stateful: bool, iters: int = 150,
+            engine: str = "batch") -> float:
     topo = NumaTopology(n_nodes=max(2, n_sockets), cores_per_node=18)
     sim = NumaSim(topo, policy, tlb_filter=filt)
     rng = np.random.default_rng(7)
     workers = []
     for node in range(n_sockets):
         tid = sim.spawn_thread(node * topo.hw_threads_per_node)
-        workers.append((tid, MallocModel(sim, tid, flavor)))
+        workers.append((tid, MallocModel(sim, tid, flavor, engine=engine)))
     total = 0.0
     for tid, mall in workers:
         sizes = gamma_sizes_pages(rng, iters)
@@ -44,18 +45,20 @@ def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
     return total / (iters * len(workers))
 
 
-def main(quick: bool = False) -> list:
+def main(quick: bool = False, scale: int = 1) -> list:
+    iters = 150 * scale
     rows = []
     sockets = [2, 8] if quick else [1, 2, 4, 8]
     flavors = ["mmap", "glibc"] if quick else ["mmap", "glibc", "tcmalloc"]
     for stateful in (False, True):
         for flavor in flavors:
             for ns_ in sockets:
-                base = run_one(Policy.LINUX, False, ns_, flavor, stateful)
+                base = run_one(Policy.LINUX, False, ns_, flavor, stateful,
+                               iters)
                 for name, pol, filt in policies():
                     if quick and name == "numapte-nofilter":
                         continue
-                    v = run_one(pol, filt, ns_, flavor, stateful)
+                    v = run_one(pol, filt, ns_, flavor, stateful, iters)
                     rows.append({
                         "bench": "stateful" if stateful else "stateless",
                         "alloc": flavor, "sockets": ns_, "policy": name,

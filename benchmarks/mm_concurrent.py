@@ -1,0 +1,136 @@
+"""Concurrent mm-ops scenario: mixed mmap/touch/mprotect/munmap
+interleavings across threads, at scale.
+
+This is the regime the paper's application results live in — many threads
+on many sockets mutating the address space concurrently while spinners
+(the IPI victims) run everywhere — and the scenario the scalar per-op path
+cannot run at paper scale: each scalar munmap/mprotect pays an O(CPUs)
+shootdown scan plus per-target-thread IPI charges, so op counts in the
+tens of thousands take minutes.  The batched engine
+(``NumaSim.apply_mm_ops``) runs the identical op sequence with cached
+fan-out and grouped IPI accrual, byte-identical in counters and modeled
+time (differentially tested), which is what makes ``--scale`` practical.
+
+The op program is generated once per (seed, size) with a shadow address
+allocator that mirrors the simulator's mmap layout exactly, so every
+policy/engine replays the *same* interleaving.  Rows report modeled time,
+shootdown/IPI counters, and host wall seconds (the engine-speed story).
+
+An ``app-churn`` section additionally runs the Table-3 btree app through
+the ``workloads`` mprotect/teardown phases on the same engine.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import (APPS, NumaSim, PAPER_8SOCKET, Policy, run_app)
+from repro.core.pagetable import PERM_R, PERM_RW, next_table_aligned
+
+from .common import csv, make_spinners, policies
+
+#: op-kind mix: mm-heavy on purpose (the access path has its own figs)
+_MIX = (("mmap", 0.30), ("touch", 0.30), ("mprotect", 0.20),
+        ("munmap", 0.20))
+
+
+def build_program(n_threads: int, n_ops: int, seed: int,
+                  first_vpn: int) -> List[Tuple]:
+    """A reproducible interleaved op program over ``n_threads`` workers.
+
+    Addresses come from a shadow allocator that replicates the simulator's
+    mmap placement (round the end of each area up to a whole leaf table),
+    so the program can be materialized before any op runs and replayed
+    identically under every policy and engine.
+    """
+    rng = np.random.default_rng(seed)
+    kinds = [k for k, _ in _MIX]
+    probs = np.array([p for _, p in _MIX])
+    draws = rng.choice(len(kinds), size=n_ops, p=probs)
+    next_vpn = first_vpn
+    live: List[Tuple[int, int, int]] = []    # (tid, start, n_pages)
+    ops: List[Tuple] = []
+    for d in draws:
+        tid = int(rng.integers(0, n_threads))
+        kind = kinds[d]
+        if kind != "mmap" and not live:
+            kind = "mmap"
+        if kind == "mmap":
+            n = int(rng.integers(1, 257))
+            start = next_vpn
+            next_vpn = next_table_aligned(start + n)
+            live.append((tid, start, n))
+            ops.append(("mmap", tid, n))
+        elif kind == "touch":
+            _, start, n = live[int(rng.integers(0, len(live)))]
+            k = int(rng.integers(1, 1 + min(2 * n, 256)))
+            ops.append(("touch", tid,
+                        start + rng.integers(0, n, size=k), True))
+        elif kind == "mprotect":
+            _, start, n = live[int(rng.integers(0, len(live)))]
+            off = int(rng.integers(0, n))
+            ops.append(("mprotect", tid, start + off,
+                        int(rng.integers(1, n - off + 1)),
+                        PERM_R if rng.random() < 0.5 else PERM_RW))
+        else:  # munmap a whole live area (its owner thread unmaps it)
+            owner, start, n = live.pop(int(rng.integers(0, len(live))))
+            ops.append(("munmap", owner, start, n))
+    return ops
+
+
+def run_one(policy: Policy, filt: bool, n_ops: int, *,
+            spin: int = 8, workers_per_node: int = 2, seed: int = 11,
+            engine: str = "batch") -> dict:
+    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
+    tids = []
+    for node in range(sim.topo.n_nodes):
+        base = node * sim.topo.hw_threads_per_node
+        for i in range(workers_per_node):
+            tids.append(sim.spawn_thread(base + 30 + i))
+    make_spinners(sim, spin, engine=engine)
+    program = [(op[0], tids[op[1]], *op[2:])
+               for op in build_program(len(tids), n_ops, seed,
+                                       sim._next_vpn)]
+    t_before = {t: sim.thread_time_ns(t) for t in tids}
+    wall = time.perf_counter()
+    sim.apply_mm_ops(program, engine=engine)
+    wall = time.perf_counter() - wall
+    sim.check_invariants()
+    c = sim.counters
+    modeled = sum(sim.thread_time_ns(t) - t_before[t] for t in tids)
+    return {"n_ops": n_ops, "modeled_ms": round(modeled / 1e6, 3),
+            "wall_s": round(wall, 3), "shootdowns": c.shootdown_rounds,
+            "ipis_local": c.ipis_local, "ipis_remote": c.ipis_remote,
+            "ipis_filtered": c.ipis_filtered,
+            "pt_pages_freed": c.pt_pages_freed}
+
+
+def main(quick: bool = False, scale: int = 1) -> list:
+    n_ops = (600 if quick else 2500) * scale
+    rows = []
+    base = None
+    for name, policy, filt in policies():
+        r = run_one(policy, filt, n_ops)
+        if name == "linux":
+            base = r["modeled_ms"]
+        rows.append({"scenario": "mixed-ops", "policy": name,
+                     "vs_linux": round(r["modeled_ms"] / base, 3), **r})
+    # app churn: loading + exec + mprotect pass + teardown of the btree app
+    spec = APPS["btree"]
+    accesses = (2000 if quick else 8000) * scale
+    for name, policy, filt in policies():
+        if quick and name == "numapte-nofilter":
+            continue
+        r = run_app(policy, spec, PAPER_8SOCKET,
+                    accesses_per_thread=accesses, mm_phases=True)
+        rows.append({"scenario": "app-churn", "policy": name,
+                     "mprotect_ms": round(r["mprotect_ns"] / 1e6, 3),
+                     "teardown_ms": round(r["teardown_ns"] / 1e6, 3),
+                     "ipis_filtered": r["counters"]["ipis_filtered"]})
+    return csv("mm_concurrent", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,7 +32,7 @@ from typing import Dict, Iterable, Optional
 from . import (fig01_mprotect, fig02_local_remote, fig03_placement,
                fig06_prefetch, fig07_migration, fig08_apps, fig09_mm_ops,
                fig10_munmap, fig11_malloc, fig13_webserver, fig14_memcached,
-               roofline, serving_coherence)
+               mm_concurrent, roofline, serving_coherence)
 
 BENCHES = {
     "fig01_mprotect": fig01_mprotect.main,
@@ -46,6 +46,7 @@ BENCHES = {
     "fig11_12_malloc": fig11_malloc.main,
     "fig13_webserver": fig13_webserver.main,
     "fig14_memcached": fig14_memcached.main,
+    "mm_concurrent": mm_concurrent.main,
     "serving_coherence": serving_coherence.main,
     "roofline": roofline.main,
 }

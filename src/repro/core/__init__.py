@@ -13,6 +13,7 @@ Two cooperating implementations live here:
 from .batch import access_stream, touch_batch
 from .costmodel import CostModel
 from .malloc import MallocModel, gamma_sizes_pages
+from .mm_batch import apply_mm_ops, mmap_batch, mprotect_batch, munmap_batch
 from .pagetable import (PERM_R, PERM_RW, PERM_W, PERM_X, PTES_PER_TABLE,
                         LeafTable, PageTableStore, Policy, VMA, leaf_id,
                         leaf_index)
@@ -20,14 +21,17 @@ from .sim import Counters, NumaSim, SegfaultError, Thread
 from .tlb import TLB
 from .topology import (PAPER_4SOCKET, PAPER_8SOCKET, TPU_2POD, NumaTopology,
                        socket_pair)
-from .workloads import APPS, AppSpec, build_app, run_app, run_exec_phase
+from .workloads import (APPS, AppSpec, build_app, run_app, run_exec_phase,
+                        run_mprotect_phase, run_teardown_phase)
 
 __all__ = [
     "APPS", "AppSpec", "CostModel", "Counters", "LeafTable", "MallocModel",
     "access_stream", "touch_batch",
+    "apply_mm_ops", "mmap_batch", "mprotect_batch", "munmap_batch",
     "NumaSim", "NumaTopology", "PAPER_4SOCKET", "PAPER_8SOCKET",
     "PERM_R", "PERM_RW", "PERM_W", "PERM_X", "PTES_PER_TABLE",
     "PageTableStore", "Policy", "SegfaultError", "TLB", "TPU_2POD", "Thread",
     "VMA", "build_app", "gamma_sizes_pages", "leaf_id", "leaf_index",
-    "run_app", "run_exec_phase", "socket_pair",
+    "run_app", "run_exec_phase", "run_mprotect_phase", "run_teardown_phase",
+    "socket_pair",
 ]

@@ -45,13 +45,14 @@ translations (invariant I4).
 """
 from __future__ import annotations
 
-import bisect
+import operator
 from itertools import islice, repeat
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .pagetable import LEAF_SHIFT, PTE, PTES_PER_TABLE, Policy
+from .pagetable import (LEAF_SHIFT, PTE, PTES_PER_TABLE, Policy,
+                        find_vma_sorted)
 
 __all__ = ["touch_batch", "access_stream"]
 
@@ -143,14 +144,9 @@ class _BatchContext:
         """find_vma over a sorted interval index (VMAs are disjoint)."""
         if self._vma_starts is None:
             self._vmas_sorted = sorted(self.sim.vmas,
-                                       key=lambda v: v.start_vpn)
+                                       key=operator.attrgetter("start_vpn"))
             self._vma_starts = [v.start_vpn for v in self._vmas_sorted]
-        i = bisect.bisect_right(self._vma_starts, vpn) - 1
-        if i >= 0:
-            vma = self._vmas_sorted[i]
-            if vpn < vma.end_vpn:
-                return vma
-        return None
+        return find_vma_sorted(self._vmas_sorted, self._vma_starts, vpn)
 
 
 # --------------------------------------------------------------------------

@@ -47,12 +47,14 @@ class _Span:
 class MallocModel:
     """One allocator instance bound to one simulator thread."""
 
-    def __init__(self, sim: NumaSim, tid: int, flavor: str = "glibc"):
+    def __init__(self, sim: NumaSim, tid: int, flavor: str = "glibc",
+                 engine: str = "batch"):
         if flavor not in ("mmap", "glibc", "tcmalloc"):
             raise ValueError(flavor)
         self.sim = sim
         self.tid = tid
         self.flavor = flavor
+        self.engine = engine  # "batch" (vectorized, byte-identical) | "scalar"
         self._free_spans: List[_Span] = []     # per-thread cache / arena top
         self._cached_pages = 0
 
@@ -66,8 +68,15 @@ class MallocModel:
             # first-touch the allocation (glibc memset-on-use analogue):
             # touch one page per 16 to model sparse initialization quickly.
             step = 16 if n_pages > 64 else 1
-            for vpn in range(span.start_vpn, span.start_vpn + span.n_pages, step):
-                self.sim.touch(self.tid, vpn, write=True)
+            if self.engine == "scalar":
+                for vpn in range(span.start_vpn,
+                                 span.start_vpn + span.n_pages, step):
+                    self.sim.touch(self.tid, vpn, write=True)
+            else:
+                self.sim.touch_batch(
+                    self.tid,
+                    np.arange(span.start_vpn, span.start_vpn + span.n_pages,
+                              step, dtype=np.int64), write_mask=True)
         return span
 
     def free(self, span: _Span) -> None:
@@ -109,7 +118,17 @@ class MallocModel:
         return _Span(s.start_vpn, n_pages)
 
     def _trim(self, threshold_pages: int) -> None:
+        victims: List[_Span] = []
         while self._cached_pages > threshold_pages and self._free_spans:
             s = self._free_spans.pop()
             self._cached_pages -= s.n_pages
-            self.sim.munmap(self.tid, s.start_vpn, s.n_pages)
+            victims.append(s)
+        if not victims:
+            return
+        if self.engine == "scalar" or len(victims) == 1:
+            for s in victims:
+                self.sim.munmap(self.tid, s.start_vpn, s.n_pages)
+        else:
+            self.sim.munmap_batch(self.tid,
+                                  [s.start_vpn for s in victims],
+                                  [s.n_pages for s in victims])

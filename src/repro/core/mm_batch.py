@@ -1,0 +1,610 @@
+"""Batched memory-management engine: mmap/mprotect/munmap over op arrays.
+
+PR 1 vectorized the *access* path (``repro.core.batch``); this module does
+the same for the *memory-management* path — the operations the paper's
+headline results are about (munmap/mprotect suffer up to 40x NUMA overhead;
+numaPTE's sharer-mask-targeted shootdowns are what deliver the webserver /
+memcached wins).  The scalar path (``NumaSim.mprotect`` / ``munmap``) pays,
+per op, a full rebuild of the running-CPU set, a Python loop over every
+running CPU for the shootdown filter, and a per-target-thread IPI charge —
+with the paper's 8x36-thread testbed and 280 spinners that is hundreds of
+dict/float operations per 4KB munmap, which forces the mm-heavy benchmarks
+(figs 01/09/10/11) to shrink iteration counts far below paper scale.
+
+The engine replays *identical* protocol semantics over a whole op batch:
+
+* **Cached shootdown fan-out** — the running-CPU occupancy histogram
+  (node -> #occupied CPUs) is built once per batch (mm ops never move
+  threads; a ``migrate`` op rebuilds it).  Per op, the sharer-filtered
+  target counts, the initiator's dispatch/ack charge and the
+  ``ipis_local/remote/filtered`` counters come from O(nodes) arithmetic
+  instead of an O(CPUs) scan.
+* **Amortized IPI receive charges** — target threads are not charged 700ns
+  per op; instead shootdown rounds accrue into cumulative per-node round
+  counts (minus per-initiator-CPU self counts) and each thread's due count
+  is settled lazily in O(1): when that thread initiates its next op, and
+  once at batch end.  The settled charge is ``due * IPI_RECEIVE_NS`` when
+  that is provably bit-equal to ``due`` sequential float adds
+  (integer-valued running time and charge, below 2^52 — the same exactness
+  guard ``repro.core.batch`` uses), else an exact sequential-add fallback
+  loop.
+* **TLB-invalidation relevance filter** — a shootdown must invalidate the
+  op's range on every target CPU, but almost every TLB (e.g. all spinner
+  TLBs) holds nothing in any batched range.  The engine computes, once,
+  which TLBs intersect the union of the batch's mm-op ranges (NumPy
+  searchsorted over the merged intervals) and only those — plus any CPU
+  that performs a ``touch`` op mid-batch, which can refill entries — pay
+  per-op ``invalidate_range`` calls.  Skipped TLBs are provably untouched:
+  mm ops only ever *remove* entries, so a TLB disjoint from every batched
+  range at batch start stays disjoint.
+* **Bulk PTE range updates** — per touched leaf table and replica, the
+  present-entry update/clear runs over the replica's own keys (or a plain
+  ``dict.clear`` for whole-table munmaps) instead of probing every vpn of
+  the range, and the per-replica write charge is the same single
+  ``cost * wrote`` multiply the scalar path performs.
+
+Counters are integers (order-free); every float the *initiating* thread
+accumulates is added in exactly the scalar path's operation order, so
+modeled times are byte-identical — differentially tested (together with
+TLB content/order, replicas, sharer masks, the oracle and the VMA layout)
+in ``tests/test_mm_batch_differential.py``.  A mid-batch ``SegfaultError``
+from a ``touch`` op leaves exactly the partial state the scalar loop would
+have left (pending IPI dues are settled before the exception propagates).
+
+Assumptions (shared with ``repro.core.batch`` and the scalar operating
+regime of every workload in this repo): VMAs are disjoint, and ops in one
+batch are applied in sequence (the "concurrency" of the concurrent-mm-ops
+scenario is thread-interleaving, exactly like the scalar reference).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import operator
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .pagetable import (LEAF_SHIFT, PERM_RW, PTE, PTES_PER_TABLE, VMA,
+                        find_vma_sorted, next_table_aligned)
+
+__all__ = ["apply_mm_ops", "mmap_batch", "mprotect_batch", "munmap_batch"]
+
+_IDX_MASK = PTES_PER_TABLE - 1
+#: beyond this magnitude float addition of integers can round; fall back.
+_MAX_EXACT = float(1 << 52)
+
+_KINDS = ("mmap", "touch", "mprotect", "munmap", "migrate")
+_BY_START = operator.attrgetter("start_vpn")
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch") -> list:
+    """Apply a sequence of memory-management ops, in order.
+
+    Each op is a tuple whose first element names the kind:
+
+    * ``("mmap", tid, n_pages[, perms])`` -> the created :class:`VMA`
+    * ``("touch", tid, vpns[, write_mask])`` -> None (runs the batched
+      access engine; ``write_mask`` may be a bool or per-access array)
+    * ``("mprotect", tid, start_vpn, n_pages, perms)`` -> None
+    * ``("munmap", tid, start_vpn, n_pages)`` -> None
+    * ``("migrate", tid, new_cpu)`` -> None
+
+    Returns the per-op results.  ``engine="scalar"`` dispatches every op to
+    the scalar ``NumaSim`` methods (the differential reference);
+    ``engine="batch"`` runs the vectorized engine, which is byte-identical
+    in counters, modeled times, TLB state/order, page-table replicas,
+    sharer masks, the oracle, and the VMA layout.
+    """
+    ops = list(ops)
+    for op in ops:
+        if not op or op[0] not in _KINDS:
+            raise ValueError(f"unknown mm op: {op!r}")
+    if engine == "scalar":
+        return _apply_scalar(sim, ops)
+    if engine != "batch":
+        raise ValueError(f"unknown engine {engine!r}")
+    return _MMEngine(sim, ops).run()
+
+
+def mmap_batch(sim, tid: int, sizes, *, perms: int = PERM_RW,
+               engine: str = "batch") -> List[VMA]:
+    """Batched ``sim.mmap(tid, n)`` for every n in ``sizes`` (in order)."""
+    return apply_mm_ops(
+        sim, [("mmap", tid, int(n), perms) for n in np.ravel(sizes)],
+        engine=engine)
+
+
+def mprotect_batch(sim, tid: int, starts, n_pages, perms, *,
+                   engine: str = "batch") -> None:
+    """Batched ``sim.mprotect`` over parallel (start, n_pages, perms)
+    arrays; scalar ``n_pages``/``perms`` broadcast over all ops."""
+    starts = [int(s) for s in np.ravel(starts)]
+    lens = _broadcast(n_pages, len(starts))
+    prm = _broadcast(perms, len(starts))
+    apply_mm_ops(sim, [("mprotect", tid, s, n, p)
+                       for s, n, p in zip(starts, lens, prm)], engine=engine)
+
+
+def munmap_batch(sim, tid: int, starts, n_pages, *,
+                 engine: str = "batch") -> None:
+    """Batched ``sim.munmap`` over parallel (start, n_pages) arrays."""
+    starts = [int(s) for s in np.ravel(starts)]
+    lens = _broadcast(n_pages, len(starts))
+    apply_mm_ops(sim, [("munmap", tid, s, n)
+                       for s, n in zip(starts, lens)], engine=engine)
+
+
+def _broadcast(x, k: int) -> List[int]:
+    arr = np.ravel(x)
+    if arr.size == 1:
+        return [int(arr[0])] * k
+    if arr.size != k:
+        raise ValueError(f"length mismatch: {arr.size} != {k}")
+    return [int(v) for v in arr]
+
+
+# --------------------------------------------------------------------------
+# scalar reference dispatch
+# --------------------------------------------------------------------------
+def _apply_scalar(sim, ops: List[tuple]) -> list:
+    out: list = []
+    for op in ops:
+        kind = op[0]
+        if kind == "mmap":
+            out.append(sim.mmap(op[1], op[2],
+                                perms=op[3] if len(op) > 3 else PERM_RW))
+        elif kind == "touch":
+            tid, vpns = op[1], op[2]
+            wm = op[3] if len(op) > 3 else None
+            arr = np.ravel(vpns)
+            if wm is None:
+                for v in arr.tolist():
+                    sim.touch(tid, int(v), False)
+            else:
+                # scalar/0-d masks broadcast; mismatched lengths raise
+                # instead of silently truncating the access stream
+                masks = np.broadcast_to(np.asarray(wm).ravel()
+                                        if np.ndim(wm) else np.asarray(wm),
+                                        arr.shape)
+                for v, w in zip(arr.tolist(), masks.tolist()):
+                    sim.touch(tid, int(v), bool(w))
+            out.append(None)
+        elif kind == "mprotect":
+            sim.mprotect(op[1], op[2], op[3], op[4])
+            out.append(None)
+        elif kind == "munmap":
+            sim.munmap(op[1], op[2], op[3])
+            out.append(None)
+        else:  # migrate
+            sim.migrate_thread(op[1], op[2])
+            out.append(None)
+    return out
+
+
+# --------------------------------------------------------------------------
+# batched engine
+# --------------------------------------------------------------------------
+class _MMEngine:
+    """One batch of mm ops over one simulator.
+
+    Working thread times live in ``self.wt`` (written back in ``_finish``);
+    all additions into a working time happen in the scalar path's exact
+    order, so write-back equals the scalar sequence bit-for-bit.
+    """
+
+    def __init__(self, sim, ops: List[tuple]):
+        self.sim = sim
+        self.ops = ops
+        self.node_of = sim.topo.node_of_cpu
+        self.full_mask = (1 << sim.topo.n_nodes) - 1
+        from .sim import IPI_RECEIVE_NS
+        self.ipi_ns = float(IPI_RECEIVE_NS)
+        self.ipi_int = self.ipi_ns.is_integer()
+        self.wt: Dict[int, float] = {}
+        # IPI-receive accrual, O(nodes) per round / O(1) per settlement: a
+        # thread on cpu C (node N) is targeted by every round whose mask
+        # covers N except rounds it initiated itself, so its cumulative due
+        # is node_rounds[N] - self_rounds[C].  Reset (after settling)
+        # whenever a migrate changes the topology.
+        self.node_rounds = [0] * sim.topo.n_nodes
+        self.self_rounds: Dict[int, int] = {}   # initiator cpu -> rounds
+        self.applied: Dict[int, int] = {}       # tid -> rounds settled
+        # The engine keeps sim.vmas sorted by start_vpn for the whole
+        # batch.  VMAs are disjoint, so this is an equivalent permutation
+        # of the scalar path's insertion-ordered list (find_vma returns
+        # the unique containing VMA either way) — and it makes both VMA
+        # resolution and munmap carving O(log V) bisects + list splices
+        # instead of O(V) rebuilds per op.
+        sim.vmas.sort(key=_BY_START)
+        self._vma_starts: List[int] = [v.start_vpn for v in sim.vmas]
+        self._rebuild_topology_cache()
+        self._relevant = self._initial_relevant(ops)
+
+    # ------------------------------------------------------------- caches
+    def _rebuild_topology_cache(self) -> None:
+        occ: Dict[int, set] = {}
+        for t in self.sim.threads.values():
+            occ.setdefault(self.node_of(t.cpu), set()).add(t.cpu)
+        self.occ_count = {n: len(s) for n, s in occ.items()}
+        self.total_occ = sum(self.occ_count.values())
+        self.occupied_all = set().union(*occ.values()) if occ else set()
+
+    def _initial_relevant(self, ops: List[tuple]) -> set:
+        """CPUs whose TLB intersects the union of the batch's mm-op ranges.
+        Every other TLB is provably untouched by the batch's shootdowns
+        (mm ops only remove entries), so its invalidations are skipped."""
+        spans = []
+        for op in ops:
+            if op[0] in ("mprotect", "munmap") and op[3] > 0:
+                spans.append((op[2], op[2] + op[3]))
+        if not spans:
+            return set()
+        spans.sort()
+        merged = [list(spans[0])]
+        for s, e in spans[1:]:
+            if s <= merged[-1][1]:
+                merged[-1][1] = max(merged[-1][1], e)
+            else:
+                merged.append([s, e])
+        starts = np.asarray([m[0] for m in merged], dtype=np.int64)
+        ends = np.asarray([m[1] for m in merged], dtype=np.int64)
+        rel = set()
+        for cpu, tlb in self.sim.tlbs.items():
+            n = len(tlb.entries)
+            if not n:
+                continue
+            vpns = np.fromiter(tlb.entries.keys(), dtype=np.int64, count=n)
+            idx = np.searchsorted(starts, vpns, side="right") - 1
+            ok = idx >= 0
+            if ok.any() and bool((vpns[ok] < ends[idx[ok]]).any()):
+                rel.add(cpu)
+        return rel
+
+    def _vma_at(self, vpn: int) -> Optional[VMA]:
+        """find_vma over the live sorted interval index."""
+        return find_vma_sorted(self.sim.vmas, self._vma_starts, vpn)
+
+    def _carve_vmas(self, start: int, end: int) -> None:
+        """`NumaSim._carve_vmas`, as a splice on the sorted VMA list:
+        identical resulting VMA set (same objects / same replace() pieces),
+        without rebuilding the whole list per op."""
+        vmas = self.sim.vmas
+        starts = self._vma_starts
+        i = bisect.bisect_right(starts, start) - 1
+        if i < 0 or vmas[i].end_vpn <= start:
+            i += 1
+        j = bisect.bisect_left(starts, end, lo=i)
+        if i >= j:
+            return
+        repl: List[VMA] = []
+        first, last = vmas[i], vmas[j - 1]
+        if first.start_vpn < start:
+            repl.append(dataclasses.replace(first, end_vpn=start))
+        if last.end_vpn > end:
+            repl.append(dataclasses.replace(last, start_vpn=end))
+        vmas[i:j] = repl
+        starts[i:j] = [v.start_vpn for v in repl]
+
+    # ------------------------------------------------------ time accounting
+    def _wtime(self, tid: int) -> float:
+        w = self.wt.get(tid)
+        if w is None:
+            w = self.sim.threads[tid].time_ns
+            self.wt[tid] = w
+        return w
+
+    def _settle_ipis(self, tid: int) -> None:
+        """Apply this thread's due IPI-receive charges (scalar order: all
+        700s a target accumulates land before its own next op's charges)."""
+        thr = self.sim.threads[tid]
+        cpu = thr.cpu
+        due = (self.node_rounds[self.node_of(cpu)]
+               - self.self_rounds.get(cpu, 0)
+               - self.applied.get(tid, 0))
+        if not due:
+            return
+        self.applied[tid] = self.applied.get(tid, 0) + due
+        thr.ipis_received += due
+        t = self._wtime(tid)
+        ipi = self.ipi_ns
+        total = due * ipi
+        if self.ipi_int and t.is_integer() and t + total < _MAX_EXACT:
+            self.wt[tid] = t + total
+        else:
+            for _ in range(due):   # exact sequential fallback
+                t += ipi
+            self.wt[tid] = t
+
+    def _settle_all_ipis(self) -> None:
+        for tid in self.sim.threads:
+            self._settle_ipis(tid)
+
+    def _finish(self) -> None:
+        self._settle_all_ipis()
+        threads = self.sim.threads
+        for tid, w in self.wt.items():
+            threads[tid].time_ns = w
+
+    # ------------------------------------------------------------- run loop
+    def run(self) -> list:
+        out: list = []
+        try:
+            for op in self.ops:
+                kind = op[0]
+                if kind == "mprotect":
+                    self._op_mprotect(op[1], op[2], op[3], op[4])
+                    out.append(None)
+                elif kind == "munmap":
+                    self._op_munmap(op[1], op[2], op[3])
+                    out.append(None)
+                elif kind == "touch":
+                    self._op_touch(op[1], op[2],
+                                   op[3] if len(op) > 3 else None)
+                    out.append(None)
+                elif kind == "mmap":
+                    out.append(self._op_mmap(
+                        op[1], op[2], op[3] if len(op) > 3 else PERM_RW))
+                else:  # migrate
+                    self._op_migrate(op[1], op[2])
+                    out.append(None)
+        finally:
+            # on a mid-batch SegfaultError this leaves exactly the partial
+            # state the scalar loop would have left (dues settled, times
+            # written back).
+            self._finish()
+        return out
+
+    # ------------------------------------------------------------------ ops
+    def _op_mmap(self, tid: int, n_pages: int, perms: int) -> VMA:
+        sim = self.sim
+        self._settle_ipis(tid)
+        c = sim.cost
+        node = sim.thread_node(tid)
+        start = sim._next_vpn
+        sim._next_vpn = next_table_aligned(start + n_pages)
+        vma = VMA(next(sim._next_vma), start, start + n_pages, node, perms)
+        starts = self._vma_starts
+        if not starts or start > starts[-1]:
+            sim.vmas.append(vma)
+            starts.append(start)
+        else:  # pre-existing at_vpn area beyond the allocator cursor
+            i = bisect.bisect_right(starts, start)
+            sim.vmas.insert(i, vma)
+            starts.insert(i, start)
+        self.wt[tid] = self._wtime(tid) + (c.syscall_fixed_ns
+                                           + c.mmap_extra_ns)
+        return vma
+
+    def _op_touch(self, tid: int, vpns, wm) -> None:
+        sim = self.sim
+        self._settle_ipis(tid)
+        thr = sim.threads[tid]
+        if tid in self.wt:
+            thr.time_ns = self.wt.pop(tid)
+        try:
+            sim.touch_batch(tid, vpns, wm)
+        finally:
+            self.wt[tid] = thr.time_ns
+            # fills may have put batched-range vpns into this TLB
+            self._relevant.add(thr.cpu)
+
+    def _op_migrate(self, tid: int, new_cpu: int) -> None:
+        # topology-dependent caches go stale: settle everything first.
+        self._settle_all_ipis()
+        self.node_rounds = [0] * len(self.node_rounds)
+        self.self_rounds.clear()
+        self.applied.clear()
+        self.sim.migrate_thread(tid, new_cpu)
+        self._rebuild_topology_cache()
+
+    def _op_mprotect(self, tid: int, start: int, n: int, perms: int) -> None:
+        sim = self.sim
+        self._settle_ipis(tid)
+        t = self._wtime(tid) + sim.cost.syscall_fixed_ns
+        t, touched = self._update_range(tid, t, start, n, perms)
+        end = start + n
+        oracle = sim._oracle
+        if n > PTES_PER_TABLE:
+            # enumerate present vpns from the canonical/owner copies (the
+            # owner copy is complete under every policy: I1) instead of
+            # probing the whole range.
+            for vpn in self._present_vpns(touched, start, end):
+                oracle[vpn] = (oracle[vpn][0], perms)
+        else:
+            for vpn in range(start, end):
+                e = oracle.get(vpn)
+                if e is not None:
+                    oracle[vpn] = (e[0], perms)
+        vma = self._vma_at(start)
+        if vma is not None and vma.start_vpn == start and vma.n_pages == n:
+            vma.perms = perms
+        t = self._shootdown(tid, t, start, end, touched)
+        self.wt[tid] = t
+
+    def _op_munmap(self, tid: int, start: int, n: int) -> None:
+        sim = self.sim
+        ctr, c = sim.counters, sim.cost
+        self._settle_ipis(tid)
+        t = self._wtime(tid) + c.syscall_fixed_ns
+        end = start + n
+        # present set must be captured before the PTEs are cleared
+        if n > PTES_PER_TABLE:
+            t0 = start >> LEAF_SHIFT
+            t1 = (end - 1) >> LEAF_SHIFT
+            present = self._present_vpns(range(t0, t1 + 1), start, end)
+        else:
+            present = None
+        t, touched = self._update_range(tid, t, start, n, None)
+        pop = sim._oracle.pop
+        freed = 0
+        if present is None:
+            for vpn in range(start, end):
+                if pop(vpn, None) is not None:
+                    freed += 1
+        else:
+            for vpn in present:
+                if pop(vpn, None) is not None:
+                    freed += 1
+        ctr.data_pages_freed += freed
+        t = self._shootdown(tid, t, start, end, touched)
+        store = sim.store
+        for ti in touched:
+            table = store.get(ti)
+            if table is not None and table.empty():
+                k = table.n_copies()
+                ctr.pt_pages_freed += k
+                t += c.pt_teardown_ns * k
+                store.drop_table(ti)
+        self._carve_vmas(start, end)
+        self.wt[tid] = t
+
+    # ----------------------------------------------------- range primitives
+    def _present_vpns(self, table_ids, start: int, end: int) -> List[int]:
+        """All vpns in [start, end) whose PTE is present, via the canonical
+        (LINUX) / owner (MITOSIS, NUMAPTE: invariant I1) copies."""
+        store_get = self.sim.store.tables.get
+        out: List[int] = []
+        for ti in table_ids:
+            table = store_get(ti)
+            if table is None:
+                continue
+            base = ti << LEAF_SHIFT
+            lo = start if start > base else base
+            hi = end if end < base + PTES_PER_TABLE else base + PTES_PER_TABLE
+            lo_i = lo & _IDX_MASK
+            hi_i = lo_i + (hi - lo)
+            copy = table.copies.get(table.owner)
+            if not copy:
+                continue
+            if hi_i - lo_i >= PTES_PER_TABLE:
+                out.extend(base + i for i in copy)
+            else:
+                out.extend(base + i for i in copy if lo_i <= i < hi_i)
+        return out
+
+    def _update_range(self, tid: int, t: float, start: int, n: int,
+                      perms: Optional[int]) -> Tuple[float, List[int]]:
+        """Batched `NumaSim._update_range`: apply perms (None = clear) to
+        every present PTE in range, canonical copy + per-policy replicas.
+        Charges and counters land exactly as the scalar path's per-replica
+        ``cost * wrote`` adds."""
+        sim = self.sim
+        ctr, c = sim.counters, sim.cost
+        node = sim.thread_node(tid)
+        WL, WR = c.pte_write_local_ns, c.pte_write_remote_ns
+        store_get = sim.store.tables.get
+        end = start + n
+        # table-id bounds are the scalar path's exact formula: a
+        # zero-length op at an unaligned start still "touches" (and so
+        # shoots down against) the leaf table it straddles.
+        touched: List[int] = []
+        clear = perms is None
+        for tbl_id in range(start >> LEAF_SHIFT, ((end - 1) >> LEAF_SHIFT) + 1):
+            table = store_get(tbl_id)
+            if table is None:
+                continue
+            touched.append(tbl_id)
+            base = tbl_id << LEAF_SHIFT
+            lo = start if start > base else base
+            hi = end if end < base + PTES_PER_TABLE else base + PTES_PER_TABLE
+            lo_i = lo & _IDX_MASK
+            span = hi - lo
+            hi_i = lo_i + span
+            whole = span >= PTES_PER_TABLE
+            for copy_node in sim._coherence_targets(table):
+                copy = table.copies.get(copy_node)
+                if copy is None:
+                    continue
+                wrote = 0
+                if clear:
+                    if whole:
+                        wrote = len(copy)
+                        copy.clear()
+                    elif len(copy) < span:
+                        for i in [i for i in copy if lo_i <= i < hi_i]:
+                            del copy[i]
+                            wrote += 1
+                    else:
+                        for i in range(lo_i, hi_i):
+                            if i in copy:
+                                del copy[i]
+                                wrote += 1
+                else:
+                    if whole:
+                        for i, p in copy.items():
+                            copy[i] = PTE(p.frame, p.frame_node, perms)
+                        wrote = len(copy)
+                    elif len(copy) < span:
+                        for i in list(copy):
+                            if lo_i <= i < hi_i:
+                                p = copy[i]
+                                copy[i] = PTE(p.frame, p.frame_node, perms)
+                                wrote += 1
+                    else:
+                        for i in range(lo_i, hi_i):
+                            p = copy.get(i)
+                            if p is not None:
+                                copy[i] = PTE(p.frame, p.frame_node, perms)
+                                wrote += 1
+                if wrote:
+                    if copy_node == node:
+                        ctr.replica_writes_local += wrote
+                        t += WL * wrote
+                    else:
+                        ctr.replica_writes_remote += wrote
+                        t += WR * wrote
+        return t, touched
+
+    def _shootdown(self, tid: int, t: float, start: int, end: int,
+                   touched: List[int]) -> float:
+        """Batched `NumaSim._shootdown`: O(nodes) target arithmetic from the
+        occupancy histogram, grouped IPI-receive accrual, relevance-filtered
+        TLB invalidations."""
+        sim = self.sim
+        ctr = sim.counters
+        me_cpu = sim.threads[tid].cpu
+        my_node = self.node_of(me_cpu)
+        if sim.tlb_filter:
+            allowed = 0
+            store_get = sim.store.tables.get
+            for ti in touched:
+                table = store_get(ti)
+                if table is not None:
+                    allowed |= table.sharers
+        else:
+            allowed = self.full_mask
+        occ = self.occ_count
+        n_local = (occ[my_node] - 1) if (allowed >> my_node) & 1 else 0
+        n_remote = 0
+        for nd, cnt in occ.items():
+            if nd != my_node and (allowed >> nd) & 1:
+                n_remote += cnt
+        ctr.ipis_filtered += (self.total_occ - 1) - (n_local + n_remote)
+        ctr.shootdown_rounds += 1
+        ctr.ipis_local += n_local
+        ctr.ipis_remote += n_remote
+        c = sim.cost
+        t += (c.shootdown_cost_ns(n_local, n_remote)
+              + c.tlb_invalidate_self_ns)
+        if allowed:
+            node_rounds = self.node_rounds
+            for nd in range(len(node_rounds)):
+                if (allowed >> nd) & 1:
+                    node_rounds[nd] += 1
+            if (allowed >> my_node) & 1:
+                self.self_rounds[me_cpu] = \
+                    self.self_rounds.get(me_cpu, 0) + 1
+        rel = self._relevant
+        if rel:
+            tlbs = sim.tlbs
+            node_of = self.node_of
+            occupied = self.occupied_all
+            for cpu in rel:
+                if cpu == me_cpu or (cpu in occupied
+                                     and (allowed >> node_of(cpu)) & 1):
+                    tlbs[cpu].invalidate_range(start, end)
+        return t

@@ -15,9 +15,10 @@ leaf access dominates (Section 2.1).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import enum
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 PTES_PER_TABLE = 512
 LEAF_SHIFT = 9          # vpn >> 9 == leaf table id
@@ -48,6 +49,14 @@ def leaf_index(vpn: int) -> int:
 
 def leaf_base_vpn(tid: int) -> int:
     return tid << LEAF_SHIFT
+
+
+def next_table_aligned(vpn: int) -> int:
+    """Round ``vpn`` up to the next leaf-table boundary.  This is the mmap
+    placement rule (distinct VMAs live in distinct leaf tables); the batch
+    engine's and the op-program generators' shadow allocators must use the
+    same function so precomputed addresses never drift from the simulator."""
+    return -(-vpn // PTES_PER_TABLE) * PTES_PER_TABLE
 
 
 @dataclasses.dataclass
@@ -136,6 +145,19 @@ class VMA:
     @property
     def n_pages(self) -> int:
         return self.end_vpn - self.start_vpn
+
+
+def find_vma_sorted(vmas: Sequence["VMA"], starts: Sequence[int],
+                    vpn: int) -> Optional["VMA"]:
+    """``find_vma`` over a start-sorted VMA list with its parallel starts
+    index.  Equivalent to the linear scan for disjoint VMAs — the one
+    lookup both batch engines must agree on."""
+    i = bisect.bisect_right(starts, vpn) - 1
+    if i >= 0:
+        vma = vmas[i]
+        if vpn < vma.end_vpn:
+            return vma
+    return None
 
 
 class PageTableStore:

@@ -34,7 +34,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 from .costmodel import CostModel
 from .pagetable import (PERM_RW, PTE, PTES_PER_TABLE, LeafTable,
                         PageTableStore, Policy, VMA, leaf_base_vpn, leaf_id,
-                        leaf_index)
+                        leaf_index, next_table_aligned)
 from .tlb import DEFAULT_TLB_ENTRIES, TLB
 from .topology import NumaTopology
 
@@ -154,8 +154,7 @@ class NumaSim:
             # top-down mmap layout); co-locating unrelated VMAs in one leaf
             # table would charge numaPTE for false table-level sharing.
             start = self._next_vpn
-            self._next_vpn = (-(-(start + n_pages) // PTES_PER_TABLE)
-                              * PTES_PER_TABLE)
+            self._next_vpn = next_table_aligned(start + n_pages)
         else:
             start = at_vpn
         vma = VMA(next(self._next_vma), start, start + n_pages, node, perms)
@@ -221,6 +220,35 @@ class NumaSim:
         from .batch import touch_batch as _touch_batch
         return _touch_batch(self, tid, vpns, write_mask,
                             return_frames=return_frames)
+
+    # ------------------------------------------------------- batched mm ops
+    def apply_mm_ops(self, ops, *, engine: str = "batch") -> list:
+        """Apply a sequence of ``("mmap"|"touch"|"mprotect"|"munmap"|
+        "migrate", tid, ...)`` ops in order (see ``repro.core.mm_batch``).
+        ``engine="batch"`` runs the vectorized mm engine, byte-identical to
+        ``engine="scalar"`` (the per-op reference loop)."""
+        from .mm_batch import apply_mm_ops as _apply
+        return _apply(self, ops, engine=engine)
+
+    def mmap_batch(self, tid: int, sizes, *, perms: int = PERM_RW,
+                   engine: str = "batch"):
+        """Batched ``mmap``: one VMA per entry of ``sizes``, in order."""
+        from .mm_batch import mmap_batch as _mmap_batch
+        return _mmap_batch(self, tid, sizes, perms=perms, engine=engine)
+
+    def mprotect_batch(self, tid: int, starts, n_pages, perms, *,
+                       engine: str = "batch") -> None:
+        """Batched ``mprotect`` over parallel (start, n_pages, perms)
+        arrays; scalars broadcast.  Counters, modeled nanoseconds, TLB and
+        page-table state are byte-identical to the scalar loop."""
+        from .mm_batch import mprotect_batch as _mprotect_batch
+        _mprotect_batch(self, tid, starts, n_pages, perms, engine=engine)
+
+    def munmap_batch(self, tid: int, starts, n_pages, *,
+                     engine: str = "batch") -> None:
+        """Batched ``munmap`` over parallel (start, n_pages) arrays."""
+        from .mm_batch import munmap_batch as _munmap_batch
+        _munmap_batch(self, tid, starts, n_pages, engine=engine)
 
     def _count_data(self, node: int, vpn: int, tid: int) -> None:
         entry = self._oracle.get(vpn)

@@ -29,7 +29,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from .pagetable import PTES_PER_TABLE, Policy
+from .pagetable import PERM_R, PERM_RW, PTES_PER_TABLE, Policy
 from .sim import NumaSim
 
 PAGES_PER_GB_DEFAULT = 256
@@ -234,6 +234,48 @@ def run_exec_phase(sim: NumaSim, layout: AppLayout, *,
                for n, t in layout.threads.items())
 
 
+def _regions_by_worker(layout: AppLayout) -> Dict[int, List[Region]]:
+    """Each node's worker handles its own private/pair regions; node 0's
+    worker handles the shared regions (it loaded them)."""
+    per: Dict[int, List[Region]] = {node: [] for node in layout.threads}
+    for region in layout.regions:
+        per[region.home_node if region.kind != "all" else 0].append(region)
+    return per
+
+
+def run_mprotect_phase(sim: NumaSim, layout: AppLayout, *,
+                       engine: str = "batch") -> float:
+    """Protection pass over the whole dataset (a GC / COW-checkpoint
+    analogue): every worker write-protects the regions it owns, then
+    restores them — two full-range mprotects per region, exercising the
+    replica-coherence UPDATE path the paper's Figs 1/9 measure.  Returns
+    summed modeled thread time (ns).  ``engine="batch"`` runs on
+    ``NumaSim.mprotect_batch`` (byte-identical to ``engine="scalar"``)."""
+    t_before = {n: sim.thread_time_ns(t) for n, t in layout.threads.items()}
+    for node, regions in _regions_by_worker(layout).items():
+        tid = layout.threads[node]
+        ops = [("mprotect", tid, r.start_vpn, r.n_pages, perms)
+               for r in regions
+               for perms in (PERM_R, PERM_RW)]
+        sim.apply_mm_ops(ops, engine=engine)
+    return sum(sim.thread_time_ns(t) - t_before[n]
+               for n, t in layout.threads.items())
+
+
+def run_teardown_phase(sim: NumaSim, layout: AppLayout, *,
+                       engine: str = "batch") -> float:
+    """Exit-time teardown: every worker munmaps the regions it owns
+    (the paper's munmap / page-table-teardown path, Figs 9/10).  Returns
+    summed modeled thread time (ns)."""
+    t_before = {n: sim.thread_time_ns(t) for n, t in layout.threads.items()}
+    for node, regions in _regions_by_worker(layout).items():
+        tid = layout.threads[node]
+        sim.apply_mm_ops([("munmap", tid, r.start_vpn, r.n_pages)
+                          for r in regions], engine=engine)
+    return sum(sim.thread_time_ns(t) - t_before[n]
+               for n, t in layout.threads.items())
+
+
 def run_app(policy: Policy, spec: AppSpec, topo, *,
             prefetch_degree: int = 9,
             tlb_filter: bool = True,
@@ -241,8 +283,14 @@ def run_app(policy: Policy, spec: AppSpec, topo, *,
             accesses_per_thread: int = 50_000,
             touch_stride: int = 1,
             seed: int = 0,
-            engine: str = "batch"):
-    """Build + run one app under one policy.  Returns a result dict."""
+            engine: str = "batch",
+            mm_phases: bool = False):
+    """Build + run one app under one policy.  Returns a result dict.
+
+    ``mm_phases=True`` appends the memory-management phases (a full
+    mprotect protection pass, then exit-time munmap teardown) after the
+    execution phase, adding ``mprotect_ns`` / ``teardown_ns`` to the
+    result; page-table footprints are recorded before teardown."""
     sim = NumaSim(topo, policy, prefetch_degree=prefetch_degree,
                   tlb_filter=tlb_filter)
     layout, loading_ns = build_app(sim, spec, pages_per_gb=pages_per_gb,
@@ -250,13 +298,20 @@ def run_app(policy: Policy, spec: AppSpec, topo, *,
     exec_ns = run_exec_phase(sim, layout,
                              accesses_per_thread=accesses_per_thread,
                              seed=seed, engine=engine)
-    return {
+    result = {
         "app": spec.name,
         "policy": policy.value,
         "loading_ns": loading_ns,
         "exec_ns": exec_ns,
-        "pt_bytes": sim.pt_footprint_bytes(),
-        "pt_bytes_single": sim.store.footprint_bytes_single_copy(),
-        "dataset_bytes": layout.total_pages * 4096,
-        "counters": dataclasses.asdict(sim.counters),
     }
+    if mm_phases:
+        result["mprotect_ns"] = run_mprotect_phase(sim, layout,
+                                                   engine=engine)
+    result["pt_bytes"] = sim.pt_footprint_bytes()
+    result["pt_bytes_single"] = sim.store.footprint_bytes_single_copy()
+    if mm_phases:
+        result["teardown_ns"] = run_teardown_phase(sim, layout,
+                                                   engine=engine)
+    result["dataset_bytes"] = layout.total_pages * 4096
+    result["counters"] = dataclasses.asdict(sim.counters)
+    return result

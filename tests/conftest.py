@@ -1,9 +1,86 @@
 """Test configuration.  NOTE: no XLA_FLAGS here — smoke tests must see the
-real single CPU device; only launch/dryrun.py forces 512 host devices."""
+real single CPU device; only launch/dryrun.py forces 512 host devices.
+
+Besides the path setup, this hosts the capability gate for the jax serving
+stack: the model/serving/distributed tests need jax APIs (``jax.shard_map``,
+``jax.set_mesh``) that CPU-only CI images with older jax wheels do not
+ship.  Those tests are *skipped* (with the missing capability named) rather
+than left to fail, so tier-1 is green-or-skip, never red, on such
+environments — while every simulator/core test still runs everywhere.
+"""
 import os
 import sys
+
+import pytest
 
 # src/ for the repro package; repo root so `benchmarks` (the harness the
 # bench smoke test drives) is importable regardless of invocation cwd.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _probe_capabilities():
+    """Which optional stacks does this environment actually provide?"""
+    caps = {}
+    try:
+        import jax  # noqa: F401
+        caps["jax"] = True
+    except Exception:
+        caps["jax"] = False
+    if caps["jax"]:
+        import jax
+        try:
+            import jax.experimental.pallas  # noqa: F401
+            caps["pallas"] = True
+        except Exception:
+            caps["pallas"] = False
+        # the serving/kvcache stack imports `from jax import shard_map`
+        # (jax >= 0.6); the launch/elastic stack drives `jax.set_mesh`.
+        caps["shard_map"] = hasattr(jax, "shard_map")
+        caps["set_mesh"] = hasattr(jax, "set_mesh")
+    else:
+        caps["pallas"] = caps["shard_map"] = caps["set_mesh"] = False
+    return caps
+
+
+#: (file, test-name-or-None-for-whole-module, required capabilities).
+#: `test_decode_matches_forward` needs the paged-KV gather (shard_map) for
+#: every attention architecture; the purely recurrent configs decode
+#: without it and keep running.
+_RECURRENT_ARCHS = ("mamba2_370m", "recurrentgemma_2b")
+_REQUIREMENTS = [
+    ("test_kernels.py", None, ("jax", "pallas")),
+    ("test_models.py", None, ("jax",)),
+    ("test_models.py", "test_decode_matches_forward", ("shard_map",)),
+    ("test_models.py", "test_whisper_decode_matches_forward", ("shard_map",)),
+    ("test_runtime.py", "test_serving_modes_agree_and_filter", ("shard_map",)),
+    ("test_system.py", "test_end_to_end_serving_generates_same_tokens_"
+                       "under_all_policies", ("shard_map",)),
+    ("test_distributed.py", "test_small_mesh_train_and_serve_steps",
+     ("set_mesh",)),
+    ("test_distributed.py", "test_dryrun_cell_small_mesh", ("set_mesh",)),
+    ("test_distributed.py", "test_multi_pod_serve_cell", ("set_mesh",)),
+    ("test_elastic.py", "test_elastic_remesh_restore", ("set_mesh",)),
+]
+
+
+def pytest_collection_modifyitems(config, items):
+    caps = _probe_capabilities()
+    if all(caps.values()):
+        return
+    for item in items:
+        fname = os.path.basename(str(item.fspath))
+        base = item.name.split("[")[0]
+        param = item.name[len(base):].strip("[]")
+        for req_file, req_test, needed in _REQUIREMENTS:
+            if fname != req_file or (req_test is not None and
+                                     base != req_test):
+                continue
+            if (req_test == "test_decode_matches_forward"
+                    and param in _RECURRENT_ARCHS):
+                continue  # recurrent decode has no paged-KV gather
+            missing = [c for c in needed if not caps[c]]
+            if missing:
+                item.add_marker(pytest.mark.skip(
+                    reason="jax capability unavailable in this "
+                           f"environment: {', '.join(missing)}"))

@@ -52,6 +52,56 @@ def test_fig13_numapte_beats_linux(tmp_path):
             pol["linux"]["shootdown_ipis"]
 
 
+MM_BENCHES = ["fig01_mprotect", "fig09_mm_ops", "fig10_munmap",
+              "fig11_12_malloc", "mm_concurrent"]
+
+
+def test_mm_bench_json_artifacts(tmp_path):
+    """The mm-heavy benchmarks (now on the batched mm-op engine) must
+    produce clean schema-v1 JSON artifacts and reproduce the headline
+    ordering: Linux's process-wide munmap shootdowns cost at least as much
+    as numaPTE's sharer-filtered ones."""
+    written = run_benchmarks(MM_BENCHES, quick=True, outdir=str(tmp_path),
+                             strict=True)
+    assert sorted(written) == sorted(MM_BENCHES)
+    for name, path in written.items():
+        d = _load(path)
+        assert d["schema_version"] == SCHEMA_VERSION
+        assert d["name"] == name
+        assert d["error"] is None
+        assert isinstance(d["rows"], list) and d["rows"], name
+        json.dumps(d)   # plain JSON types only
+
+    # fig10: LINUX munmap cost >= NUMAPTE at every spinner count, and the
+    # gap must be open at full spin (the 40x-vs-2.6x story)
+    rows = _load(written["fig10_munmap"])["rows"]
+    by_spin = {}
+    for row in rows:
+        by_spin.setdefault(row["spin_per_socket"], {})[row["policy"]] = row
+    assert by_spin
+    for spin, pol in by_spin.items():
+        assert pol["linux"]["ns_per_op"] >= pol["numapte"]["ns_per_op"], \
+            f"LINUX munmap cheaper than NUMAPTE at spin={spin}"
+    max_spin = max(by_spin)
+    assert by_spin[max_spin]["linux"]["ns_per_op"] > \
+        2 * by_spin[max_spin]["numapte"]["ns_per_op"]
+
+    # fig01: the filter, not the cost model, provides the mprotect win
+    rows = _load(written["fig01_mprotect"])["rows"]
+    at_max = {r["policy"]: r for r in rows
+              if r["spin_per_socket"] == max(x["spin_per_socket"]
+                                             for x in rows)}
+    assert at_max["numapte"]["ipis_filtered"] > 0
+    assert at_max["linux"]["slowdown_vs_linux0"] > \
+        at_max["numapte"]["slowdown_vs_linux0"]
+
+    # mm_concurrent: the mixed-op scenario keeps numaPTE at-or-under Linux
+    rows = _load(written["mm_concurrent"])["rows"]
+    mixed = {r["policy"]: r for r in rows if r["scenario"] == "mixed-ops"}
+    assert mixed["numapte"]["ipis_filtered"] > 0
+    assert mixed["numapte"]["modeled_ms"] <= mixed["linux"]["modeled_ms"]
+
+
 def test_fig6_prefetch_rows_consistent(tmp_path):
     written = run_benchmarks(["fig06_prefetch"], quick=True,
                              outdir=str(tmp_path), strict=True)

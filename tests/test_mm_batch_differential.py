@@ -1,0 +1,391 @@
+"""Differential tests: the batched mm-op engine vs the scalar syscalls.
+
+Identical op interleavings (mmap / touch / mprotect / munmap /
+migrate_thread, across threads) must leave the two simulators in
+byte-identical states — every `Counters` field, every thread's modeled
+nanoseconds and `ipis_received` (exact equality, no tolerance), TLB
+contents *and insertion order*, page-table replicas and sharer masks, the
+translation oracle, and the VMA layout — across all three policies, with
+and without the TLB filter, prefetch, and interference (whose non-integral
+charges force the engine's sequential IPI-settlement fallback).
+
+The interleavings come from a seeded random program generator (always on;
+``test_random_interleavings_*`` replays 70 programs per policy — 210
+total) and, when the ``hypothesis`` extra is installed, from
+property-based generation over the same materializer.  Programs are built
+against a shadow address allocator that replicates the simulator's mmap
+placement, so both engines replay the exact same ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (NumaSim, NumaTopology, Policy, SegfaultError,
+                        run_mprotect_phase, run_teardown_phase)
+from repro.core.pagetable import (PERM_R, PERM_RW, PTES_PER_TABLE,
+                                  next_table_aligned)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+TOPO = NumaTopology(n_nodes=4, cores_per_node=4, threads_per_core=1)
+POLICIES = [Policy.LINUX, Policy.MITOSIS, Policy.NUMAPTE]
+SEEDS_PER_POLICY = 70          # 3 policies x 70 = 210 interleavings
+
+
+# --------------------------------------------------------------------------
+# state comparison
+# --------------------------------------------------------------------------
+def _table_state(sim):
+    return {ti: (t.owner, t.sharers,
+                 {m: {i: (p.frame, p.frame_node, p.perms)
+                      for i, p in cp.items()}
+                  for m, cp in t.copies.items()})
+            for ti, t in sim.store.tables.items()}
+
+
+def _vma_state(sim):
+    # the batch engine keeps sim.vmas sorted (an equivalent permutation of
+    # the scalar insertion order — VMAs are disjoint), so compare sorted.
+    return sorted((v.vma_id, v.start_vpn, v.end_vpn, v.owner, v.perms)
+                  for v in sim.vmas)
+
+
+def assert_identical(a: NumaSim, b: NumaSim, tag="") -> None:
+    assert a.counters == b.counters, f"{tag}: counters diverged"
+    for tid in a.threads:
+        # byte-identical modeled time: exact float equality, on purpose
+        assert a.threads[tid].time_ns == b.threads[tid].time_ns, \
+            f"{tag}: thread {tid} time {a.threads[tid].time_ns!r} " \
+            f"!= {b.threads[tid].time_ns!r}"
+        assert a.threads[tid].ipis_received == b.threads[tid].ipis_received, \
+            f"{tag}: thread {tid} ipis_received diverged"
+        assert a.threads[tid].cpu == b.threads[tid].cpu
+    assert a._oracle == b._oracle, f"{tag}: oracle diverged"
+    for cpu in set(a.tlbs) | set(b.tlbs):
+        assert list(a.tlbs[cpu].entries.items()) == \
+            list(b.tlbs[cpu].entries.items()), \
+            f"{tag}: TLB state/order diverged on cpu {cpu}"
+    assert _table_state(a) == _table_state(b), f"{tag}: tables diverged"
+    assert _vma_state(a) == _vma_state(b), f"{tag}: VMA layout diverged"
+
+
+def _build(policy, *, prefetch=0, tlb_filter=True, interference=()):
+    sim = NumaSim(TOPO, policy, prefetch_degree=prefetch, tlb_entries=64,
+                  tlb_filter=tlb_filter, interference_nodes=interference)
+    tids = [sim.spawn_thread(n * TOPO.hw_threads_per_node)
+            for n in range(TOPO.n_nodes)]
+    return sim, tids
+
+
+# --------------------------------------------------------------------------
+# op-program materializer (shared by the seeded and hypothesis suites)
+# --------------------------------------------------------------------------
+N_THREADS = TOPO.n_nodes
+
+
+def materialize(choices, first_vpn: int):
+    """Turn a list of abstract (kind, tid, a, b, c) integer tuples into a
+    valid op program via a shadow allocator that mirrors the simulator's
+    mmap placement.  ``kind`` indexes (mmap, touch, mprotect, munmap,
+    migrate); a/b/c select areas, offsets, lengths, perms and cpus by
+    modulus, so any integer tuple yields a well-formed interleaving."""
+    next_vpn = first_vpn
+    live = []                      # (start, n_pages) of mapped areas
+    ops = []
+    for kind, tid, a, b, c in choices:
+        tid %= N_THREADS
+        kind %= 5
+        if kind != 0 and not live:
+            kind = 0
+        if kind == 0:                                   # mmap
+            n = 1 + a % 700
+            start = next_vpn
+            next_vpn = next_table_aligned(start + n)
+            live.append((start, n))
+            ops.append(("mmap", tid, n))
+        elif kind == 1:                                 # touch
+            start, n = live[a % len(live)]
+            rng = np.random.default_rng(b)
+            k = 1 + c % 200
+            ops.append(("touch", tid,
+                        start + rng.integers(0, n, size=k),
+                        bool(b & 1)))
+        elif kind == 2:                                 # mprotect
+            start, n = live[a % len(live)]
+            off = b % n
+            # length may run past the area end: over holes / next areas
+            ln = 1 + c % (n - off + PTES_PER_TABLE)
+            ops.append(("mprotect", tid, start + off, ln,
+                        PERM_R if b & 2 else PERM_RW))
+        elif kind == 3:                                 # munmap
+            idx = a % len(live)
+            start, n = live[idx]
+            off = b % n
+            ln = 1 + c % (n - off)
+            ops.append(("munmap", tid, start + off, ln))
+            live[idx:idx + 1] = [p for p in
+                                 ((start, off),
+                                  (start + off + ln, n - off - ln))
+                                 if p[1] > 0]
+        else:                                           # migrate
+            ops.append(("migrate", tid, a % TOPO.total_hw_threads))
+    return ops
+
+
+def run_differential(policy, choices, *, prefetch=0, tlb_filter=True,
+                     interference=(), chunk=7, tag=""):
+    sa, ta = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
+                    interference=interference)
+    sb, tb = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
+                    interference=interference)
+    assert ta == tb
+    ops = materialize(choices, sa._next_vpn)
+    # apply in chunks, asserting lockstep at every sync point: this also
+    # exercises batches that start from arbitrary mid-program state.
+    for i in range(0, len(ops), chunk):
+        part = ops[i:i + chunk]
+        ra = sa.apply_mm_ops(part, engine="batch")
+        rb = sb.apply_mm_ops(part, engine="scalar")
+        assert [(v.vma_id, v.start_vpn, v.end_vpn) if v is not None else None
+                for v in ra] == \
+               [(v.vma_id, v.start_vpn, v.end_vpn) if v is not None else None
+                for v in rb], f"{tag}: op results diverged at chunk {i}"
+        assert_identical(sa, sb, f"{tag}/chunk{i}")
+    sa.check_invariants()
+    sb.check_invariants()
+
+
+def _random_choices(rng, n):
+    return [tuple(int(x) for x in rng.integers(0, 1 << 30, size=5))
+            for _ in range(n)]
+
+
+# --------------------------------------------------------------------------
+# seeded property suite (always on; the acceptance-gate interleavings)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+def test_random_interleavings_byte_identical(policy):
+    """70 seeded random interleavings per policy (210 total), batch vs
+    scalar in lockstep, varying filter/prefetch/interference per seed."""
+    for seed in range(SEEDS_PER_POLICY):
+        rng = np.random.default_rng(10_000 + seed)
+        choices = _random_choices(rng, int(rng.integers(6, 36)))
+        run_differential(
+            policy, choices,
+            prefetch=(9 if seed % 3 == 1 else 0),
+            tlb_filter=(seed % 2 == 0),
+            interference=((1,) if seed % 5 == 4 else ()),
+            chunk=int(rng.integers(1, 12)),
+            tag=f"{policy.value}/seed{seed}")
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=70, deadline=None)
+    @given(
+        choices=st.lists(
+            st.tuples(*(st.integers(0, (1 << 30) - 1) for _ in range(5))),
+            min_size=1, max_size=30),
+        policy_i=st.integers(0, len(POLICIES) - 1),
+        tlb_filter=st.booleans(),
+        prefetch=st.sampled_from([0, 9]),
+        chunk=st.integers(1, 12))
+    def test_hypothesis_interleavings_byte_identical(
+            choices, policy_i, tlb_filter, prefetch, chunk):
+        run_differential(POLICIES[policy_i], choices, prefetch=prefetch,
+                         tlb_filter=tlb_filter, chunk=chunk,
+                         tag="hypothesis")
+
+
+# --------------------------------------------------------------------------
+# targeted differentials (fast; always on)
+# --------------------------------------------------------------------------
+BIG = NumaTopology(n_nodes=8, cores_per_node=18, threads_per_core=2)
+
+
+def _build_spinners(policy, filt, spin_per_socket=6, cost=None):
+    sim = NumaSim(BIG, policy, tlb_filter=filt, cost=cost)
+    main = sim.spawn_thread(0)
+    for node in range(BIG.n_nodes):
+        base = node * BIG.hw_threads_per_node
+        for i in range(spin_per_socket):
+            t = sim.spawn_thread(base + i + (1 if node == 0 else 0))
+            v = sim.mmap(t, 1)
+            sim.touch(t, v.start_vpn, write=True)
+    return sim, main
+
+
+@pytest.mark.parametrize("policy,filt", [
+    (Policy.LINUX, False), (Policy.MITOSIS, False),
+    (Policy.NUMAPTE, False), (Policy.NUMAPTE, True)])
+def test_fig01_shape_mprotect_batch(policy, filt):
+    """Alternating-perms mprotect storm with spinners on every socket: the
+    grouped-IPI fast path must stay byte-identical (incl. each spinner's
+    received-IPI charges)."""
+    sa, ma = _build_spinners(policy, filt)
+    sb, mb = _build_spinners(policy, filt)
+    va = sa.mmap(ma, 1)
+    sa.touch(ma, va.start_vpn, write=True)
+    vb = sb.mmap(mb, 1)
+    sb.touch(mb, vb.start_vpn, write=True)
+    perms = [PERM_R if i % 2 == 0 else PERM_RW for i in range(120)]
+    sa.mprotect_batch(ma, [va.start_vpn] * 120, 1, perms)
+    for p in perms:
+        sb.mprotect(mb, vb.start_vpn, 1, p)
+    assert_identical(sa, sb, f"{policy.value}/filt{filt}/fig01")
+    sa.check_invariants()
+
+
+@pytest.mark.parametrize("policy,filt", [
+    (Policy.LINUX, False), (Policy.MITOSIS, False), (Policy.NUMAPTE, True)])
+def test_fig10_shape_munmap_batch(policy, filt):
+    """Phased mmap/touch/munmap (the fig10 workload) batch vs scalar."""
+    sa, ma = _build_spinners(policy, filt)
+    sb, mb = _build_spinners(policy, filt)
+    vmas_a = sa.mmap_batch(ma, [1] * 80)
+    vmas_b = [sb.mmap(mb, 1) for _ in range(80)]
+    assert [v.start_vpn for v in vmas_a] == [v.start_vpn for v in vmas_b]
+    sa.touch_batch(ma, np.asarray([v.start_vpn for v in vmas_a]), True)
+    for v in vmas_b:
+        sb.touch(mb, v.start_vpn, True)
+    sa.munmap_batch(ma, [v.start_vpn for v in vmas_a], 1)
+    for v in vmas_b:
+        sb.munmap(mb, v.start_vpn, 1)
+    assert_identical(sa, sb, f"{policy.value}/filt{filt}/fig10")
+    sa.check_invariants()
+
+
+def test_fractional_costs_force_exact_fallback():
+    """A non-integral cost model makes thread times non-integer, so the
+    grouped-IPI settlement cannot use its multiply fast path and must take
+    the sequential-add fallback — still byte-identical."""
+    from repro.core import CostModel
+    cost = dataclasses.replace(CostModel.paper_default(), local_mem_ns=90.5,
+                               fault_fixed_ns=550.25)
+    sa, ma = _build_spinners(Policy.NUMAPTE, True, cost=cost)
+    sb, mb = _build_spinners(Policy.NUMAPTE, True, cost=cost)
+    va = sa.mmap(ma, 4)
+    vb = sb.mmap(mb, 4)
+    sa.touch_batch(ma, np.arange(va.start_vpn, va.end_vpn), True)
+    for v in range(vb.start_vpn, vb.end_vpn):
+        sb.touch(mb, v, True)
+    assert not sa.threads[ma].time_ns.is_integer()
+    sa.mprotect_batch(ma, [va.start_vpn] * 50, 4, [PERM_R, PERM_RW] * 25)
+    for i in range(50):
+        sb.mprotect(mb, vb.start_vpn, 4, PERM_R if i % 2 == 0 else PERM_RW)
+    assert_identical(sa, sb, "fractional-costs")
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_segfault_mid_batch_leaves_scalar_partial_state(policy):
+    """A touch op hitting a hole mid-batch raises SegfaultError after
+    applying exactly the partial state (including pending IPI-receive
+    settlements) the scalar sequence would have left."""
+    sa, ta = _build(policy)
+    sb, tb = _build(policy)
+    va = sa.mmap(ta[0], 8)
+    vb = sb.mmap(tb[0], 8)
+    hole = va.end_vpn + 99_999
+    ops_a = [("touch", ta[0], list(range(va.start_vpn, va.end_vpn)), True),
+             ("mprotect", ta[1], va.start_vpn, 8, PERM_R),
+             ("touch", ta[1], [va.start_vpn, hole]),
+             ("munmap", ta[0], va.start_vpn, 8)]
+    ops_b = [("touch", tb[0], list(range(vb.start_vpn, vb.end_vpn)), True),
+             ("mprotect", tb[1], vb.start_vpn, 8, PERM_R),
+             ("touch", tb[1], [vb.start_vpn, hole]),
+             ("munmap", tb[0], vb.start_vpn, 8)]
+    with pytest.raises(SegfaultError):
+        sa.apply_mm_ops(ops_a, engine="batch")
+    with pytest.raises(SegfaultError):
+        sb.apply_mm_ops(ops_b, engine="scalar")
+    assert_identical(sa, sb, f"{policy.value}/segfault")
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_workload_mm_phases_batch_matches_scalar(policy):
+    """The workloads mprotect/teardown phases (built on the mm engine)
+    are byte-identical to their scalar reference."""
+    from repro.core import APPS, build_app
+
+    spec = APPS["hashjoin"]
+    sims = {}
+    for eng in ("batch", "scalar"):
+        sim = NumaSim(TOPO, policy, prefetch_degree=9)
+        layout, _ = build_app(sim, spec, pages_per_gb=16, engine=eng)
+        mp = run_mprotect_phase(sim, layout, engine=eng)
+        td = run_teardown_phase(sim, layout, engine=eng)
+        sims[eng] = (sim, mp, td)
+    sim_b, mp_b, td_b = sims["batch"]
+    sim_s, mp_s, td_s = sims["scalar"]
+    assert mp_b == mp_s and td_b == td_s
+    assert_identical(sim_b, sim_s, f"{policy.value}/phases")
+    # teardown really tears down: every leaf table and data page freed
+    assert not sim_b.store.tables
+    assert not sim_b._oracle
+
+
+def test_mmap_batch_layout_matches_scalar():
+    sa, ta = _build(Policy.NUMAPTE)
+    sb, tb = _build(Policy.NUMAPTE)
+    sizes = [1, 700, 3, 512, 90]
+    va = sa.mmap_batch(ta[1], sizes)
+    vb = [sb.mmap(tb[1], n) for n in sizes]
+    assert [(v.vma_id, v.start_vpn, v.end_vpn, v.owner, v.perms)
+            for v in va] == \
+           [(v.vma_id, v.start_vpn, v.end_vpn, v.owner, v.perms)
+            for v in vb]
+    assert_identical(sa, sb, "mmap_batch")
+
+
+def test_numpy_scalar_write_mask_matches_batch():
+    """A 0-d / numpy-bool write mask must broadcast over the whole vpn
+    array in the scalar reference, exactly like the batch engine."""
+    sa, ta = _build(Policy.NUMAPTE)
+    sb, tb = _build(Policy.NUMAPTE)
+    va = sa.mmap(ta[0], 8)
+    sb.mmap(tb[0], 8)
+    vpns = list(range(va.start_vpn, va.end_vpn))
+    for wm in (np.True_, np.asarray(True), np.asarray([True] * 8)):
+        sa.apply_mm_ops([("touch", ta[0], vpns, wm)], engine="batch")
+        sb.apply_mm_ops([("touch", tb[0], vpns, wm)], engine="scalar")
+        assert_identical(sa, sb, f"wm={type(wm).__name__}")
+    assert sa.counters.first_touches == 8
+
+
+@pytest.mark.parametrize("policy,filt", [
+    (Policy.LINUX, False), (Policy.NUMAPTE, True)])
+def test_zero_length_ops_match_scalar(policy, filt):
+    """Zero-length mprotect/munmap at an unaligned start still touches the
+    straddled leaf table in the scalar path (and so shoots down against
+    its sharer mask) — the batch engine must reproduce that exactly."""
+    sa, ta = _build(policy, tlb_filter=filt)
+    sb, tb = _build(policy, tlb_filter=filt)
+    va = sa.mmap(ta[0], 8)
+    sb.mmap(tb[0], 8)
+    for sim, tids in ((sa, ta), (sb, tb)):
+        sim.touch_batch(tids[0], np.arange(va.start_vpn, va.end_vpn), True)
+        sim.touch_batch(tids[1], np.arange(va.start_vpn, va.end_vpn))
+    mid = va.start_vpn + 3   # not table-aligned
+    ops_a = [("munmap", ta[0], mid, 0), ("mprotect", ta[0], mid, 0, PERM_R),
+             ("munmap", ta[0], va.start_vpn, 0)]   # aligned: no table
+    ops_b = [("munmap", tb[0], mid, 0), ("mprotect", tb[0], mid, 0, PERM_R),
+             ("munmap", tb[0], va.start_vpn, 0)]
+    sa.apply_mm_ops(ops_a, engine="batch")
+    sb.apply_mm_ops(ops_b, engine="scalar")
+    assert_identical(sa, sb, f"{policy.value}/zero-length")
+
+
+def test_apply_mm_ops_rejects_unknown_ops():
+    sim, tids = _build(Policy.NUMAPTE)
+    with pytest.raises(ValueError):
+        sim.apply_mm_ops([("frobnicate", tids[0], 1)])
+    with pytest.raises(ValueError):
+        sim.apply_mm_ops([("mmap", tids[0], 1)], engine="nope")
