@@ -2,9 +2,11 @@
 from __future__ import annotations
 
 import sys
+import time
 from typing import Callable, Dict, List
 
 from repro.core import NumaSim, PAPER_8SOCKET, Policy
+from repro.core.mm_batch import CONCURRENCY_MODES
 from repro.core.pagetable import PERM_R, PERM_RW
 
 
@@ -55,3 +57,33 @@ def policies():
             ("mitosis", Policy.MITOSIS, False),
             ("numapte-nofilter", Policy.NUMAPTE, False),
             ("numapte", Policy.NUMAPTE, True)]
+
+
+def concurrency_modes(concurrency: str = "both") -> List[str]:
+    """Resolve a --concurrency selector into the modes to sweep."""
+    if concurrency == "both":
+        return list(CONCURRENCY_MODES)
+    if concurrency in CONCURRENCY_MODES:
+        return [concurrency]
+    raise ValueError(f"unknown concurrency {concurrency!r}")
+
+
+def engine_walltime_rows(run_fn: Callable[[str, int], object],
+                         scales: List[int]) -> List[Dict]:
+    """``row_type="engine_walltime"`` rows: host wall seconds of the same
+    workload on the batched mm-op engine vs the scalar reference, swept
+    over ``--scale`` factors (the engine-speed story the JSON carries
+    across PRs).  ``run_fn(engine, scale_factor)`` runs one workload."""
+    rows: List[Dict] = []
+    for s in scales:
+        walls = {}
+        for eng in ("batch", "scalar"):
+            t0 = time.perf_counter()
+            run_fn(eng, s)
+            walls[eng] = time.perf_counter() - t0
+        rows.append({"row_type": "engine_walltime", "scale_factor": s,
+                     "wall_batch_s": round(walls["batch"], 4),
+                     "wall_scalar_s": round(walls["scalar"], 4),
+                     "batch_speedup": round(
+                         walls["scalar"] / max(walls["batch"], 1e-9), 2)})
+    return rows

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import NumaSim, PAPER_8SOCKET
 from repro.core.pagetable import PERM_R, PERM_RW, Policy
 
-from .common import csv, policies
+from .common import csv, engine_walltime_rows, policies
 
 
 def run_one(policy: Policy, filt: bool, op: str, n_pages: int,
@@ -75,6 +75,12 @@ def main(quick: bool = False, scale: int = 1) -> list:
                 ns = run_one(pol, filt, op, n, iters)
                 rows.append({"op": op, "range": label, "policy": name,
                              "ns": round(ns), "vs_linux": round(ns / base, 3)})
+    # engine wall-time comparison: the same phased mmap/touch/munmap
+    # workload on the batched engine vs the scalar reference, scale-swept
+    rows += engine_walltime_rows(
+        lambda eng, s: run_one(Policy.LINUX, False, "munmap", 32,
+                               iters=25 * s, engine=eng),
+        [1] if quick else [1, 2, max(scale, 4)])
     return csv("fig09_mm_ops", rows)
 
 

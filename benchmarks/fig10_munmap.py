@@ -16,7 +16,7 @@ import numpy as np
 from repro.core import NumaSim, PAPER_8SOCKET
 from repro.core.pagetable import Policy
 
-from .common import csv, make_spinners, policies
+from .common import csv, engine_walltime_rows, make_spinners, policies
 
 
 def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150,
@@ -55,6 +55,13 @@ def main(quick: bool = False, scale: int = 1) -> list:
             rows.append({"policy": name, "spin_per_socket": spin,
                          "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
                          **r})
+    # engine wall-time comparison (ROADMAP open item): the same full-spin
+    # munmap storm on the batched engine vs the scalar reference, swept
+    # over --scale so the speedup trajectory is diffable across PRs
+    rows += engine_walltime_rows(
+        lambda eng, s: run_one(Policy.LINUX, False, 18, iters=40 * s,
+                               engine=eng),
+        [1] if quick else [1, 2, max(scale, 4)])
     return csv("fig10_munmap", rows)
 
 

@@ -1,23 +1,35 @@
-"""Concurrent mm-ops scenario: mixed mmap/touch/mprotect/munmap
-interleavings across threads, at scale.
+"""Concurrent mm-ops scenarios: mixed interleavings and munmap storms
+across threads, under both shootdown-settlement modes.
 
 This is the regime the paper's application results live in — many threads
 on many sockets mutating the address space concurrently while spinners
-(the IPI victims) run everywhere — and the scenario the scalar per-op path
-cannot run at paper scale: each scalar munmap/mprotect pays an O(CPUs)
-shootdown scan plus per-target-thread IPI charges, so op counts in the
-tens of thousands take minutes.  The batched engine
-(``NumaSim.apply_mm_ops``) runs the identical op sequence with cached
-fan-out and grouped IPI accrual, byte-identical in counters and modeled
-time (differentially tested), which is what makes ``--scale`` practical.
+(the IPI victims) run everywhere.  PR 2's batched engine made the op
+counts practical; PR 3 adds what the sequential settlement could never
+show: *concurrent* shootdowns contending for interrupt delivery.  Under
+``concurrency="overlap"`` (``repro.core.shootdown``) the rounds of
+different initiators overlap, each target CPU serializes its interrupt
+handlers, and every initiator's ack wait stretches by its slowest
+target's receive-queue delay — the mechanism behind the paper's 40x
+munmap/mprotect collapse, and the reason numaPTE's sharer-filtered
+fan-out matters: filtered CPUs never enter anyone's receive queue.
 
-The op program is generated once per (seed, size) with a shadow address
+Three scenarios:
+
+* ``mixed-ops``     — the PR-2 mixed mmap/touch/mprotect/munmap program,
+  now swept over both concurrency modes; rows carry the new
+  ``ipi_queue_delay_*`` / ``overlapping_rounds`` counters.
+* ``munmap-storm``  — W workers (round-robin across sockets) munmap their
+  own pages in lockstep waves, swept over W: the contention cliff.  Linux
+  per-op latency grows superlinearly with W (every round targets every
+  CPU, so the queues compound); numaPTE stays near-flat (its rounds only
+  ever target the owner socket).
+* ``app-churn``     — the Table-3 btree app through the ``workloads``
+  mprotect/teardown phases, unchanged from PR 2.
+
+The op programs are generated once per (seed, size) with a shadow address
 allocator that mirrors the simulator's mmap layout exactly, so every
-policy/engine replays the *same* interleaving.  Rows report modeled time,
-shootdown/IPI counters, and host wall seconds (the engine-speed story).
-
-An ``app-churn`` section additionally runs the Table-3 btree app through
-the ``workloads`` mprotect/teardown phases on the same engine.
+policy/engine/mode replays the *same* interleaving and rows are
+deterministic across runs.
 """
 from __future__ import annotations
 
@@ -29,7 +41,7 @@ import numpy as np
 from repro.core import (APPS, NumaSim, PAPER_8SOCKET, Policy, run_app)
 from repro.core.pagetable import PERM_R, PERM_RW, next_table_aligned
 
-from .common import csv, make_spinners, policies
+from .common import concurrency_modes, csv, make_spinners, policies
 
 #: op-kind mix: mm-heavy on purpose (the access path has its own figs)
 _MIX = (("mmap", 0.30), ("touch", 0.30), ("mprotect", 0.20),
@@ -82,7 +94,8 @@ def build_program(n_threads: int, n_ops: int, seed: int,
 
 def run_one(policy: Policy, filt: bool, n_ops: int, *,
             spin: int = 8, workers_per_node: int = 2, seed: int = 11,
-            engine: str = "batch") -> dict:
+            engine: str = "batch",
+            concurrency: str = "sequential") -> dict:
     sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
     tids = []
     for node in range(sim.topo.n_nodes):
@@ -94,29 +107,88 @@ def run_one(policy: Policy, filt: bool, n_ops: int, *,
                for op in build_program(len(tids), n_ops, seed,
                                        sim._next_vpn)]
     t_before = {t: sim.thread_time_ns(t) for t in tids}
+    c0 = sim.counters.snapshot()
     wall = time.perf_counter()
-    sim.apply_mm_ops(program, engine=engine)
+    sim.apply_mm_ops(program, engine=engine, concurrency=concurrency)
     wall = time.perf_counter() - wall
     sim.check_invariants()
-    c = sim.counters
+    c = sim.counters.diff(c0)
     modeled = sum(sim.thread_time_ns(t) - t_before[t] for t in tids)
-    return {"n_ops": n_ops, "modeled_ms": round(modeled / 1e6, 3),
+    return {"n_ops": n_ops, "n_threads": len(tids),
+            "modeled_ms": round(modeled / 1e6, 3),
             "wall_s": round(wall, 3), "shootdowns": c.shootdown_rounds,
             "ipis_local": c.ipis_local, "ipis_remote": c.ipis_remote,
             "ipis_filtered": c.ipis_filtered,
+            "ipi_queue_delay_us": round(c.ipi_queue_delay_ns / 1e3, 3),
+            "overlapping_rounds": c.overlapping_rounds,
             "pt_pages_freed": c.pt_pages_freed}
 
 
-def main(quick: bool = False, scale: int = 1) -> list:
+def run_storm(policy: Policy, filt: bool, n_threads: int, *,
+              iters: int = 60, spin: int = 4, engine: str = "batch",
+              concurrency: str = "overlap") -> dict:
+    """W workers munmap their own (private) 1-page areas in lockstep
+    round-robin waves — the contention-cliff microbenchmark.  Workers are
+    placed round-robin across sockets, so for W <= 8 numaPTE's
+    sharer-filtered rounds never share a target CPU while Linux's
+    process-wide rounds all contend for every spinner and worker."""
+    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
+    topo = sim.topo
+    workers = [sim.spawn_thread((i % topo.n_nodes) * topo.hw_threads_per_node
+                                + 30 + i // topo.n_nodes)
+               for i in range(n_threads)]
+    make_spinners(sim, spin, engine=engine)
+    mmap_ops = [("mmap", w, 1) for _ in range(iters) for w in workers]
+    vmas = sim.apply_mm_ops(mmap_ops, engine=engine)
+    sim.apply_mm_ops([("touch", op[1], [v.start_vpn], True)
+                      for op, v in zip(mmap_ops, vmas)], engine=engine)
+    munmap_ops = [("munmap", op[1], v.start_vpn, 1)
+                  for op, v in zip(mmap_ops, vmas)]
+    before = {w: sim.thread_time_ns(w) for w in workers}
+    c0 = sim.counters.snapshot()
+    sim.apply_mm_ops(munmap_ops, engine=engine, concurrency=concurrency)
+    sim.check_invariants()
+    c = sim.counters.diff(c0)
+    per_op = (sum(sim.thread_time_ns(w) - before[w] for w in workers)
+              / len(munmap_ops))
+    return {"n_threads": n_threads, "ns_per_op": round(per_op, 1),
+            "ipi_queue_delay_us": round(c.ipi_queue_delay_ns / 1e3, 3),
+            "overlapping_rounds": c.overlapping_rounds,
+            "ipis_local": c.ipis_local, "ipis_remote": c.ipis_remote,
+            "ipis_filtered": c.ipis_filtered}
+
+
+def main(quick: bool = False, scale: int = 1,
+         concurrency: str = "both") -> list:
     n_ops = (600 if quick else 2500) * scale
     rows = []
-    base = None
-    for name, policy, filt in policies():
-        r = run_one(policy, filt, n_ops)
-        if name == "linux":
-            base = r["modeled_ms"]
-        rows.append({"scenario": "mixed-ops", "policy": name,
-                     "vs_linux": round(r["modeled_ms"] / base, 3), **r})
+    # mixed-ops: the PR-2 scenario, swept over shootdown-settlement modes
+    for mode in concurrency_modes(concurrency):
+        base = None
+        for name, policy, filt in policies():
+            r = run_one(policy, filt, n_ops, concurrency=mode)
+            if name == "linux":
+                base = r["modeled_ms"]
+            rows.append({"scenario": "mixed-ops", "concurrency": mode,
+                         "policy": name,
+                         "vs_linux": round(r["modeled_ms"] / base, 3), **r})
+    # munmap-storm: the contention cliff vs concurrent-initiator count
+    # (the sequential rows are the flat reference the cliff rises from)
+    storm_iters = (40 if quick else 60) * scale
+    threads = [1, 4, 8] if quick else [1, 2, 4, 8, 16]
+    for mode in concurrency_modes(concurrency):
+        for name, policy, filt in (("linux", Policy.LINUX, False),
+                                   ("numapte", Policy.NUMAPTE, True)):
+            base = None
+            for w in threads:
+                r = run_storm(policy, filt, w, iters=storm_iters,
+                              concurrency=mode)
+                if base is None:
+                    base = r["ns_per_op"]
+                rows.append({"scenario": "munmap-storm", "concurrency": mode,
+                             "policy": name,
+                             "vs_1thread": round(r["ns_per_op"] / base, 3),
+                             **r})
     # app churn: loading + exec + mprotect pass + teardown of the btree app
     spec = APPS["btree"]
     accesses = (2000 if quick else 8000) * scale

@@ -6,17 +6,24 @@
 prints ``name,key=value,...`` CSV rows for every reproduced artifact and
 writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
 ``bench_out/``) so the perf trajectory is machine-readable and CI can
-archive it.  JSON schema (version 1):
+archive it.  JSON schema (version 2):
 
-    {"schema_version": 1, "name": str, "quick": bool, "scale": int,
-     "elapsed_s": float, "rows": [ {column: value, ...}, ... ],
+    {"schema_version": 2, "name": str, "quick": bool, "scale": int,
+     "concurrency": str | null, "elapsed_s": float,
+     "rows": [ {column: value, ...} ], "row_types": [str, ...],
      "error": str | null}
 
 ``rows`` carries everything the CSV shows (per-policy modeled times,
 counters, speedups) plus JSON-only nested fields such as raw counter
-dicts.  ``--scale`` multiplies dataset/iteration sizes for the benchmarks
-that support it (the batch-engine ones), letting access streams reach
-paper scale.  A benchmark that raises is recorded in its JSON ``error``
+dicts.  Rows may carry a ``row_type`` discriminator (``"data"`` when
+absent): ``"engine_walltime"`` rows compare batched-vs-scalar host wall
+seconds at swept scales; ``row_types`` summarizes which kinds an artifact
+contains.  ``--scale`` multiplies dataset/iteration sizes for the
+benchmarks that support it (the batch-engine ones), letting access
+streams reach paper scale.  ``--concurrency {both,sequential,overlap}``
+selects the shootdown-settlement sweep for the benchmarks that model
+concurrent mm ops (``concurrency`` is null in artifacts of benchmarks
+that don't).  A benchmark that raises is recorded in its JSON ``error``
 field and the harness continues, unless ``--strict``.
 """
 from __future__ import annotations
@@ -51,7 +58,7 @@ BENCHES = {
     "roofline": roofline.main,
 }
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
 def _jsonable(obj):
@@ -64,7 +71,8 @@ def _jsonable(obj):
 def run_benchmarks(names: Optional[Iterable[str]] = None, *,
                    quick: bool = False, scale: int = 1,
                    outdir: str = "bench_out",
-                   strict: bool = False) -> Dict[str, str]:
+                   strict: bool = False,
+                   concurrency: str = "both") -> Dict[str, str]:
     """Run benchmarks, print their CSV, and write BENCH_<name>.json files.
 
     Returns {benchmark name: json path}.  Used by __main__, CI and the
@@ -74,9 +82,12 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
     written: Dict[str, str] = {}
     for name in names:
         fn = BENCHES[name]
+        params = inspect.signature(fn).parameters
         kwargs = {"quick": quick}
-        if "scale" in inspect.signature(fn).parameters:
+        if "scale" in params:
             kwargs["scale"] = scale
+        if "concurrency" in params:
+            kwargs["concurrency"] = concurrency
         print(f"# --- {name} ---", file=sys.stderr)
         t0 = time.time()
         rows, error = None, None
@@ -93,8 +104,11 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             "name": name,
             "quick": quick,
             "scale": scale,
+            "concurrency": concurrency if "concurrency" in params else None,
             "elapsed_s": round(elapsed, 3),
             "rows": rows or [],
+            "row_types": sorted({row.get("row_type", "data")
+                                 for row in rows}) if rows else [],
             "error": error,
         }
         path = os.path.join(outdir, f"BENCH_{name}.json")
@@ -124,9 +138,16 @@ def main() -> None:
     ap.add_argument("--strict", action="store_true",
                     help="re-raise benchmark exceptions instead of "
                          "recording them in the JSON artifact")
+    from .common import CONCURRENCY_MODES
+    ap.add_argument("--concurrency", default="both",
+                    choices=["both", *CONCURRENCY_MODES],
+                    help="shootdown-settlement sweep for the concurrent "
+                         "mm-op benchmarks (overlap = contending IPI "
+                         "rounds, see repro.core.shootdown)")
     args = ap.parse_args()
     run_benchmarks([args.only] if args.only else None, quick=args.quick,
-                   scale=args.scale, outdir=args.outdir, strict=args.strict)
+                   scale=args.scale, outdir=args.outdir, strict=args.strict,
+                   concurrency=args.concurrency)
 
 
 if __name__ == "__main__":

@@ -53,8 +53,22 @@ have left (pending IPI dues are settled before the exception propagates).
 
 Assumptions (shared with ``repro.core.batch`` and the scalar operating
 regime of every workload in this repo): VMAs are disjoint, and ops in one
-batch are applied in sequence (the "concurrency" of the concurrent-mm-ops
-scenario is thread-interleaving, exactly like the scalar reference).
+batch are applied in sequence — protocol state (page tables, TLBs, VMAs,
+the oracle) always evolves in program order, under either concurrency
+mode.
+
+``concurrency="overlap"`` (PR 3) additionally settles concurrently issued
+shootdowns as *overlapping IPI rounds*: each round is handed to a
+``repro.core.shootdown.ContentionModel`` which tracks per-CPU
+interrupt-handler busy horizons and stretches the initiator's ack wait by
+its slowest target's receive-queue delay (counters
+``ipi_queue_delay_ns`` / ``overlapping_rounds``).  The zero-delay model
+(``NullContention``) settles every round to exactly zero extra cost, so
+overlap mode under it is byte-identical to ``concurrency="sequential"`` —
+the differential anchor of ``tests/test_shootdown_contention.py``.  The
+same model instance drives the scalar and batched engines through the
+identical per-round float sequence, so the scalar/batch differential holds
+under contention too.
 """
 from __future__ import annotations
 
@@ -67,8 +81,14 @@ import numpy as np
 
 from .pagetable import (LEAF_SHIFT, PERM_RW, PTE, PTES_PER_TABLE, VMA,
                         find_vma_sorted, next_table_aligned)
+from .shootdown import ContentionModel, QueueContention
 
-__all__ = ["apply_mm_ops", "mmap_batch", "mprotect_batch", "munmap_batch"]
+__all__ = ["CONCURRENCY_MODES", "apply_mm_ops", "mmap_batch",
+           "mprotect_batch", "munmap_batch"]
+
+#: shootdown-settlement modes of apply_mm_ops (single source of truth —
+#: the benchmark CLI derives its --concurrency choices from this).
+CONCURRENCY_MODES = ("sequential", "overlap")
 
 _IDX_MASK = PTES_PER_TABLE - 1
 #: beyond this magnitude float addition of integers can round; fall back.
@@ -81,7 +101,9 @@ _BY_START = operator.attrgetter("start_vpn")
 # --------------------------------------------------------------------------
 # public API
 # --------------------------------------------------------------------------
-def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch") -> list:
+def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch",
+                 concurrency: str = "sequential",
+                 contention: Optional[ContentionModel] = None) -> list:
     """Apply a sequence of memory-management ops, in order.
 
     Each op is a tuple whose first element names the kind:
@@ -98,16 +120,45 @@ def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch") -> list:
     ``engine="batch"`` runs the vectorized engine, which is byte-identical
     in counters, modeled times, TLB state/order, page-table replicas,
     sharer masks, the oracle, and the VMA layout.
+
+    ``concurrency`` selects the shootdown settlement for the batch:
+
+    * ``"sequential"`` (default) — every IPI round runs alone, exactly the
+      pre-existing semantics; any sim-level contention model is suspended
+      for the batch's duration so this mode is always the clean reference
+      (passing ``contention`` with this mode is an error, not a no-op).
+    * ``"overlap"`` — concurrently issued mm ops from different threads
+      form overlapping IPI rounds, settled by ``contention`` (or the sim's
+      model, or a fresh ``QueueContention``) — see ``repro.core.shootdown``.
+      Pass an explicit model to carry busy horizons across batches.
     """
     ops = list(ops)
     for op in ops:
         if not op or op[0] not in _KINDS:
             raise ValueError(f"unknown mm op: {op!r}")
-    if engine == "scalar":
-        return _apply_scalar(sim, ops)
-    if engine != "batch":
+    if engine not in ("scalar", "batch"):
         raise ValueError(f"unknown engine {engine!r}")
-    return _MMEngine(sim, ops).run()
+    if concurrency not in CONCURRENCY_MODES:
+        raise ValueError(f"unknown concurrency {concurrency!r}")
+    if contention is not None and concurrency != "overlap":
+        raise ValueError("contention model given but concurrency="
+                         f"{concurrency!r}; it would be silently ignored — "
+                         "pass concurrency=\"overlap\"")
+    if concurrency == "overlap":
+        model: Optional[ContentionModel] = (
+            contention if contention is not None
+            else sim.contention if sim.contention is not None
+            else QueueContention())
+    else:
+        model = None
+    prev = sim.contention
+    sim.contention = model
+    try:
+        if engine == "scalar":
+            return _apply_scalar(sim, ops)
+        return _MMEngine(sim, ops).run()
+    finally:
+        sim.contention = prev
 
 
 def mmap_batch(sim, tid: int, sizes, *, perms: int = PERM_RW,
@@ -204,6 +255,9 @@ class _MMEngine:
         from .sim import IPI_RECEIVE_NS
         self.ipi_ns = float(IPI_RECEIVE_NS)
         self.ipi_int = self.ipi_ns.is_integer()
+        # overlapping-round settlement (set by apply_mm_ops for the batch's
+        # duration); None = classic sequential semantics.
+        self.contention = sim.contention
         self.wt: Dict[int, float] = {}
         # IPI-receive accrual, O(nodes) per round / O(1) per settlement: a
         # thread on cpu C (node N) is targeted by every round whose mask
@@ -229,6 +283,7 @@ class _MMEngine:
         occ: Dict[int, set] = {}
         for t in self.sim.threads.values():
             occ.setdefault(self.node_of(t.cpu), set()).add(t.cpu)
+        self.occ_sets = occ                 # node -> occupied cpus
         self.occ_count = {n: len(s) for n, s in occ.items()}
         self.total_occ = sum(self.occ_count.values())
         self.occupied_all = set().union(*occ.values()) if occ else set()
@@ -588,8 +643,25 @@ class _MMEngine:
         ctr.ipis_local += n_local
         ctr.ipis_remote += n_remote
         c = sim.cost
-        t += (c.shootdown_cost_ns(n_local, n_remote)
-              + c.tlb_invalidate_self_ns)
+        base = (c.shootdown_cost_ns(n_local, n_remote)
+                + c.tlb_invalidate_self_ns)
+        model = self.contention
+        if model is not None and (n_local or n_remote):
+            # same round-start time and float order as the scalar path: the
+            # round starts at the initiator's working time before the
+            # dispatch/ack charge; base and extra land as two separate adds.
+            targets = [cpu
+                       for nd, cpus in self.occ_sets.items()
+                       if (allowed >> nd) & 1
+                       for cpu in cpus if cpu != me_cpu]
+            s = model.settle(t, my_node, targets, self.node_of, c)
+            ctr.ipi_queue_delay_ns += s.queued_ns
+            ctr.overlapping_rounds += s.contended
+            t += base
+            if s.extra_wait_ns:
+                t += s.extra_wait_ns
+        else:
+            t += base
         if allowed:
             node_rounds = self.node_rounds
             for nd in range(len(node_rounds)):

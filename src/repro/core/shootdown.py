@@ -1,0 +1,167 @@
+"""Contention-aware TLB-shootdown model: overlapping IPI rounds.
+
+The scalar simulator (and the PR-2 mm-op engine) settle every shootdown as
+if it ran alone: the initiator pays dispatch + one ack wait, each target
+thread pays a fixed interrupt-handler cost, and the next shootdown starts
+from a quiet system.  That is the right reference semantics, but it cannot
+reproduce the paper's headline NUMA result — munmap/mprotect degrading up
+to 40x — because that cliff comes from *concurrent* shootdowns contending
+for interrupt delivery: when many threads mutate the address space at
+once, their IPI rounds overlap, each target CPU serializes the handlers,
+and every initiator's synchronous ack wait stretches by the receive-queue
+delay of its slowest target (HTC, arXiv:1701.07517, models exactly this
+initiator/responder overlap in hardware; numaPTE's sharer filter matters
+precisely because it keeps CPUs *out* of that queue).
+
+This module is the pluggable settlement layer: :class:`NumaSim` (and the
+batched mm-op engine via ``apply_mm_ops(..., concurrency="overlap")``)
+hand every round to a :class:`ContentionModel`, which owns the
+discrete-event state — per-CPU interrupt-handler busy horizons — and
+returns what the round costs *beyond* the classic charges:
+
+  * ``extra_wait_ns``  — added to the initiating thread on top of the
+    classic dispatch/ack charge: the slowest target's queue delay (the ack
+    the initiator spins on cannot return before that handler has run).
+  * ``queued_ns``      — the sum of all targets' receive-queue delays for
+    this round (the ``ipi_queue_delay_ns`` counter).
+  * ``contended``      — whether any target's handler was busy on arrival
+    (the ``overlapping_rounds`` counter).
+
+Two models ship:
+
+  * :class:`NullContention` — the zero-delay model: every round settles to
+    exactly zero extra cost, so an ``overlap``-mode run is byte-identical
+    (counters, float-exact thread times, TLB order, sharer masks, VMA
+    layout) to the sequential reference.  This is the differential anchor
+    proven by ``tests/test_shootdown_contention.py``.
+  * :class:`QueueContention` — the real model: one busy horizon per target
+    CPU, advanced by a fixed handler occupancy per received IPI.  A round
+    arriving at a busy CPU queues behind the in-flight handler(s); the
+    initiator's wait stretches by the worst queue delay among its targets.
+
+Determinism: targets are visited in sorted CPU order inside the model, so
+float accumulation order (and therefore every modeled time and the
+``ipi_queue_delay_ns`` counter) is identical no matter which engine —
+scalar syscalls or the batched mm-op engine — drives the rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable
+
+#: interrupt-handler occupancy per received IPI, charged to each target
+#: thread (classic) and occupying the target CPU's handler (overlap mode).
+IPI_RECEIVE_NS = 700.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSettlement:
+    """What one IPI round costs beyond the classic (sequential) charges."""
+    extra_wait_ns: float = 0.0   # initiator ack-wait stretch (slowest target)
+    queued_ns: float = 0.0       # sum of per-target receive-queue delays
+    contended: bool = False      # any target handler busy on IPI arrival
+
+
+_ZERO = RoundSettlement()
+
+
+class ContentionModel:
+    """Interface: settle one IPI round against the in-flight rounds.
+
+    ``settle`` is called once per shootdown round that has at least one
+    target CPU, *before* the classic initiator charge lands, with:
+
+      * ``t_start``  — the initiating thread's modeled time at round start
+        (after the syscall's PTE-update charges, before the shootdown
+        charge), i.e. when the IPIs are dispatched;
+      * ``my_node``  — the initiator's NUMA node (dispatch latency class);
+      * ``targets``  — the target CPU ids (each receives exactly one IPI;
+        any iteration order — the model must not depend on it);
+      * ``node_of``  — cpu id -> node id;
+      * ``cost``     — the simulator's :class:`CostModel` (dispatch ns).
+    """
+
+    def settle(self, t_start: float, my_node: int, targets: Iterable[int],
+               node_of: Callable[[int], int], cost) -> RoundSettlement:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        """Forget all in-flight state (fresh quiet system)."""
+
+
+class NullContention(ContentionModel):
+    """Zero-delay model: rounds never contend.  ``overlap`` mode under this
+    model is byte-identical to the sequential reference — the property the
+    differential suite pins."""
+
+    def settle(self, t_start, my_node, targets, node_of, cost
+               ) -> RoundSettlement:
+        return _ZERO
+
+    def reset(self) -> None:
+        pass
+
+
+class QueueContention(ContentionModel):
+    """Discrete-event receive queues: one busy horizon per target CPU.
+
+    An IPI dispatched at ``t_start`` arrives at a target CPU after that
+    target's dispatch latency (same-socket multicast vs cross-socket).  If
+    the CPU's handler is still occupied by earlier rounds, the IPI queues;
+    its handler runs back-to-back after the in-flight ones and occupies the
+    CPU for ``handler_ns``.  The initiator's synchronous wait stretches by
+    the largest queue delay among its targets (classic ack waits already
+    cover the uncontended handler latency).
+
+    The busy horizons only ever move forward, so settlement is O(targets)
+    per round with no event heap, and a CPU's horizon is independent of
+    every other CPU's — results do not depend on target visit order (the
+    model still sorts, so float sums are reproducible bit-for-bit).
+
+    Round start times are carried on a monotone program-order event clock
+    (``max`` of every round start seen so far): per-thread modeled clocks
+    drift apart freely (the simulator has no global scheduler), and
+    measuring a straggler initiator's delay against a leader's far-future
+    busy horizon would book that drift — not contention — as queue delay.
+    On the monotone clock a round only queues behind the handlers of
+    rounds genuinely in flight around its own dispatch.
+    """
+
+    def __init__(self, *, handler_ns: float = IPI_RECEIVE_NS):
+        self.handler_ns = float(handler_ns)
+        self.busy_until: Dict[int, float] = {}   # cpu -> handler-free time
+        self.clock = 0.0                         # monotone round-start clock
+
+    def settle(self, t_start, my_node, targets, node_of, cost
+               ) -> RoundSettlement:
+        if t_start > self.clock:
+            self.clock = t_start
+        else:
+            t_start = self.clock
+        busy = self.busy_until
+        handler = self.handler_ns
+        disp_l = cost.ipi_dispatch_local_ns
+        disp_r = cost.ipi_dispatch_remote_ns
+        worst = 0.0
+        queued = 0.0
+        for cpu in sorted(targets):
+            arrival = t_start + (disp_l if node_of(cpu) == my_node
+                                 else disp_r)
+            free = busy.get(cpu, 0.0)
+            if free > arrival:
+                delay = free - arrival
+                queued += delay
+                if delay > worst:
+                    worst = delay
+                begin = free
+            else:
+                begin = arrival
+            busy[cpu] = begin + handler
+        if queued == 0.0:
+            return _ZERO
+        return RoundSettlement(extra_wait_ns=worst, queued_ns=queued,
+                               contended=True)
+
+    def reset(self) -> None:
+        self.busy_until.clear()
+        self.clock = 0.0

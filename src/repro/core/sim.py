@@ -35,10 +35,11 @@ from .costmodel import CostModel
 from .pagetable import (PERM_RW, PTE, PTES_PER_TABLE, LeafTable,
                         PageTableStore, Policy, VMA, leaf_base_vpn, leaf_id,
                         leaf_index, next_table_aligned)
+from .shootdown import IPI_RECEIVE_NS, ContentionModel
 from .tlb import DEFAULT_TLB_ENTRIES, TLB
 from .topology import NumaTopology
 
-IPI_RECEIVE_NS = 700.0  # cost charged to each interrupted target thread
+__all__ = ["Counters", "IPI_RECEIVE_NS", "NumaSim", "SegfaultError", "Thread"]
 
 
 @dataclasses.dataclass
@@ -57,6 +58,8 @@ class Counters:
     ipis_local: int = 0
     ipis_remote: int = 0
     ipis_filtered: int = 0       # IPIs numaPTE proved unnecessary (saved)
+    overlapping_rounds: int = 0  # rounds whose IPIs queued behind another's
+    ipi_queue_delay_ns: float = 0.0  # total receive-queue delay (contention)
     pt_pages_alloc: int = 0
     pt_pages_freed: int = 0
     data_pages_alloc: int = 0
@@ -93,10 +96,14 @@ class NumaSim:
                  tlb_filter: bool = True,
                  cost: Optional[CostModel] = None,
                  tlb_entries: int = DEFAULT_TLB_ENTRIES,
-                 interference_nodes: Sequence[int] = ()):
+                 interference_nodes: Sequence[int] = (),
+                 contention: Optional[ContentionModel] = None):
         if policy is not Policy.NUMAPTE:
             tlb_filter = False  # the optimization needs sharer info
         self.topo = topology
+        #: pluggable overlapping-IPI-round settlement (repro.core.shootdown);
+        #: None = classic sequential semantics (every round runs alone).
+        self.contention = contention
         self.policy = policy
         self.prefetch_degree = prefetch_degree
         self.tlb_filter = tlb_filter
@@ -222,13 +229,20 @@ class NumaSim:
                             return_frames=return_frames)
 
     # ------------------------------------------------------- batched mm ops
-    def apply_mm_ops(self, ops, *, engine: str = "batch") -> list:
+    def apply_mm_ops(self, ops, *, engine: str = "batch",
+                     concurrency: str = "sequential",
+                     contention: Optional[ContentionModel] = None) -> list:
         """Apply a sequence of ``("mmap"|"touch"|"mprotect"|"munmap"|
         "migrate", tid, ...)`` ops in order (see ``repro.core.mm_batch``).
         ``engine="batch"`` runs the vectorized mm engine, byte-identical to
-        ``engine="scalar"`` (the per-op reference loop)."""
+        ``engine="scalar"`` (the per-op reference loop).
+        ``concurrency="overlap"`` settles concurrently issued shootdowns as
+        overlapping IPI rounds under a ``repro.core.shootdown`` contention
+        model; ``"sequential"`` keeps the classic each-round-runs-alone
+        semantics."""
         from .mm_batch import apply_mm_ops as _apply
-        return _apply(self, ops, engine=engine)
+        return _apply(self, ops, engine=engine, concurrency=concurrency,
+                      contention=contention)
 
     def mmap_batch(self, tid: int, sizes, *, perms: int = PERM_RW,
                    engine: str = "batch"):
@@ -534,8 +548,20 @@ class NumaSim:
         ctr.shootdown_rounds += 1
         ctr.ipis_local += n_local
         ctr.ipis_remote += n_remote
-        self._charge(tid, c.shootdown_cost_ns(n_local, n_remote)
-                     + c.tlb_invalidate_self_ns)
+        base = c.shootdown_cost_ns(n_local, n_remote) + c.tlb_invalidate_self_ns
+        if self.contention is not None and targets:
+            # overlapping-round settlement: the round starts now (me.time_ns,
+            # before the dispatch/ack charge); the initiator's synchronous
+            # wait stretches by the slowest target's receive-queue delay.
+            s = self.contention.settle(me.time_ns, my_node, targets,
+                                       self.topo.node_of_cpu, c)
+            ctr.ipi_queue_delay_ns += s.queued_ns
+            ctr.overlapping_rounds += s.contended
+            self._charge(tid, base)
+            if s.extra_wait_ns:
+                self._charge(tid, s.extra_wait_ns)
+        else:
+            self._charge(tid, base)
         # apply invalidations on targets (and self)
         self.tlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
         for cpu in targets:

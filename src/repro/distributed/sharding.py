@@ -106,8 +106,9 @@ def logical_spec(*logical_axes: Optional[str]) -> P:
 
 def _mesh_axes() -> frozenset:
     try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
+        from ..jaxcompat import get_active_mesh
+        mesh = get_active_mesh()
+        if mesh is None:
             return frozenset()
         return frozenset(mesh.axis_names)
     except Exception:

@@ -1,0 +1,112 @@
+"""Version compatibility layer for the jax APIs the serving stack needs.
+
+The serving/kvcache/launch stack is written against the current jax
+surface — ``jax.shard_map`` (with ``check_vma``), ``jax.set_mesh`` and
+``jax.sharding.get_abstract_mesh``.  CPU-only CI images ship older wheels
+(0.4.x) where those live under different names:
+
+  * ``jax.shard_map``                  -> ``jax.experimental.shard_map``
+    (``check_vma`` was ``check_rep``; the new ``axis_names`` selector maps
+    onto the old ``auto`` complement);
+  * ``jax.set_mesh(mesh)``             -> the ``Mesh`` context manager
+    (which is what makes bare-``PartitionSpec`` sharding constraints
+    resolve on 0.4.x);
+  * ``jax.sharding.get_abstract_mesh`` -> the mesh recorded by our
+    ``set_mesh`` (a concrete ``Mesh`` — every consumer only reads
+    ``axis_names`` / ``shape`` / ``empty``, which both types provide).
+
+Import ``shard_map`` / ``set_mesh`` / ``get_active_mesh`` from here
+instead of ``jax`` and the stack runs on either wheel — this is what
+turns the capability-gate skips in ``tests/conftest.py`` into real passes
+on old CPU-only wheels.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_NATIVE_SET_MESH = hasattr(jax, "set_mesh")
+
+_state = threading.local()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """``jax.shard_map`` on new wheels; ``jax.experimental.shard_map`` on
+    0.4.x (where ``check_vma`` was spelled ``check_rep`` and partial
+    manualness is the ``auto`` complement of ``axis_names``)."""
+    if HAS_NATIVE_SHARD_MAP:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kwargs)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.set_mesh`` on new wheels.  On 0.4.x, enter the ``Mesh``
+    context (so bare-PartitionSpec constraints resolve) and record the
+    mesh for :func:`get_active_mesh`."""
+    if HAS_NATIVE_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def get_active_mesh() -> Optional[object]:
+    """The mesh of the surrounding ``set_mesh`` scope, or None.
+
+    Prefers ``jax.sharding.get_abstract_mesh`` (an ``AbstractMesh``,
+    populated by native ``jax.set_mesh``); when that is absent *or empty*
+    — e.g. a wheel that has ``get_abstract_mesh`` but not ``set_mesh``,
+    where our fallback context did the recording — falls through to the
+    concrete ``Mesh`` recorded by :func:`set_mesh`.  Returns None when no
+    non-empty mesh is active, so callers need no ``.empty`` probing."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        m = get_abstract()
+        if m is not None and not m.empty:
+            return m
+    m = getattr(_state, "mesh", None)
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def available_capabilities() -> dict:
+    """Which of the compat-provided APIs this wheel can actually back
+    (native or fallback).  Single source of truth for test capability
+    gates — ``tests/conftest.py`` derives its skips from this."""
+    caps = {
+        "shard_map": HAS_NATIVE_SHARD_MAP,
+        "set_mesh": (HAS_NATIVE_SET_MESH
+                     or hasattr(jax.sharding.Mesh, "__enter__")),
+    }
+    if not caps["shard_map"]:
+        try:
+            from jax.experimental.shard_map import shard_map as _  # noqa
+            caps["shard_map"] = True
+        except Exception:
+            pass
+    return caps

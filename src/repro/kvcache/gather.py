@@ -17,17 +17,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..distributed.sharding import current_rules
-
-
-def _mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
-        return None
-    return m
+from ..jaxcompat import get_active_mesh as _mesh, shard_map
 
 
 def update_gather_plain(k_slabs: jax.Array, v_slabs: jax.Array,

@@ -28,6 +28,7 @@ import traceback
 import jax
 
 from ..configs import ARCH_IDS, SHAPES, get_config, shape_cells
+from ..jaxcompat import set_mesh
 from .analysis import roofline_from_compiled
 from .mesh import make_production_mesh
 from .specs import build_cell
@@ -49,7 +50,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     cfg = get_config(arch)
     t0 = time.time()
     cell = build_cell(arch, shape, mesh, opts=opts)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(cell.step_fn, donate_argnums=cell.donate)
         lowered = jitted.lower(*cell.args)
         t_lower = time.time() - t0

@@ -16,6 +16,7 @@ import collections
 import jax
 
 from ..configs import ARCH_IDS, SHAPES
+from ..jaxcompat import set_mesh
 from . import hlo_analysis as H
 from .mesh import make_production_mesh
 from .specs import PerfOptions, build_cell
@@ -100,7 +101,7 @@ def main() -> None:
                        remat=args.remat)
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     cell = build_cell(args.arch, SHAPES[args.shape], mesh, opts=opts)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         hlo = jax.jit(cell.step_fn, donate_argnums=cell.donate).lower(
             *cell.args).compile().as_text()
     profile(hlo, mesh.devices.size, args.top)

@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs import ShapeSpec, get_config
 from ..distributed.sharding import (MULTI_POD_RULES, SINGLE_POD_RULES,
                                     ShardingRules, param_pspec, use_rules)
+from ..jaxcompat import get_active_mesh, shard_map
 from ..models import (init_decode_state, init_params, layer_groups, lm_loss)
 from ..models.common import ModelConfig
 from ..models.transformer import decode_step, greedy_sample, prefill, \
@@ -140,7 +141,7 @@ def build_train_step(cfg: ModelConfig, bf16_grads: bool = False,
             # over 'data' inside the loss, so autodiff's AR covers the
             # in-pod leg and this shard_map adds the compressed pod leg.
             from ..distributed.compression import compress_allreduce_pods
-            mesh = jax.sharding.get_abstract_mesh()
+            mesh = get_active_mesh()
             if mesh is not None and "pod" in mesh.axis_names:
                 from jax.sharding import PartitionSpec as P
                 specs = jax.tree.map(
@@ -149,7 +150,7 @@ def build_train_step(cfg: ModelConfig, bf16_grads: bool = False,
                 def pod_leg(g, e):
                     return compress_allreduce_pods(g, e, axis="pod")
 
-                grads, new_ef = jax.shard_map(
+                grads, new_ef = shard_map(
                     pod_leg, mesh=mesh, in_specs=(specs, specs),
                     out_specs=(specs, specs), check_vma=False,
                     axis_names={"pod"})(grads, ef)
@@ -195,11 +196,10 @@ def _coherence_prologue(mode: str, entries, sharers, owner, mut_t, mut_i,
     mechanism in the jitted step.  EAGER all-gathers every pod's mutation
     buffer every step (Mitosis); NUMAPTE applies only sharer-filtered
     updates and fetches misses from owners with degree-d prefetch."""
-    import jax as _jax
     from jax.sharding import PartitionSpec as P
     from ..pagedpt.coherence import (eager_sync, numapte_apply_filtered,
                                      numapte_miss_fetch)
-    mesh = _jax.sharding.get_abstract_mesh()
+    mesh = get_active_mesh()
 
     def body(entries, sharers, owner, mut_t, mut_i, mut_v, mut_ok, miss):
         local = entries[0]
@@ -214,7 +214,7 @@ def _coherence_prologue(mode: str, entries, sharers, owner, mut_t, mut_i,
                                             axis_name="pod")
         return local[None], sharers
 
-    f = jax.shard_map(
+    f = shard_map(
         body, mesh=mesh,
         in_specs=(P("pod"), P(), P(), P("pod"), P("pod"), P("pod"),
                   P("pod"), P("pod")),

@@ -26,6 +26,10 @@ def test_bench_json_schema(tmp_path):
         assert d["name"] == name
         assert d["quick"] is True
         assert d["scale"] == 1
+        # schema v2: concurrency is null for benchmarks that don't sweep
+        # shootdown-settlement modes; row_types summarizes row kinds
+        assert d["concurrency"] is None
+        assert d["row_types"] == ["data"]
         assert d["error"] is None
         assert d["elapsed_s"] >= 0
         assert isinstance(d["rows"], list) and d["rows"], name
@@ -77,6 +81,8 @@ def test_mm_bench_json_artifacts(tmp_path):
     rows = _load(written["fig10_munmap"])["rows"]
     by_spin = {}
     for row in rows:
+        if row.get("row_type") == "engine_walltime":
+            continue
         by_spin.setdefault(row["spin_per_socket"], {})[row["policy"]] = row
     assert by_spin
     for spin, pol in by_spin.items():
@@ -95,11 +101,68 @@ def test_mm_bench_json_artifacts(tmp_path):
     assert at_max["linux"]["slowdown_vs_linux0"] > \
         at_max["numapte"]["slowdown_vs_linux0"]
 
-    # mm_concurrent: the mixed-op scenario keeps numaPTE at-or-under Linux
-    rows = _load(written["mm_concurrent"])["rows"]
-    mixed = {r["policy"]: r for r in rows if r["scenario"] == "mixed-ops"}
-    assert mixed["numapte"]["ipis_filtered"] > 0
-    assert mixed["numapte"]["modeled_ms"] <= mixed["linux"]["modeled_ms"]
+    # fig09/fig10: the scale-swept engine wall-time comparison rows
+    for name in ("fig09_mm_ops", "fig10_munmap"):
+        d = _load(written[name])
+        assert "engine_walltime" in d["row_types"], name
+        wt = [r for r in d["rows"] if r.get("row_type") == "engine_walltime"]
+        assert wt, name
+        for r in wt:
+            assert r["wall_batch_s"] > 0 and r["wall_scalar_s"] > 0
+            assert r["batch_speedup"] > 0
+            assert r["scale_factor"] >= 1
+
+    # mm_concurrent: every scenario under both settlement modes
+    d = _load(written["mm_concurrent"])
+    assert d["concurrency"] == "both"
+    rows = d["rows"]
+    for mode in ("sequential", "overlap"):
+        mixed = {r["policy"]: r for r in rows
+                 if r["scenario"] == "mixed-ops" and r["concurrency"] == mode}
+        assert {"linux", "numapte"} <= set(mixed), mode
+        # the mixed-op scenario keeps numaPTE at-or-under Linux
+        assert mixed["numapte"]["ipis_filtered"] > 0
+        assert mixed["numapte"]["modeled_ms"] <= mixed["linux"]["modeled_ms"]
+        if mode == "sequential":
+            assert all(r["ipi_queue_delay_us"] == 0
+                       and r["overlapping_rounds"] == 0
+                       for r in mixed.values())
+        else:
+            # contention is real for Linux and filtered down for numaPTE
+            assert mixed["linux"]["ipi_queue_delay_us"] > \
+                mixed["numapte"]["ipi_queue_delay_us"]
+            assert mixed["linux"]["overlapping_rounds"] > 0
+
+    # munmap-storm: Linux's IPI-queue delay strictly exceeds numaPTE's at
+    # every swept thread count >= 4 (the acceptance-gate ordering); the
+    # sequential rows are the flat zero-delay reference
+    storm = {}
+    for r in rows:
+        if r["scenario"] == "munmap-storm":
+            if r["concurrency"] == "sequential":
+                assert r["ipi_queue_delay_us"] == 0
+                assert r["overlapping_rounds"] == 0
+                continue
+            storm.setdefault(r["n_threads"], {})[r["policy"]] = r
+    assert any(w >= 4 for w in storm), "storm sweep must reach 4+ threads"
+    for w, pol in storm.items():
+        if w >= 4:
+            assert pol["linux"]["ipi_queue_delay_us"] > \
+                pol["numapte"]["ipi_queue_delay_us"], f"storm at {w} threads"
+        assert pol["linux"]["ns_per_op"] >= pol["numapte"]["ns_per_op"]
+
+
+def test_mm_concurrent_rows_deterministic(tmp_path):
+    """The overlap engine is a deterministic discrete-event settlement:
+    two runs must produce identical rows (host wall-clock fields aside)."""
+    rows = []
+    for sub in ("a", "b"):
+        written = run_benchmarks(["mm_concurrent"], quick=True,
+                                 outdir=str(tmp_path / sub), strict=True)
+        r = _load(written["mm_concurrent"])["rows"]
+        rows.append([{k: v for k, v in row.items() if k != "wall_s"}
+                     for row in r])
+    assert rows[0] == rows[1]
 
 
 def test_fig6_prefetch_rows_consistent(tmp_path):

@@ -72,6 +72,7 @@ def test_small_mesh_train_and_serve_steps():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_smoke_config
         from repro.distributed.sharding import ShardingRules, use_rules
+        from repro.jaxcompat import set_mesh
         from repro.launch.specs import param_shardings, build_train_step
         from repro.models import init_params
         from repro.optim import adamw_init
@@ -82,7 +83,7 @@ def test_small_mesh_train_and_serve_steps():
                                      ("kv_heads", None), ("experts", "model"),
                                      ("blocks", "data"), ("head_dim", None),
                                      ("seq", None), ("embed", None)))
-        with use_rules(rules), jax.set_mesh(mesh):
+        with use_rules(rules), set_mesh(mesh):
             params = init_params(cfg, jax.random.PRNGKey(0))
             shards = param_shardings(params, mesh)
             params = jax.tree.map(jax.device_put, params, shards)
@@ -103,11 +104,12 @@ def test_dryrun_cell_small_mesh():
     """The dry-run machinery works end to end on a small forced mesh."""
     out = run_in_subprocess("""
         import jax
+        from repro.jaxcompat import set_mesh
         from repro.launch.specs import build_cell
         from repro.configs import SHAPES
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         cell = build_cell("yi_6b", SHAPES["train_4k"], mesh)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             compiled = jax.jit(cell.step_fn,
                                donate_argnums=cell.donate).lower(
                 *cell.args).compile()
@@ -119,11 +121,12 @@ def test_dryrun_cell_small_mesh():
 def test_multi_pod_serve_cell():
     out = run_in_subprocess("""
         import jax
+        from repro.jaxcompat import set_mesh
         from repro.launch.specs import build_cell
         from repro.configs import SHAPES
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         cell = build_cell("yi_6b", SHAPES["decode_32k"], mesh)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             compiled = jax.jit(cell.step_fn,
                                donate_argnums=cell.donate).lower(
                 *cell.args).compile()

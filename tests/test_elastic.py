@@ -36,6 +36,7 @@ def test_elastic_remesh_restore(tmp_path):
         from repro.checkpoint import CheckpointManager
         from repro.data import SyntheticLMDataset
         from repro.distributed.sharding import ShardingRules, use_rules
+        from repro.jaxcompat import set_mesh
         from repro.launch.specs import build_train_step, param_shardings
         from repro.models import init_params
         from repro.optim import adamw_init
@@ -51,7 +52,7 @@ def test_elastic_remesh_restore(tmp_path):
 
         def steps(mesh, params, opt, start, n):
             losses = []
-            with use_rules(rules), jax.set_mesh(mesh):
+            with use_rules(rules), set_mesh(mesh):
                 shards = param_shardings(params, mesh)
                 params = jax.tree.map(jax.device_put, params, shards)
                 opt = jax.tree.map(jax.device_put, opt,
@@ -81,7 +82,7 @@ def test_elastic_remesh_restore(tmp_path):
         mesh_b = jax.make_mesh((2, 2), ("data", "model"))
         like = {{"params": init_params(cfg, jax.random.PRNGKey(0)),
                 "opt": adamw_init(init_params(cfg, jax.random.PRNGKey(0)))}}
-        with use_rules(rules), jax.set_mesh(mesh_b):
+        with use_rules(rules), set_mesh(mesh_b):
             shards = {{"params": param_shardings(like["params"], mesh_b),
                       "opt": None}}
             state = ckpt.restore(6, like)

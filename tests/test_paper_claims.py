@@ -177,6 +177,37 @@ def test_fig10_targeted_shootdowns_never_miss_a_true_sharer():
     sim.check_invariants()
 
 
+def test_fig10_contention_linux_superlinear_numapte_flat():
+    """The 40x-overhead claim, directionally: under overlapping IPI rounds
+    (concurrency="overlap"), Linux's per-op munmap latency grows
+    *superlinearly* with the concurrent-initiator count — every round
+    targets every CPU, so the receive queues compound and the marginal
+    cost of each doubling rises — while numaPTE's sharer-filtered rounds
+    stay near-flat (filtered CPUs never enter anyone's queue)."""
+    from benchmarks.mm_concurrent import run_storm
+
+    lat, qd = {}, {}
+    for name, policy, filt in (("linux", Policy.LINUX, False),
+                               ("numapte", Policy.NUMAPTE, True)):
+        for w in (1, 2, 4, 8):
+            r = run_storm(policy, filt, w)
+            lat[name, w] = r["ns_per_op"]
+            qd[name, w] = r["ipi_queue_delay_us"]
+    # Linux: convex (superlinear) growth, and a real cliff by 8 threads
+    d1 = lat["linux", 2] - lat["linux", 1]
+    d2 = lat["linux", 4] - lat["linux", 2]
+    d3 = lat["linux", 8] - lat["linux", 4]
+    assert d3 > d2 > d1 > 0, (d1, d2, d3)
+    assert lat["linux", 8] / lat["linux", 1] > 2.0
+    # numaPTE: near-flat across the same sweep
+    assert lat["numapte", 8] / lat["numapte", 1] < 1.1
+    assert lat["numapte", 8] < lat["linux", 1]
+    # and the gap is contention, not fan-out alone: Linux's munmap
+    # IPI-queue delay strictly exceeds numaPTE's at >= 4 threads
+    for w in (4, 8):
+        assert qd["linux", w] > qd["numapte", w] >= 0.0
+
+
 def test_fig8_execution_parity_with_mitosis():
     """numaPTE matches Mitosis's execution phase despite laziness."""
     spec = APPS["btree"]

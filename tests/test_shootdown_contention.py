@@ -1,0 +1,350 @@
+"""Differential + property tests for the overlapping-IPI-round engine.
+
+The contention engine (``repro.core.shootdown`` via
+``apply_mm_ops(..., concurrency="overlap")``) must degrade gracefully to
+the PR-2 sequential semantics: under the zero-delay model
+(``NullContention``) an overlap-mode run is *byte-identical* — every
+``Counters`` field, float-exact thread times, TLB content and insertion
+order, page-table replicas and sharer masks, the oracle, and the VMA
+layout — to the sequential engine, across 200+ seeded random
+interleavings (mirroring ``test_mm_batch_differential``).  Under the real
+``QueueContention`` model the scalar and batched engines must still agree
+bit-for-bit with each other.
+
+Metamorphic/property layer (hypothesis-when-available, seeded always-on):
+
+* queue delay is monotone in the concurrent-initiator count;
+* numaPTE never queues an IPI at a CPU its sharer filter excludes;
+* the IPI counters (rounds, local/remote/filtered) are invariant between
+  sequential and overlap modes — contention reschedules interrupts, it
+  never adds or removes them.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (IPI_RECEIVE_NS, NullContention, NumaSim,
+                        PAPER_8SOCKET, Policy, QueueContention,
+                        RoundSettlement)
+from repro.core.pagetable import leaf_id
+
+from test_mm_batch_differential import (POLICIES, _build, _random_choices,
+                                        assert_identical, materialize)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SEEDS_PER_POLICY = 70          # 3 policies x 70 = 210 interleavings
+
+
+# --------------------------------------------------------------------------
+# differential harness
+# --------------------------------------------------------------------------
+def run_overlap_differential(policy, choices, *, make_a, make_b,
+                             prefetch=0, tlb_filter=True, chunk=7, tag=""):
+    """Replay one interleaving on two sims in lockstep chunks.
+
+    ``make_a`` / ``make_b`` map a chunk of ops to apply_mm_ops kwargs for
+    each side; state must stay byte-identical at every sync point."""
+    sa, _ = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter)
+    sb, _ = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter)
+    ops = materialize(choices, sa._next_vpn)
+    for i in range(0, len(ops), chunk):
+        part = ops[i:i + chunk]
+        sa.apply_mm_ops(part, **make_a)
+        sb.apply_mm_ops(part, **make_b)
+        assert_identical(sa, sb, f"{tag}/chunk{i}")
+    sa.check_invariants()
+    sb.check_invariants()
+    return sa, sb
+
+
+# --------------------------------------------------------------------------
+# zero-delay overlap == sequential (the differential anchor; 210 seeds)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+def test_zero_delay_overlap_matches_sequential(policy):
+    """70 seeded interleavings per policy: ``concurrency="overlap"`` under
+    NullContention is byte-identical to the sequential engine (both the
+    batched and the scalar reference run as the sequential side)."""
+    for seed in range(SEEDS_PER_POLICY):
+        rng = np.random.default_rng(30_000 + seed)
+        choices = _random_choices(rng, int(rng.integers(6, 36)))
+        sa, sb = run_overlap_differential(
+            policy, choices,
+            make_a=dict(engine="batch", concurrency="overlap",
+                        contention=NullContention()),
+            make_b=dict(engine=("scalar" if seed % 2 else "batch"),
+                        concurrency="sequential"),
+            prefetch=(9 if seed % 3 == 1 else 0),
+            tlb_filter=(seed % 2 == 0),
+            chunk=int(rng.integers(1, 12)),
+            tag=f"{policy.value}/null/seed{seed}")
+        assert sa.counters.ipi_queue_delay_ns == 0.0
+        assert sa.counters.overlapping_rounds == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+def test_queue_contention_scalar_batch_identical(policy):
+    """Under the *real* contention model the scalar syscall path and the
+    batched engine must drive the identical per-round float sequence:
+    30 seeded interleavings per policy, each side with its own fresh
+    QueueContention instance."""
+    for seed in range(30):
+        rng = np.random.default_rng(60_000 + seed)
+        choices = _random_choices(rng, int(rng.integers(6, 30)))
+        run_overlap_differential(
+            policy, choices,
+            make_a=dict(engine="batch", concurrency="overlap",
+                        contention=QueueContention()),
+            make_b=dict(engine="scalar", concurrency="overlap",
+                        contention=QueueContention()),
+            tlb_filter=(seed % 2 == 0),
+            chunk=int(rng.integers(1, 12)),
+            tag=f"{policy.value}/queue/seed{seed}")
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_zero_delay_overlap_matches_sequential_fast(policy):
+    """Always-on slice of the differential anchor (3 seeds per policy)."""
+    for seed in range(3):
+        rng = np.random.default_rng(90_000 + seed)
+        choices = _random_choices(rng, 18)
+        run_overlap_differential(
+            policy, choices,
+            make_a=dict(engine="batch", concurrency="overlap",
+                        contention=NullContention()),
+            make_b=dict(engine="scalar", concurrency="sequential"),
+            chunk=5, tag=f"{policy.value}/null-fast/seed{seed}")
+
+
+@pytest.mark.parametrize("policy", [Policy.LINUX, Policy.NUMAPTE])
+def test_queue_contention_scalar_batch_identical_fast(policy):
+    for seed in range(3):
+        rng = np.random.default_rng(120_000 + seed)
+        choices = _random_choices(rng, 18)
+        run_overlap_differential(
+            policy, choices,
+            make_a=dict(engine="batch", concurrency="overlap",
+                        contention=QueueContention()),
+            make_b=dict(engine="scalar", concurrency="overlap",
+                        contention=QueueContention()),
+            chunk=5, tag=f"{policy.value}/queue-fast/seed{seed}")
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=70, deadline=None)
+    @given(
+        choices=st.lists(
+            st.tuples(*(st.integers(0, (1 << 30) - 1) for _ in range(5))),
+            min_size=1, max_size=30),
+        policy_i=st.integers(0, len(POLICIES) - 1),
+        tlb_filter=st.booleans(),
+        chunk=st.integers(1, 12),
+        null_model=st.booleans())
+    def test_hypothesis_overlap_differentials(choices, policy_i, tlb_filter,
+                                              chunk, null_model):
+        """Property form of both differentials over the same materializer:
+        NullContention-overlap vs sequential, or QueueContention batch vs
+        scalar."""
+        if null_model:
+            make_a = dict(engine="batch", concurrency="overlap",
+                          contention=NullContention())
+            make_b = dict(engine="batch", concurrency="sequential")
+        else:
+            make_a = dict(engine="batch", concurrency="overlap",
+                          contention=QueueContention())
+            make_b = dict(engine="scalar", concurrency="overlap",
+                          contention=QueueContention())
+        run_overlap_differential(POLICIES[policy_i], choices,
+                                 make_a=make_a, make_b=make_b,
+                                 tlb_filter=tlb_filter, chunk=chunk,
+                                 tag="hypothesis-overlap")
+
+
+# --------------------------------------------------------------------------
+# metamorphic / property layer
+# --------------------------------------------------------------------------
+def test_queue_delay_monotone_in_initiator_count():
+    """More concurrent initiators can only lengthen the receive queues:
+    total queue delay of the munmap storm is monotone in the worker count,
+    and strictly positive once the handlers saturate."""
+    from benchmarks.mm_concurrent import run_storm
+
+    delays = [run_storm(Policy.LINUX, False, w)["ipi_queue_delay_us"]
+              for w in (1, 2, 4, 8)]
+    assert delays == sorted(delays), delays
+    assert delays[0] == 0.0            # a lone initiator never queues
+    assert delays[-1] > delays[1] > 0  # and the queues really build
+
+
+def test_numapte_never_queues_at_filter_excluded_cpu():
+    """The sharer filter keeps CPUs out of the receive queues entirely: a
+    CPU whose node is outside every touched table's sharer mask must never
+    appear in the contention model's busy horizons (and its threads must
+    receive zero IPIs)."""
+    sim = NumaSim(PAPER_8SOCKET, Policy.NUMAPTE, tlb_filter=True)
+    main = sim.spawn_thread(0)
+    vma = sim.mmap(main, 64)
+    sim.access_many(main, range(vma.start_vpn, vma.end_vpn), write=True)
+    sharer_tids = []
+    for node in (1, 3, 5):
+        t = sim.spawn_thread(node * sim.topo.hw_threads_per_node)
+        sim.access_many(t, range(vma.start_vpn, vma.start_vpn + 16))
+        sharer_tids.append(t)
+    bystander = sim.spawn_thread(6 * sim.topo.hw_threads_per_node)
+    v2 = sim.mmap(bystander, 1)
+    sim.touch(bystander, v2.start_vpn, write=True)
+
+    mask = 0
+    for vpn in range(vma.start_vpn, vma.end_vpn):
+        table = sim.store.get(leaf_id(vpn))
+        if table is not None:
+            mask |= table.sharers
+    allowed_cpus = {cpu for cpu in sim.tlbs
+                    if (mask >> sim.topo.node_of_cpu(cpu)) & 1}
+
+    model = QueueContention()
+    sim.apply_mm_ops(
+        [("munmap", main, vma.start_vpn + i, 1) for i in range(16)],
+        concurrency="overlap", contention=model)
+    queued_cpus = set(model.busy_until)
+    assert queued_cpus, "sharers must actually be interrupted"
+    assert queued_cpus <= allowed_cpus - {0}, \
+        f"queued at filter-excluded cpus: {queued_cpus - allowed_cpus}"
+    assert sim.threads[bystander].ipis_received == 0
+    assert (6 * sim.topo.hw_threads_per_node) not in queued_cpus
+    sim.check_invariants()
+
+
+def _ipi_counter_fields(c):
+    return (c.shootdown_rounds, c.ipis_local, c.ipis_remote, c.ipis_filtered)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_total_ipis_invariant_between_modes(policy):
+    """Contention reschedules interrupts; it never adds or removes them:
+    every IPI counter matches between sequential and overlap runs of the
+    same program (only times and the queue-delay counters may differ)."""
+    for seed in range(8):
+        rng = np.random.default_rng(150_000 + seed)
+        choices = _random_choices(rng, 20)
+        sims = {}
+        for mode in ("sequential", "overlap"):
+            sim, _ = _build(policy)
+            ops = materialize(choices, sim._next_vpn)
+            sim.apply_mm_ops(ops, concurrency=mode)
+            sims[mode] = sim
+        assert (_ipi_counter_fields(sims["sequential"].counters)
+                == _ipi_counter_fields(sims["overlap"].counters)), \
+            f"{policy.value}/seed{seed}"
+        for t in sims["sequential"].threads:
+            assert (sims["sequential"].threads[t].ipis_received
+                    == sims["overlap"].threads[t].ipis_received)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        choices=st.lists(
+            st.tuples(*(st.integers(0, (1 << 30) - 1) for _ in range(5))),
+            min_size=1, max_size=20),
+        policy_i=st.integers(0, len(POLICIES) - 1))
+    def test_hypothesis_total_ipis_invariant(choices, policy_i):
+        policy = POLICIES[policy_i]
+        sims = {}
+        for mode in ("sequential", "overlap"):
+            sim, _ = _build(policy)
+            ops = materialize(choices, sim._next_vpn)
+            sim.apply_mm_ops(ops, concurrency=mode)
+            sims[mode] = sim
+        assert (_ipi_counter_fields(sims["sequential"].counters)
+                == _ipi_counter_fields(sims["overlap"].counters))
+
+
+# --------------------------------------------------------------------------
+# unit-level behavior
+# --------------------------------------------------------------------------
+def test_sim_level_contention_drives_scalar_syscalls():
+    """A sim constructed with a contention model settles its *direct*
+    scalar syscalls as overlapping rounds (the pluggable-_shootdown path,
+    no batch API involved)."""
+    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX,
+                  contention=QueueContention())
+    a = sim.spawn_thread(0)
+    b = sim.spawn_thread(sim.topo.hw_threads_per_node)
+    spinners = [sim.spawn_thread(n * sim.topo.hw_threads_per_node + 4)
+                for n in range(sim.topo.n_nodes)]
+    for t in (a, b, *spinners):
+        v = sim.mmap(t, 1)
+        sim.touch(t, v.start_vpn, write=True)
+    va = sim.mmap(a, 8)
+    vb = sim.mmap(b, 8)
+    for t, v in ((a, va), (b, vb)):
+        for vpn in range(v.start_vpn, v.end_vpn):
+            sim.touch(t, vpn, write=True)
+    # interleaved munmap storms: b's rounds queue behind a's handlers
+    for i in range(8):
+        sim.munmap(a, va.start_vpn + i, 1)
+        sim.munmap(b, vb.start_vpn + i, 1)
+    assert sim.counters.ipi_queue_delay_ns > 0
+    assert sim.counters.overlapping_rounds > 0
+    sim.check_invariants()
+
+
+def test_sequential_mode_suspends_sim_contention():
+    """concurrency="sequential" is always the clean reference: it runs
+    classic semantics even on a sim constructed with a contention model,
+    and restores the model afterwards."""
+    model = QueueContention()
+    sa = NumaSim(PAPER_8SOCKET, Policy.LINUX, contention=model)
+    sb = NumaSim(PAPER_8SOCKET, Policy.LINUX)
+    for sim in (sa, sb):
+        t0 = sim.spawn_thread(0)
+        t1 = sim.spawn_thread(sim.topo.hw_threads_per_node)
+        v0, v1 = sim.mmap(t0, 4), sim.mmap(t1, 4)
+        sim.apply_mm_ops(
+            [("touch", t0, list(range(v0.start_vpn, v0.end_vpn)), True),
+             ("touch", t1, list(range(v1.start_vpn, v1.end_vpn)), True),
+             ("munmap", t0, v0.start_vpn, 4),
+             ("munmap", t1, v1.start_vpn, 4)],
+            concurrency="sequential")
+    assert_identical(sa, sb, "sequential-suspends")
+    assert sa.contention is model          # restored after the batch
+    assert sa.counters.ipi_queue_delay_ns == 0.0
+
+
+def test_apply_mm_ops_rejects_unknown_concurrency():
+    sim, tids = _build(Policy.NUMAPTE)
+    with pytest.raises(ValueError):
+        sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="parallel")
+    # a contention model with sequential mode would be silently ignored —
+    # that's an error, not a no-op
+    with pytest.raises(ValueError, match="overlap"):
+        sim.apply_mm_ops([("mmap", tids[0], 1)],
+                         contention=QueueContention())
+
+
+def test_queue_contention_reset_and_settlement_shape():
+    from repro.core import CostModel
+    cost = CostModel.paper_default()
+    m = QueueContention()
+    node_of = lambda cpu: cpu // 4                          # noqa: E731
+    s1 = m.settle(0.0, 0, [4, 5], node_of, cost)
+    assert isinstance(s1, RoundSettlement)
+    assert s1.extra_wait_ns == 0.0 and not s1.contended     # quiet system
+    # a second round dispatched immediately queues behind the first
+    s2 = m.settle(0.0, 0, [4, 5], node_of, cost)
+    assert s2.contended and s2.extra_wait_ns == IPI_RECEIVE_NS
+    assert s2.queued_ns == 2 * IPI_RECEIVE_NS
+    m.reset()
+    assert not m.busy_until and m.clock == 0.0
+    s3 = m.settle(0.0, 0, [4, 5], node_of, cost)
+    assert not s3.contended
