@@ -6,6 +6,12 @@ Configs: RPI-LD (Linux: PTs stay remote, interference), RPI-LD-M (Mitosis:
 PTs pre-replicated), RPI-LD-N (numaPTE lazy), RPI-LD-NP (numaPTE +
 prefetch d=9).  Paper claim: Mitosis avoids the penalty; numaPTE pays a
 small lazy cost that prefetching eliminates.
+
+Runs on the vectorized batch-access engine (``NumaSim.touch_batch``) by
+default — the last per-page Python ``touch`` loop in benchmarks/ was
+ported here — byte-identical counters/times to ``engine="scalar"`` (the
+per-page reference loop); ``tests/test_bench_smoke.py`` asserts row
+equality between the two engines.
 """
 from __future__ import annotations
 
@@ -19,30 +25,39 @@ from .common import csv
 N_PAGES = 1 << 15
 
 
-def run_one(policy: Policy, degree: int, accesses: int) -> float:
+def run_one(policy: Policy, degree: int, accesses: int,
+            engine: str = "batch") -> float:
     sim = NumaSim(PAPER_8SOCKET, policy, prefetch_degree=degree,
                   interference_nodes=(0,))
     w = sim.spawn_thread(0)
     vma = sim.mmap(w, N_PAGES)
-    for v in range(vma.start_vpn, vma.end_vpn):
-        sim.touch(w, v, write=True)
+    setup = np.arange(vma.start_vpn, vma.end_vpn, dtype=np.int64)
     # data pages stay on node 0; thread moves to node 1
-    sim.migrate_thread(w, sim.topo.hw_threads_per_node)
     order = np.random.default_rng(1).integers(0, N_PAGES, accesses)
-    t0 = sim.thread_time_ns(w)
-    for off in order:
-        sim.touch(w, vma.start_vpn + int(off))
+    stream = vma.start_vpn + order.astype(np.int64)
+    if engine == "scalar":
+        for v in setup.tolist():
+            sim.touch(w, int(v), write=True)
+        sim.migrate_thread(w, sim.topo.hw_threads_per_node)
+        t0 = sim.thread_time_ns(w)
+        for v in stream.tolist():
+            sim.touch(w, int(v))
+    else:
+        sim.touch_batch(w, setup, write_mask=True)
+        sim.migrate_thread(w, sim.topo.hw_threads_per_node)
+        t0 = sim.thread_time_ns(w)
+        sim.touch_batch(w, stream)
     return sim.thread_time_ns(w) - t0
 
 
-def main(quick: bool = False) -> list:
+def main(quick: bool = False, engine: str = "batch") -> list:
     acc = 20_000 if quick else 80_000
-    base = run_one(Policy.LINUX, 0, acc)       # RPI-LD
+    base = run_one(Policy.LINUX, 0, acc, engine)       # RPI-LD
     rows = [{"config": "RPI-LD(linux)", "norm_time": 1.0}]
     for name, pol, d in [("RPI-LD-M(mitosis)", Policy.MITOSIS, 0),
                          ("RPI-LD-N(numapte)", Policy.NUMAPTE, 0),
                          ("RPI-LD-NP(numapte-pf9)", Policy.NUMAPTE, 9)]:
-        ns = run_one(pol, d, acc)
+        ns = run_one(pol, d, acc, engine)
         rows.append({"config": name, "norm_time": round(ns / base, 3)})
     return csv("fig07_migration", rows)
 

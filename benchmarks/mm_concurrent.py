@@ -13,7 +13,7 @@ target's receive-queue delay — the mechanism behind the paper's 40x
 munmap/mprotect collapse, and the reason numaPTE's sharer-filtered
 fan-out matters: filtered CPUs never enter anyone's receive queue.
 
-Three scenarios:
+Four scenarios:
 
 * ``mixed-ops``     — the PR-2 mixed mmap/touch/mprotect/munmap program,
   now swept over both concurrency modes; rows carry the new
@@ -23,6 +23,16 @@ Three scenarios:
   per-op latency grows superlinearly with W (every round targets every
   CPU, so the queues compound); numaPTE stays near-flat (its rounds only
   ever target the owner socket).
+* ``spinner-ramp``  — the Fig 1 calibration sweep (PR 4): the same
+  lockstep storm under the *two-sided* responder settlement, ramped to
+  enough concurrent initiators (``--spinners`` sets the per-socket
+  spinner load) that Linux's per-op munmap latency climbs >= 10x its
+  single-initiator value — the paper's Fig 1 cliff, directionally —
+  while numaPTE stays under 2x: its sharer-filtered rounds keep every
+  other socket's CPUs out of the receive queues on both sides, so only
+  same-socket worker pairs (W > 8) ever contend.  Rows carry
+  ``responder_delay_us`` / ``ipis_coalesced`` and a
+  ``vs_single_initiator`` ratio.
 * ``app-churn``     — the Table-3 btree app through the ``workloads``
   mprotect/teardown phases, unchanged from PR 2.
 
@@ -120,6 +130,7 @@ def run_one(policy: Policy, filt: bool, n_ops: int, *,
             "ipis_local": c.ipis_local, "ipis_remote": c.ipis_remote,
             "ipis_filtered": c.ipis_filtered,
             "ipi_queue_delay_us": round(c.ipi_queue_delay_ns / 1e3, 3),
+            "responder_delay_us": round(c.responder_delay_ns / 1e3, 3),
             "overlapping_rounds": c.overlapping_rounds,
             "pt_pages_freed": c.pt_pages_freed}
 
@@ -153,13 +164,51 @@ def run_storm(policy: Policy, filt: bool, n_threads: int, *,
               / len(munmap_ops))
     return {"n_threads": n_threads, "ns_per_op": round(per_op, 1),
             "ipi_queue_delay_us": round(c.ipi_queue_delay_ns / 1e3, 3),
+            "responder_delay_us": round(c.responder_delay_ns / 1e3, 3),
             "overlapping_rounds": c.overlapping_rounds,
+            "ipis_coalesced": c.ipis_coalesced,
             "ipis_local": c.ipis_local, "ipis_remote": c.ipis_remote,
             "ipis_filtered": c.ipis_filtered}
 
 
+#: per-socket spinner load of the spinner-ramp scenario (--spinners); the
+#: Fig 1 calibration in tests/test_paper_claims.py asserts at this value.
+RAMP_SPINNERS_DEFAULT = 1
+#: concurrent-initiator ramp of the spinner-ramp scenario (full runs).
+RAMP_WORKERS = (1, 2, 4, 8, 16)
+
+
+def run_ramp(spinners: int, *, workers=RAMP_WORKERS, iters: int = 60,
+             engine: str = "batch") -> list:
+    """The Fig 1 calibration sweep: per-policy rows of the lockstep munmap
+    storm at ``spinners`` spinners per socket, ramped over concurrent
+    initiators, each row normalized to its policy's single-initiator
+    value (the ramp must therefore start at one worker)."""
+    workers = tuple(workers)
+    if not workers or workers[0] != 1:
+        raise ValueError("the ramp normalizes to the single-initiator "
+                         f"baseline; workers must start at 1, got "
+                         f"{workers!r}")
+    rows = []
+    for name, policy, filt in (("linux", Policy.LINUX, False),
+                               ("numapte", Policy.NUMAPTE, True)):
+        base = None
+        for w in workers:
+            r = run_storm(policy, filt, w, iters=iters, spin=spinners,
+                          engine=engine, concurrency="overlap")
+            if base is None:
+                base = r["ns_per_op"]
+            rows.append({"scenario": "spinner-ramp", "spinners": spinners,
+                         "concurrency": "overlap", "policy": name,
+                         "vs_single_initiator":
+                             round(r["ns_per_op"] / base, 3),
+                         **r})
+    return rows
+
+
 def main(quick: bool = False, scale: int = 1,
-         concurrency: str = "both") -> list:
+         concurrency: str = "both",
+         spinners: int = RAMP_SPINNERS_DEFAULT) -> list:
     n_ops = (600 if quick else 2500) * scale
     rows = []
     # mixed-ops: the PR-2 scenario, swept over shootdown-settlement modes
@@ -189,6 +238,12 @@ def main(quick: bool = False, scale: int = 1,
                              "policy": name,
                              "vs_1thread": round(r["ns_per_op"] / base, 3),
                              **r})
+    # spinner-ramp: the Fig 1 cliff calibration (two-sided settlement is
+    # what the ramp measures, so it only runs when overlap is swept)
+    if "overlap" in concurrency_modes(concurrency):
+        rows += run_ramp(spinners,
+                         workers=((1, 4, 16) if quick else RAMP_WORKERS),
+                         iters=(40 if quick else 60) * scale)
     # app churn: loading + exec + mprotect pass + teardown of the btree app
     spec = APPS["btree"]
     accesses = (2000 if quick else 8000) * scale

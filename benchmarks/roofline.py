@@ -2,6 +2,13 @@
 
 Run ``python -m repro.launch.dryrun --all`` (and --multi-pod) first; this
 bench aggregates experiments/dryrun/*.json into the §Roofline table.
+
+Note: unlike the fig benchmarks this one drives no simulator access
+stream at all — it is a pure artifact aggregator, so there is no scalar
+``touch`` loop to port onto ``NumaSim.touch_batch`` (the batch-engine
+migration that covered the figs ends with ``fig07_migration``).  Its
+JSON artifact is schema-validated by ``tests/test_bench_smoke.py``; with
+no dry-run artifacts present it emits a single deterministic note row.
 """
 from __future__ import annotations
 

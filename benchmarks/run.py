@@ -1,17 +1,18 @@
 """Benchmark harness: one function per paper table/figure.
 
 ``python -m benchmarks.run [--quick] [--only NAME] [--scale N]
-                           [--outdir DIR] [--strict]``
+                           [--outdir DIR] [--strict] [--spinners N]
+                           [--emit-root]``
 
 prints ``name,key=value,...`` CSV rows for every reproduced artifact and
 writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
 ``bench_out/``) so the perf trajectory is machine-readable and CI can
-archive it.  JSON schema (version 2):
+archive it.  JSON schema (version 3):
 
-    {"schema_version": 2, "name": str, "quick": bool, "scale": int,
-     "concurrency": str | null, "elapsed_s": float,
-     "rows": [ {column: value, ...} ], "row_types": [str, ...],
-     "error": str | null}
+    {"schema_version": 3, "name": str, "quick": bool, "scale": int,
+     "concurrency": str | null, "spinners": int | null,
+     "elapsed_s": float, "rows": [ {column: value, ...} ],
+     "row_types": [str, ...], "error": str | null}
 
 ``rows`` carries everything the CSV shows (per-policy modeled times,
 counters, speedups) plus JSON-only nested fields such as raw counter
@@ -23,8 +24,18 @@ benchmarks that support it (the batch-engine ones), letting access
 streams reach paper scale.  ``--concurrency {both,sequential,overlap}``
 selects the shootdown-settlement sweep for the benchmarks that model
 concurrent mm ops (``concurrency`` is null in artifacts of benchmarks
-that don't).  A benchmark that raises is recorded in its JSON ``error``
-field and the harness continues, unless ``--strict``.
+that don't); ``--spinners`` sets the per-socket spinner load of the
+Fig 1 spinner-ramp calibration sweep (``spinners`` is null in artifacts
+of benchmarks without the knob).  ``--emit-root`` additionally writes
+each artifact as a canonical ``BENCH_<name>.json`` at the repository
+root (resolved from the package location, CWD-independent) — the
+committed perf-trajectory files.  Root copies are the *deterministic
+projection* of the artifact: host walltimes are stripped
+(``elapsed_s`` zeroed, ``wall*`` fields and ``engine_walltime`` rows
+dropped) so refreshes only diff when modeled results change, and an
+errored benchmark never overwrites its committed copy with a stub.  A
+benchmark that raises is recorded in its JSON ``error`` field and the
+harness continues, unless ``--strict``.
 """
 from __future__ import annotations
 
@@ -58,7 +69,12 @@ BENCHES = {
     "roofline": roofline.main,
 }
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+
+#: where --emit-root writes the canonical BENCH_<name>.json files: the
+#: repository root, resolved from this package's location so the flag
+#: works from any CWD (tests monkeypatch this to stay hermetic).
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _jsonable(obj):
@@ -68,13 +84,41 @@ def _jsonable(obj):
     return str(obj)
 
 
+#: row fields measured from host wall clocks (not the modeled clock) —
+#: nondeterministic run to run, so excluded from the committed root copies
+_VOLATILE_ROW_FIELDS = frozenset({"tok_per_s"})
+
+
+def _root_payload(payload: dict) -> dict:
+    """The deterministic projection written to the repo root: drop the
+    host-walltime noise (``elapsed_s`` zeroed; ``wall*`` /
+    ``_VOLATILE_ROW_FIELDS`` row fields and whole ``engine_walltime``
+    rows removed — those live in the uploaded ``--outdir`` artifacts) so
+    committed files only change when modeled results do."""
+    rows = [{k: v for k, v in row.items()
+             if not k.startswith("wall") and k not in _VOLATILE_ROW_FIELDS}
+            for row in payload["rows"]
+            if row.get("row_type", "data") != "engine_walltime"]
+    return {**payload, "elapsed_s": 0.0, "rows": rows,
+            "row_types": sorted({row.get("row_type", "data")
+                                 for row in rows}) if rows else []}
+
+
 def run_benchmarks(names: Optional[Iterable[str]] = None, *,
                    quick: bool = False, scale: int = 1,
                    outdir: str = "bench_out",
                    strict: bool = False,
-                   concurrency: str = "both") -> Dict[str, str]:
+                   concurrency: str = "both",
+                   spinners: Optional[int] = None,
+                   emit_root: bool = False) -> Dict[str, str]:
     """Run benchmarks, print their CSV, and write BENCH_<name>.json files.
 
+    ``emit_root=True`` also writes each artifact (its deterministic
+    projection — see ``_root_payload``) as ``BENCH_<name>.json`` at the
+    repository root — resolved from this package's location, so the
+    committed perf-trajectory files are refreshed no matter where the
+    harness is invoked from; errored benchmarks are skipped so a bad
+    environment can never clobber committed trajectory data.
     Returns {benchmark name: json path}.  Used by __main__, CI and the
     bench smoke test."""
     names = list(names) if names is not None else list(BENCHES)
@@ -88,6 +132,11 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             kwargs["scale"] = scale
         if "concurrency" in params:
             kwargs["concurrency"] = concurrency
+        spinners_used = None
+        if "spinners" in params:
+            spinners_used = (spinners if spinners is not None
+                             else params["spinners"].default)
+            kwargs["spinners"] = spinners_used
         print(f"# --- {name} ---", file=sys.stderr)
         t0 = time.time()
         rows, error = None, None
@@ -105,6 +154,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             "quick": quick,
             "scale": scale,
             "concurrency": concurrency if "concurrency" in params else None,
+            "spinners": spinners_used,
             "elapsed_s": round(elapsed, 3),
             "rows": rows or [],
             "row_types": sorted({row.get("row_type", "data")
@@ -112,9 +162,20 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             "error": error,
         }
         path = os.path.join(outdir, f"BENCH_{name}.json")
+        blob = json.dumps(payload, indent=1, default=_jsonable) + "\n"
         with open(path, "w") as f:
-            json.dump(payload, f, indent=1, default=_jsonable)
-            f.write("\n")
+            f.write(blob)
+        if emit_root and error is None:
+            # canonical root copies hold *modeled* results only: host
+            # walltimes (elapsed_s, wall_* rows/fields) vary run to run
+            # and would bury real trajectory changes in timing noise —
+            # stripped here, two refreshes of unchanged code produce
+            # byte-identical files.  An errored benchmark never
+            # overwrites its committed root copy with a stub.
+            with open(os.path.join(_REPO_ROOT,
+                                   f"BENCH_{name}.json"), "w") as f:
+                f.write(json.dumps(_root_payload(payload), indent=1,
+                                   default=_jsonable) + "\n")
         written[name] = path
         print(f"# {name} done in {elapsed:.1f}s -> {path}", file=sys.stderr)
     return written
@@ -144,10 +205,26 @@ def main() -> None:
                     help="shootdown-settlement sweep for the concurrent "
                          "mm-op benchmarks (overlap = contending IPI "
                          "rounds, see repro.core.shootdown)")
+    def nonneg_int(v: str) -> int:
+        n = int(v)
+        if n < 0:
+            raise argparse.ArgumentTypeError("--spinners must be >= 0")
+        return n
+
+    ap.add_argument("--spinners", type=nonneg_int, default=None,
+                    help="per-socket spinner load of the Fig 1 "
+                         "spinner-ramp calibration sweep (mm_concurrent); "
+                         "default: the benchmark's calibrated value")
+    ap.add_argument("--emit-root", action="store_true",
+                    help="also write canonical BENCH_<name>.json files at "
+                         "the repository root (the committed perf "
+                         "trajectory; resolved from the package location, "
+                         "CWD-independent)")
     args = ap.parse_args()
     run_benchmarks([args.only] if args.only else None, quick=args.quick,
                    scale=args.scale, outdir=args.outdir, strict=args.strict,
-                   concurrency=args.concurrency)
+                   concurrency=args.concurrency, spinners=args.spinners,
+                   emit_root=args.emit_root)
 
 
 if __name__ == "__main__":

@@ -17,8 +17,9 @@ from .mm_batch import apply_mm_ops, mmap_batch, mprotect_batch, munmap_batch
 from .pagetable import (PERM_R, PERM_RW, PERM_W, PERM_X, PTES_PER_TABLE,
                         LeafTable, PageTableStore, Policy, VMA, leaf_id,
                         leaf_index)
-from .shootdown import (IPI_RECEIVE_NS, ContentionModel, NullContention,
-                        QueueContention, RoundSettlement)
+from .shootdown import (IPI_RECEIVE_NS, CoalescingContention,
+                        ContentionModel, NullContention, QueueContention,
+                        RoundSettlement)
 from .sim import Counters, NumaSim, SegfaultError, Thread
 from .tlb import TLB
 from .topology import (PAPER_4SOCKET, PAPER_8SOCKET, TPU_2POD, NumaTopology,
@@ -27,7 +28,8 @@ from .workloads import (APPS, AppSpec, build_app, run_app, run_exec_phase,
                         run_mprotect_phase, run_teardown_phase)
 
 __all__ = [
-    "APPS", "AppSpec", "ContentionModel", "CostModel", "Counters",
+    "APPS", "AppSpec", "CoalescingContention", "ContentionModel",
+    "CostModel", "Counters",
     "IPI_RECEIVE_NS", "LeafTable", "MallocModel", "NullContention",
     "QueueContention", "RoundSettlement",
     "access_stream", "touch_batch",

@@ -57,18 +57,25 @@ batch are applied in sequence — protocol state (page tables, TLBs, VMAs,
 the oracle) always evolves in program order, under either concurrency
 mode.
 
-``concurrency="overlap"`` (PR 3) additionally settles concurrently issued
-shootdowns as *overlapping IPI rounds*: each round is handed to a
-``repro.core.shootdown.ContentionModel`` which tracks per-CPU
-interrupt-handler busy horizons and stretches the initiator's ack wait by
-its slowest target's receive-queue delay (counters
-``ipi_queue_delay_ns`` / ``overlapping_rounds``).  The zero-delay model
-(``NullContention``) settles every round to exactly zero extra cost, so
-overlap mode under it is byte-identical to ``concurrency="sequential"`` —
-the differential anchor of ``tests/test_shootdown_contention.py``.  The
-same model instance drives the scalar and batched engines through the
-identical per-round float sequence, so the scalar/batch differential holds
-under contention too.
+``concurrency="overlap"`` (PR 3, two-sided since PR 4) additionally
+settles concurrently issued shootdowns as *overlapping IPI rounds*: each
+round is handed to a ``repro.core.shootdown.ContentionModel`` which
+tracks per-CPU interrupt-handler busy horizons and in-flight initiator
+windows, stretches the initiator's ack wait by its slowest target's
+receive-queue delay, and returns per-target responder results (counters
+``ipi_queue_delay_ns`` / ``overlapping_rounds`` / ``responder_delay_ns``
+/ ``ipis_coalesced``).  In overlap mode the engine settles responders
+*eagerly* per round — the model's ``handler_ns`` (not the module-level
+constant), then the per-CPU stretch, as two separate adds in the scalar
+path's exact order; coalesced IPIs skip the handler charge — because the
+lazy grouped accrual cannot express per-round per-CPU stretches.  The
+zero-delay model (``NullContention``) settles every round to exactly
+zero extra cost and charges ``handler_ns == IPI_RECEIVE_NS``, so overlap
+mode under it is byte-identical to ``concurrency="sequential"`` — the
+differential anchor of ``tests/test_shootdown_contention.py``.  The same
+model instance drives the scalar and batched engines through the
+identical per-round float sequence, so the scalar/batch differential
+holds under contention too.
 """
 from __future__ import annotations
 
@@ -81,7 +88,8 @@ import numpy as np
 
 from .pagetable import (LEAF_SHIFT, PERM_RW, PTE, PTES_PER_TABLE, VMA,
                         find_vma_sorted, next_table_aligned)
-from .shootdown import ContentionModel, QueueContention
+from .shootdown import (ContentionModel, QueueContention,
+                        charge_responders)
 
 __all__ = ["CONCURRENCY_MODES", "apply_mm_ops", "mmap_batch",
            "mprotect_batch", "munmap_batch"]
@@ -252,6 +260,9 @@ class _MMEngine:
         self.ops = ops
         self.node_of = sim.topo.node_of_cpu
         self.full_mask = (1 << sim.topo.n_nodes) - 1
+        # flat handler cost of the *sequential* lazy accrual only: overlap
+        # mode charges responders eagerly from the model's handler_ns in
+        # _shootdown (a custom-handler model never touches this constant)
         from .sim import IPI_RECEIVE_NS
         self.ipi_ns = float(IPI_RECEIVE_NS)
         self.ipi_int = self.ipi_ns.is_integer()
@@ -654,15 +665,29 @@ class _MMEngine:
                        for nd, cpus in self.occ_sets.items()
                        if (allowed >> nd) & 1
                        for cpu in cpus if cpu != me_cpu]
-            s = model.settle(t, my_node, targets, self.node_of, c)
+            s = model.settle(t, me_cpu, targets, self.node_of, c)
             ctr.ipi_queue_delay_ns += s.queued_ns
             ctr.overlapping_rounds += s.contended
+            ctr.ipis_coalesced += len(s.coalesced_cpus)
+            ctr.responder_delay_ns += s.responder_delay_ns
             t += base
             if s.extra_wait_ns:
                 t += s.extra_wait_ns
+            # eager two-sided responder settlement: per-round per-CPU
+            # charges (handler from the *model*, then the stretch) in the
+            # scalar path's exact order — shared with the scalar engine
+            # via shootdown.charge_responders, against this engine's
+            # working-time dict.  The lazy grouped accrual cannot express
+            # per-round stretches, so overlap mode bypasses it entirely
+            # (node_rounds stays zero for the whole batch).
+            wt = self.wt
+            charge_responders(
+                s, model.handler_ns, targets, sim._cpu_threads,
+                lambda thr: self._wtime(thr.tid),
+                lambda thr, v: wt.__setitem__(thr.tid, v))
         else:
             t += base
-        if allowed:
+        if model is None and allowed:
             node_rounds = self.node_rounds
             for nd in range(len(node_rounds)):
                 if (allowed >> nd) & 1:

@@ -35,7 +35,8 @@ from .costmodel import CostModel
 from .pagetable import (PERM_RW, PTE, PTES_PER_TABLE, LeafTable,
                         PageTableStore, Policy, VMA, leaf_base_vpn, leaf_id,
                         leaf_index, next_table_aligned)
-from .shootdown import IPI_RECEIVE_NS, ContentionModel
+from .shootdown import (IPI_RECEIVE_NS, ContentionModel,
+                        charge_responders)
 from .tlb import DEFAULT_TLB_ENTRIES, TLB
 from .topology import NumaTopology
 
@@ -60,6 +61,8 @@ class Counters:
     ipis_filtered: int = 0       # IPIs numaPTE proved unnecessary (saved)
     overlapping_rounds: int = 0  # rounds whose IPIs queued behind another's
     ipi_queue_delay_ns: float = 0.0  # total receive-queue delay (contention)
+    ipis_coalesced: int = 0      # IPIs merged into a pending handler
+    responder_delay_ns: float = 0.0  # target-thread stretch beyond handler
     pt_pages_alloc: int = 0
     pt_pages_freed: int = 0
     data_pages_alloc: int = 0
@@ -552,16 +555,28 @@ class NumaSim:
         if self.contention is not None and targets:
             # overlapping-round settlement: the round starts now (me.time_ns,
             # before the dispatch/ack charge); the initiator's synchronous
-            # wait stretches by the slowest target's receive-queue delay.
-            s = self.contention.settle(me.time_ns, my_node, targets,
+            # wait stretches by the slowest target's receive-queue delay,
+            # and responders settle two-sided (handler occupancy from the
+            # model + per-CPU stretch: queue delay and mid-shootdown
+            # ack-horizon extensions; coalesced IPIs skip the handler).
+            s = self.contention.settle(me.time_ns, me.cpu, targets,
                                        self.topo.node_of_cpu, c)
             ctr.ipi_queue_delay_ns += s.queued_ns
             ctr.overlapping_rounds += s.contended
+            ctr.ipis_coalesced += len(s.coalesced_cpus)
+            ctr.responder_delay_ns += s.responder_delay_ns
             self._charge(tid, base)
             if s.extra_wait_ns:
                 self._charge(tid, s.extra_wait_ns)
-        else:
-            self._charge(tid, base)
+            self.tlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
+            for cpu in targets:
+                self.tlbs[cpu].invalidate_range(start_vpn, end_vpn)
+            charge_responders(
+                s, self.contention.handler_ns, targets, self._cpu_threads,
+                lambda thr: thr.time_ns,
+                lambda thr, v: setattr(thr, "time_ns", v))
+            return
+        self._charge(tid, base)
         # apply invalidations on targets (and self)
         self.tlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
         for cpu in targets:

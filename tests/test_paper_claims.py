@@ -208,6 +208,37 @@ def test_fig10_contention_linux_superlinear_numapte_flat():
         assert qd["linux", w] > qd["numapte", w] >= 0.0
 
 
+def test_fig1_spinner_ramp_linux_cliff_numapte_flat():
+    """PR-4 acceptance gate: under two-sided responder settlement the
+    ``--spinners`` calibration ramp reproduces Fig 1's cliff — Linux's
+    per-op munmap latency reaches >= 10x its single-initiator value at
+    the top of the concurrent-initiator ramp, while numaPTE stays under
+    2x (exactly flat until same-socket workers appear past 8 initiators),
+    and numaPTE's responders are never stretched at all: the sharer
+    filter keeps every other socket's CPUs out of the receive queues on
+    both sides."""
+    from benchmarks.mm_concurrent import (RAMP_SPINNERS_DEFAULT,
+                                          RAMP_WORKERS, run_ramp)
+
+    rows = run_ramp(RAMP_SPINNERS_DEFAULT)
+    by = {(r["policy"], r["n_threads"]): r for r in rows}
+    top = max(RAMP_WORKERS)
+    assert by["linux", top]["vs_single_initiator"] >= 10.0
+    assert by["numapte", top]["vs_single_initiator"] < 2.0
+    # the Linux cliff rises monotonically along the whole ramp
+    lin = [by["linux", w]["vs_single_initiator"] for w in RAMP_WORKERS]
+    assert lin == sorted(lin) and len(set(lin)) == len(lin)
+    # numaPTE is *exactly* flat while workers occupy distinct sockets
+    for w in RAMP_WORKERS:
+        if w <= 8:
+            assert by["numapte", w]["vs_single_initiator"] == 1.0
+    # the cliff is two-sided contention, not fan-out alone: Linux's
+    # responders accrue real stretch, numaPTE's accrue none anywhere
+    assert by["linux", top]["responder_delay_us"] > 0
+    for w in RAMP_WORKERS:
+        assert by["numapte", w]["responder_delay_us"] == 0.0
+
+
 def test_fig8_execution_parity_with_mitosis():
     """numaPTE matches Mitosis's execution phase despite laziness."""
     spec = APPS["btree"]

@@ -8,8 +8,11 @@ the PR-2 sequential semantics: under the zero-delay model
 order, page-table replicas and sharer masks, the oracle, and the VMA
 layout — to the sequential engine, across 200+ seeded random
 interleavings (mirroring ``test_mm_batch_differential``).  Under the real
-``QueueContention`` model the scalar and batched engines must still agree
-bit-for-bit with each other.
+models (``QueueContention`` with two-sided responder settlement, and the
+flush-merging ``CoalescingContention``) the scalar and batched engines
+must still agree bit-for-bit with each other — including the PR-4
+``responder_delay_ns`` / ``ipis_coalesced`` counters, which
+``assert_identical`` compares through ``Counters`` equality.
 
 Metamorphic/property layer (hypothesis-when-available, seeded always-on):
 
@@ -17,16 +20,20 @@ Metamorphic/property layer (hypothesis-when-available, seeded always-on):
 * numaPTE never queues an IPI at a CPU its sharer filter excludes;
 * the IPI counters (rounds, local/remote/filtered) are invariant between
   sequential and overlap modes — contention reschedules interrupts, it
-  never adds or removes them.
+  never adds or removes them;
+* responder delay is exactly zero under ``NullContention``;
+* coalescing never increases a CPU's total handler occupancy;
+* a model's custom ``handler_ns`` drives the CPU busy horizon *and* the
+  target-thread charge — they can never silently disagree.
 """
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
-from repro.core import (IPI_RECEIVE_NS, NullContention, NumaSim,
-                        PAPER_8SOCKET, Policy, QueueContention,
-                        RoundSettlement)
+from repro.core import (CoalescingContention, CostModel, IPI_RECEIVE_NS,
+                        NullContention, NumaSim, PAPER_8SOCKET, Policy,
+                        QueueContention, RoundSettlement)
 from repro.core.pagetable import leaf_id
 
 from test_mm_batch_differential import (POLICIES, _build, _random_choices,
@@ -87,6 +94,8 @@ def test_zero_delay_overlap_matches_sequential(policy):
             tag=f"{policy.value}/null/seed{seed}")
         assert sa.counters.ipi_queue_delay_ns == 0.0
         assert sa.counters.overlapping_rounds == 0
+        assert sa.counters.responder_delay_ns == 0.0
+        assert sa.counters.ipis_coalesced == 0
 
 
 @pytest.mark.slow
@@ -138,6 +147,42 @@ def test_queue_contention_scalar_batch_identical_fast(policy):
             chunk=5, tag=f"{policy.value}/queue-fast/seed{seed}")
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+def test_coalescing_scalar_batch_identical(policy):
+    """The PR-4 split: under the flush-merging ``CoalescingContention``
+    the scalar syscall path and the batched engine must agree bit-for-bit
+    — including ``responder_delay_ns`` and ``ipis_coalesced`` — across
+    35 seeded interleavings per policy (105 total, on top of the 90
+    QueueContention ones, which exercise the same two new counters)."""
+    for seed in range(35):
+        rng = np.random.default_rng(200_000 + seed)
+        choices = _random_choices(rng, int(rng.integers(6, 30)))
+        run_overlap_differential(
+            policy, choices,
+            make_a=dict(engine="batch", concurrency="overlap",
+                        contention=CoalescingContention()),
+            make_b=dict(engine="scalar", concurrency="overlap",
+                        contention=CoalescingContention()),
+            tlb_filter=(seed % 2 == 0),
+            chunk=int(rng.integers(1, 12)),
+            tag=f"{policy.value}/coalesce/seed{seed}")
+
+
+@pytest.mark.parametrize("policy", [Policy.LINUX, Policy.NUMAPTE])
+def test_coalescing_scalar_batch_identical_fast(policy):
+    for seed in range(3):
+        rng = np.random.default_rng(230_000 + seed)
+        choices = _random_choices(rng, 18)
+        run_overlap_differential(
+            policy, choices,
+            make_a=dict(engine="batch", concurrency="overlap",
+                        contention=CoalescingContention()),
+            make_b=dict(engine="scalar", concurrency="overlap",
+                        contention=CoalescingContention()),
+            chunk=5, tag=f"{policy.value}/coalesce-fast/seed{seed}")
+
+
 if HAVE_HYPOTHESIS:
     @pytest.mark.slow
     @settings(max_examples=70, deadline=None)
@@ -148,21 +193,22 @@ if HAVE_HYPOTHESIS:
         policy_i=st.integers(0, len(POLICIES) - 1),
         tlb_filter=st.booleans(),
         chunk=st.integers(1, 12),
-        null_model=st.booleans())
+        model_i=st.integers(0, 2))
     def test_hypothesis_overlap_differentials(choices, policy_i, tlb_filter,
-                                              chunk, null_model):
-        """Property form of both differentials over the same materializer:
-        NullContention-overlap vs sequential, or QueueContention batch vs
-        scalar."""
-        if null_model:
+                                              chunk, model_i):
+        """Property form of the differentials over the same materializer:
+        NullContention-overlap vs sequential, or QueueContention /
+        CoalescingContention batch vs scalar."""
+        if model_i == 0:
             make_a = dict(engine="batch", concurrency="overlap",
                           contention=NullContention())
             make_b = dict(engine="batch", concurrency="sequential")
         else:
+            model = QueueContention if model_i == 1 else CoalescingContention
             make_a = dict(engine="batch", concurrency="overlap",
-                          contention=QueueContention())
+                          contention=model())
             make_b = dict(engine="scalar", concurrency="overlap",
-                          contention=QueueContention())
+                          contention=model())
         run_overlap_differential(POLICIES[policy_i], choices,
                                  make_a=make_a, make_b=make_b,
                                  tlb_filter=tlb_filter, chunk=chunk,
@@ -270,6 +316,176 @@ if HAVE_HYPOTHESIS:
 
 
 # --------------------------------------------------------------------------
+# responder-side settlement (PR 4)
+# --------------------------------------------------------------------------
+def _interleaved_munmap_sim(model, policy=Policy.LINUX, n_workers=3,
+                            pages=8):
+    """Two+ initiators munmap interleaved while a bystander thread on a
+    far socket runs no ops — the pure-responder observer."""
+    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=policy is Policy.NUMAPTE,
+                  contention=model)
+    step = sim.topo.hw_threads_per_node
+    workers = [sim.spawn_thread(n * step) for n in range(n_workers)]
+    victim = sim.spawn_thread(6 * step)
+    vv = sim.mmap(victim, 1)
+    sim.touch(victim, vv.start_vpn, write=True)
+    vmas = {}
+    for w in workers:
+        vmas[w] = sim.mmap(w, pages)
+        for vpn in range(vmas[w].start_vpn, vmas[w].end_vpn):
+            sim.touch(w, vpn, write=True)
+    t_victim = sim.threads[victim].time_ns
+    for i in range(pages):
+        for w in workers:
+            sim.munmap(w, vmas[w].start_vpn + i, 1)
+    sim.check_invariants()
+    return sim, victim, t_victim
+
+
+def test_responder_clock_stretched_beyond_flat_handler():
+    """Two-sided settlement: a pure responder's modeled clock grows by
+    *more* than the flat per-IPI handler cost — the receive-queue delay
+    (and mid-shootdown extensions) land on the targets, not just the
+    initiators — and the total shows up in ``responder_delay_ns``."""
+    sim, victim, t0 = _interleaved_munmap_sim(QueueContention())
+    vt = sim.threads[victim]
+    flat = vt.ipis_received * IPI_RECEIVE_NS
+    assert vt.time_ns - t0 > flat
+    assert sim.counters.responder_delay_ns > 0.0
+    # and under the sequential reference the same victim pays exactly flat
+    seq, victim_s, t0_s = _interleaved_munmap_sim(None)
+    vs = seq.threads[victim_s]
+    assert vs.time_ns - t0_s == vs.ipis_received * IPI_RECEIVE_NS
+    assert vs.ipis_received == vt.ipis_received   # same IPIs, rescheduled
+
+
+def test_responder_side_initiator_ack_extension():
+    """A target CPU hosting a mid-shootdown initiator pays one handler of
+    ack-horizon extension: the spinning initiator services the interrupt
+    before resuming its spin, and its in-flight window grows."""
+    cost = CostModel.paper_default()
+    node_of = lambda cpu: cpu // 4                          # noqa: E731
+    m = QueueContention()
+    m.settle(0.0, 0, [4], node_of, cost)
+    # cpu 0's ack window: [0, shootdown_cost(0 local, 1 remote)) = 995ns
+    win = m.initiator_until[0]
+    assert win == cost.shootdown_cost_ns(0, 1)
+    # a round from another socket lands on cpu 0 at +95 — mid-shootdown
+    s = m.settle(0.0, 8, [0], node_of, cost)
+    assert s.target_stretch == {0: IPI_RECEIVE_NS}
+    assert s.responder_delay_ns == IPI_RECEIVE_NS
+    assert s.extra_wait_ns == 0.0 and not s.contended   # no queueing
+    assert m.initiator_until[0] == win + IPI_RECEIVE_NS
+    # outside the (extended) window the extension stops
+    s2 = m.settle(win + IPI_RECEIVE_NS + 1000.0, 8, [0], node_of, cost)
+    assert 0 not in s2.target_stretch
+
+
+def test_custom_handler_ns_consistent_across_engines():
+    """Regression (PR-4 satellite): the target-thread charge and the CPU
+    busy horizon must both come from the model's ``handler_ns`` — they
+    used to disagree silently (threads charged the module-level 700 while
+    horizons advanced by the custom value)."""
+    handler = 123.0
+    model = QueueContention(handler_ns=handler)
+    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, contention=model)
+    main = sim.spawn_thread(0)
+    spin_cpu = sim.topo.hw_threads_per_node      # node 1
+    spinner = sim.spawn_thread(spin_cpu)
+    v = sim.mmap(spinner, 1)
+    sim.touch(spinner, v.start_vpn, write=True)
+    vm = sim.mmap(main, 1)
+    sim.touch(main, vm.start_vpn, write=True)
+    t_spin = sim.threads[spinner].time_ns
+    t_main = sim.threads[main].time_ns
+    sim.munmap(main, vm.start_vpn, 1)
+    # thread charge == handler_ns (not IPI_RECEIVE_NS) ...
+    assert sim.threads[spinner].time_ns - t_spin == handler
+    assert sim.threads[spinner].ipis_received == 1
+    # ... and the busy horizon occupies exactly the same amount: it ends
+    # handler_ns after the IPI's arrival (round start + remote dispatch,
+    # where the round started at the initiator's pre-shootdown charges)
+    arrival = (t_main + sim.cost.syscall_fixed_ns
+               + sim.cost.pte_write_local_ns    # the munmap's PTE clear
+               + sim.cost.ipi_dispatch_remote_ns)
+    assert model.busy_until[spin_cpu] == arrival + handler
+
+
+@pytest.mark.parametrize("model_cls", [QueueContention,
+                                       CoalescingContention])
+def test_custom_handler_ns_scalar_batch_identical(model_cls):
+    """The custom-``handler_ns`` charges must also keep the scalar and
+    batched engines bit-for-bit identical (the regression's second
+    half: mm_batch used to cache the module-level constant)."""
+    for seed in range(3):
+        rng = np.random.default_rng(260_000 + seed)
+        choices = _random_choices(rng, 16)
+        run_overlap_differential(
+            Policy.LINUX, choices,
+            make_a=dict(engine="batch", concurrency="overlap",
+                        contention=model_cls(handler_ns=123.0)),
+            make_b=dict(engine="scalar", concurrency="overlap",
+                        contention=model_cls(handler_ns=123.0)),
+            chunk=5, tag=f"{model_cls.__name__}/handler123/seed{seed}")
+
+
+def test_coalescing_merges_into_pending_handler():
+    """An invalidation landing behind a pending handler merges: the busy
+    horizon does not advance, the responder pays nothing, the initiator
+    waits out the pending handler, and ``ipis_coalesced`` counts it."""
+    cost = CostModel.paper_default()
+    node_of = lambda cpu: cpu // 4                          # noqa: E731
+    m = CoalescingContention()
+    s1 = m.settle(0.0, 0, [4, 5], node_of, cost)
+    assert s1 is not None and not s1.coalesced_cpus
+    busy1 = dict(m.busy_until)
+    s2 = m.settle(0.0, 1, [4, 5], node_of, cost)
+    assert s2.coalesced_cpus == frozenset({4, 5})
+    assert m.busy_until == busy1                 # merged: no new occupancy
+    assert s2.queued_ns == 2 * IPI_RECEIVE_NS
+    assert s2.extra_wait_ns == IPI_RECEIVE_NS    # waits out the merge
+    assert s2.responder_delay_ns == 0.0 and not s2.target_stretch
+
+
+def test_coalescing_sim_skips_handler_charge_for_merged_ipis():
+    """At the simulator level a coalesced IPI must not charge the target
+    thread a handler occupancy (the merge is what Linux's flush batching
+    buys responders) while ``ipis_received`` still counts the delivery."""
+    sim, victim, t0 = _interleaved_munmap_sim(CoalescingContention())
+    assert sim.counters.ipis_coalesced > 0
+    qsim, qvictim, qt0 = _interleaved_munmap_sim(QueueContention())
+    vt, qv = sim.threads[victim], qsim.threads[qvictim]
+    assert vt.ipis_received == qv.ipis_received
+    # merging can only make the responder cheaper
+    assert vt.time_ns - t0 < qv.time_ns - qt0
+
+
+def test_coalescing_never_increases_handler_occupancy():
+    """Metamorphic: replaying the identical round sequence, the coalescing
+    model's per-CPU busy horizon never exceeds the queueing model's —
+    merging only ever removes handler occupancy."""
+    cost = CostModel.paper_default()
+    node_of = lambda cpu: cpu // 4                          # noqa: E731
+    rng = np.random.default_rng(7)
+    for _ in range(40):
+        q, c = QueueContention(), CoalescingContention()
+        t = 0.0
+        for _round in range(rng.integers(2, 30)):
+            t += float(rng.integers(0, 1500))
+            my_cpu = int(rng.integers(0, 32))
+            k = int(rng.integers(1, 8))
+            targets = [cpu for cpu in rng.choice(32, size=k, replace=False)
+                       if cpu != my_cpu]
+            if not targets:
+                continue
+            q.settle(t, my_cpu, list(targets), node_of, cost)
+            c.settle(t, my_cpu, list(targets), node_of, cost)
+            for cpu in set(q.busy_until) | set(c.busy_until):
+                assert c.busy_until.get(cpu, 0.0) <= \
+                    q.busy_until.get(cpu, 0.0), cpu
+
+
+# --------------------------------------------------------------------------
 # unit-level behavior
 # --------------------------------------------------------------------------
 def test_sim_level_contention_drives_scalar_syscalls():
@@ -333,18 +549,23 @@ def test_apply_mm_ops_rejects_unknown_concurrency():
 
 
 def test_queue_contention_reset_and_settlement_shape():
-    from repro.core import CostModel
     cost = CostModel.paper_default()
     m = QueueContention()
     node_of = lambda cpu: cpu // 4                          # noqa: E731
     s1 = m.settle(0.0, 0, [4, 5], node_of, cost)
     assert isinstance(s1, RoundSettlement)
     assert s1.extra_wait_ns == 0.0 and not s1.contended     # quiet system
-    # a second round dispatched immediately queues behind the first
-    s2 = m.settle(0.0, 0, [4, 5], node_of, cost)
+    assert not s1.target_stretch and s1.responder_delay_ns == 0.0
+    assert not s1.coalesced_cpus
+    # a second round dispatched immediately queues behind the first (from
+    # a different initiator CPU, so no mid-shootdown extension mixes in)
+    s2 = m.settle(0.0, 1, [4, 5], node_of, cost)
     assert s2.contended and s2.extra_wait_ns == IPI_RECEIVE_NS
     assert s2.queued_ns == 2 * IPI_RECEIVE_NS
+    # two-sided: each queued responder is stretched by its own delay
+    assert s2.target_stretch == {4: IPI_RECEIVE_NS, 5: IPI_RECEIVE_NS}
+    assert s2.responder_delay_ns == 2 * IPI_RECEIVE_NS
     m.reset()
-    assert not m.busy_until and m.clock == 0.0
+    assert not m.busy_until and not m.initiator_until and m.clock == 0.0
     s3 = m.settle(0.0, 0, [4, 5], node_of, cost)
     assert not s3.contended
