@@ -22,16 +22,21 @@ def csv(name: str, rows: List[Dict]) -> List[Dict]:
     return rows
 
 
+def spinner_cpus(topo, per_socket: int, skip_cpu0: bool = True):
+    """The exact hardware threads ``make_spinners`` occupies — the single
+    source of the placement, so initiator placement (``mm_concurrent.
+    worker_cpus``) can compute the spinner-free set from it instead of
+    re-deriving the formula."""
+    return [node * topo.hw_threads_per_node + i
+            + (1 if (skip_cpu0 and node == 0) else 0)
+            for node in range(topo.n_nodes) for i in range(per_socket)]
+
+
 def make_spinners(sim: NumaSim, per_socket: int, skip_cpu0: bool = True,
                   engine: str = "batch"):
     """Spinning threads on every socket (the Fig 1/10 workload)."""
-    topo = sim.topo
-    tids = []
-    for node in range(topo.n_nodes):
-        base = node * topo.hw_threads_per_node
-        for i in range(per_socket):
-            cpu = base + i + (1 if (skip_cpu0 and node == 0) else 0)
-            tids.append(sim.spawn_thread(cpu))
+    tids = [sim.spawn_thread(cpu)
+            for cpu in spinner_cpus(sim.topo, per_socket, skip_cpu0)]
     vmas = sim.apply_mm_ops([("mmap", t, 1) for t in tids], engine=engine)
     sim.apply_mm_ops([("touch", t, [v.start_vpn], True)
                       for t, v in zip(tids, vmas)], engine=engine)

@@ -23,18 +23,39 @@ Four scenarios:
   per-op latency grows superlinearly with W (every round targets every
   CPU, so the queues compound); numaPTE stays near-flat (its rounds only
   ever target the owner socket).
-* ``spinner-ramp``  — the Fig 1 calibration sweep (PR 4): the same
-  lockstep storm under the *two-sided* responder settlement, ramped to
-  enough concurrent initiators (``--spinners`` sets the per-socket
-  spinner load) that Linux's per-op munmap latency climbs >= 10x its
-  single-initiator value — the paper's Fig 1 cliff, directionally —
-  while numaPTE stays under 2x: its sharer-filtered rounds keep every
-  other socket's CPUs out of the receive queues on both sides, so only
-  same-socket worker pairs (W > 8) ever contend.  Rows carry
-  ``responder_delay_us`` / ``ipis_coalesced`` and a
-  ``vs_single_initiator`` ratio.
+* ``spinner-ramp``  — the PR-4 relative calibration sweep: the lockstep
+  storm under the *two-sided* responder settlement, ramped over
+  concurrent initiators at a fixed per-socket spinner load
+  (``--spinners``).  It runs under the explicit ``queue`` model — the
+  relative concurrency cliff (Linux >= 10x its single-initiator value at
+  16 initiators) is a no-coalescing queueing phenomenon, and its gate is
+  preserved as such — while numaPTE stays under 2x.  Rows carry
+  ``responder_delay_us`` / ``ipis_coalesced`` / ``vs_single_initiator``.
+* ``fig1-absolute`` — the PR-5 **absolute** Fig 1 calibration: the storm
+  swept over the resident spinner load itself, up to the paper's
+  280-spinner / 8-socket regime (35 spinners per socket; with 8
+  initiators — one per socket on the free hardware thread — the 288-hw-
+  thread testbed is exactly full), under the **default** overlap model
+  (``CoalescingContention``, Linux's real flush batching).  Each row is
+  normalized two ways: ``vs_quiet`` (the policy's single-initiator,
+  zero-spinner per-op value — Fig 1's own y-axis: Linux climbs to ~40x,
+  gate >= 30x) and ``vs_single_initiator`` (the same spinner load with
+  one initiator — numaPTE stays at 1.0x: its sharer-filtered rounds
+  never contend across sockets, and its responders are never stretched).
+  The cliff survives coalescing because it is dominated by the
+  process-wide round's full fan-out dispatch + ack, not by handler
+  queueing.  numaPTE's absolute degradation lands at ~2.3x, matching
+  Fig 10's ~2.6x munmap figure.
 * ``app-churn``     — the Table-3 btree app through the ``workloads``
   mprotect/teardown phases, unchanged from PR 2.
+
+All overlap-settled rows record which settlement engine produced them
+(``settle_engine``: the vectorized ``repro.core.shootdown_batch`` array
+engine vs the scalar model loops — bit-identical, so modeled rows never
+depend on it; ``"mixed"`` would flag a mid-batch fallback) and which
+contention model (``model``).  ``engine_walltime`` rows time the
+settlement engine itself against the scalar loops at the top of the
+280-spinner regime.
 
 The op programs are generated once per (seed, size) with a shadow address
 allocator that mirrors the simulator's mmap layout exactly, so every
@@ -48,10 +69,12 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import (APPS, NumaSim, PAPER_8SOCKET, Policy, run_app)
+from repro.core import (APPS, DEFAULT_OVERLAP_MODEL, NumaSim, PAPER_8SOCKET,
+                        Policy, make_contention, run_app)
 from repro.core.pagetable import PERM_R, PERM_RW, next_table_aligned
 
-from .common import concurrency_modes, csv, make_spinners, policies
+from .common import (concurrency_modes, csv, make_spinners, policies,
+                     spinner_cpus)
 
 #: op-kind mix: mm-heavy on purpose (the access path has its own figs)
 _MIX = (("mmap", 0.30), ("touch", 0.30), ("mprotect", 0.20),
@@ -132,22 +155,55 @@ def run_one(policy: Policy, filt: bool, n_ops: int, *,
             "ipi_queue_delay_us": round(c.ipi_queue_delay_ns / 1e3, 3),
             "responder_delay_us": round(c.responder_delay_ns / 1e3, 3),
             "overlapping_rounds": c.overlapping_rounds,
+            "model": (DEFAULT_OVERLAP_MODEL if concurrency == "overlap"
+                      else None),
+            "settle_engine": sim.last_settle_engine,
             "pt_pages_freed": c.pt_pages_freed}
+
+
+def worker_cpus(topo, n_threads: int, spin: int) -> List[int]:
+    """Initiator placement for the storm: round-robin across sockets on
+    hardware threads the spinners don't occupy.
+
+    Free offsets are tried from 30 upward first (then wrapping below), so
+    for spin <= 30 this reproduces the historical placement exactly
+    (worker *i* at offset ``30 + i//n_nodes`` of node ``i % n_nodes``).
+    At the paper's full 280-spinner load (spin=35) each socket has exactly
+    one free hardware thread and the workers take it — 280 spinners + 8
+    workers fill the 288-hw-thread testbed; beyond that workers time-share
+    the free thread (the models allow CPU sharing)."""
+    spun = set(spinner_cpus(topo, spin))
+    pools = {}
+    for n in range(topo.n_nodes):
+        cpus = topo.cpus_of_node(n)
+        free = [c for c in cpus
+                if c not in spun and c - cpus[0] >= 30]
+        free += [c for c in cpus
+                 if c not in spun and c - cpus[0] < 30]
+        if not free:                 # fully spun socket: share the last cpu
+            free = [cpus[-1]]
+        pools[n] = free
+    return [pools[i % topo.n_nodes][(i // topo.n_nodes)
+                                    % len(pools[i % topo.n_nodes])]
+            for i in range(n_threads)]
 
 
 def run_storm(policy: Policy, filt: bool, n_threads: int, *,
               iters: int = 60, spin: int = 4, engine: str = "batch",
-              concurrency: str = "overlap") -> dict:
+              concurrency: str = "overlap", contention: str = None,
+              settle: str = "auto") -> dict:
     """W workers munmap their own (private) 1-page areas in lockstep
     round-robin waves — the contention-cliff microbenchmark.  Workers are
-    placed round-robin across sockets, so for W <= 8 numaPTE's
-    sharer-filtered rounds never share a target CPU while Linux's
-    process-wide rounds all contend for every spinner and worker."""
+    placed round-robin across sockets (on spinner-free hardware threads,
+    see ``worker_cpus``), so for W <= 8 numaPTE's sharer-filtered rounds
+    never share a target CPU while Linux's process-wide rounds all
+    contend for every spinner and worker.  ``contention`` names the
+    overlap model (None = the repo default, ``coalescing``); ``settle``
+    picks the settlement engine — ``wall_s`` times the munmap batch, and
+    ``settle_engine`` records which engine actually ran it."""
     sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
-    topo = sim.topo
-    workers = [sim.spawn_thread((i % topo.n_nodes) * topo.hw_threads_per_node
-                                + 30 + i // topo.n_nodes)
-               for i in range(n_threads)]
+    workers = [sim.spawn_thread(cpu)
+               for cpu in worker_cpus(sim.topo, n_threads, spin)]
     make_spinners(sim, spin, engine=engine)
     mmap_ops = [("mmap", w, 1) for _ in range(iters) for w in workers]
     vmas = sim.apply_mm_ops(mmap_ops, engine=engine)
@@ -157,7 +213,12 @@ def run_storm(policy: Policy, filt: bool, n_threads: int, *,
                   for op, v in zip(mmap_ops, vmas)]
     before = {w: sim.thread_time_ns(w) for w in workers}
     c0 = sim.counters.snapshot()
-    sim.apply_mm_ops(munmap_ops, engine=engine, concurrency=concurrency)
+    model = (make_contention(contention) if concurrency == "overlap"
+             else None)
+    wall = time.perf_counter()
+    sim.apply_mm_ops(munmap_ops, engine=engine, concurrency=concurrency,
+                     contention=model, settle=settle)
+    wall = time.perf_counter() - wall
     sim.check_invariants()
     c = sim.counters.diff(c0)
     per_op = (sum(sim.thread_time_ns(w) - before[w] for w in workers)
@@ -168,22 +229,39 @@ def run_storm(policy: Policy, filt: bool, n_threads: int, *,
             "overlapping_rounds": c.overlapping_rounds,
             "ipis_coalesced": c.ipis_coalesced,
             "ipis_local": c.ipis_local, "ipis_remote": c.ipis_remote,
-            "ipis_filtered": c.ipis_filtered}
+            "ipis_filtered": c.ipis_filtered,
+            # contention-model provenance only where a model actually ran
+            "model": ((contention or DEFAULT_OVERLAP_MODEL)
+                      if concurrency == "overlap" else None),
+            "settle_engine": sim.last_settle_engine,
+            "wall_s": round(wall, 4)}
 
 
 #: per-socket spinner load of the spinner-ramp scenario (--spinners); the
-#: Fig 1 calibration in tests/test_paper_claims.py asserts at this value.
+#: relative Fig 1 calibration in tests/test_paper_claims.py asserts at
+#: this value.
 RAMP_SPINNERS_DEFAULT = 1
 #: concurrent-initiator ramp of the spinner-ramp scenario (full runs).
 RAMP_WORKERS = (1, 2, 4, 8, 16)
+#: fig1-absolute spinner-load sweep (per-socket; 35 -> the paper's 280
+#: resident spinners on the 8-socket testbed) and its initiator count
+#: (one per socket: 280 spinners + 8 workers = all 288 hw threads).
+ABS_SPINNER_LOADS = (0, 1, 4, 12, 24, 35)
+ABS_SPINNER_LOADS_QUICK = (0, 4, 35)
+ABS_WORKERS = 8
 
 
 def run_ramp(spinners: int, *, workers=RAMP_WORKERS, iters: int = 60,
-             engine: str = "batch") -> list:
-    """The Fig 1 calibration sweep: per-policy rows of the lockstep munmap
-    storm at ``spinners`` spinners per socket, ramped over concurrent
-    initiators, each row normalized to its policy's single-initiator
-    value (the ramp must therefore start at one worker)."""
+             engine: str = "batch", contention: str = "queue",
+             settle: str = "auto") -> list:
+    """The relative (PR-4) Fig 1 calibration sweep: per-policy rows of the
+    lockstep munmap storm at ``spinners`` spinners per socket, ramped over
+    concurrent initiators, each row normalized to its policy's
+    single-initiator value (the ramp must therefore start at one worker).
+    Runs under the explicit ``queue`` model by default: the relative
+    concurrency cliff is a no-coalescing queueing phenomenon and its
+    >= 10x gate is preserved as such (the repo's *default* overlap model
+    is ``coalescing`` — the absolute ramp calibrates that one)."""
     workers = tuple(workers)
     if not workers or workers[0] != 1:
         raise ValueError("the ramp normalizes to the single-initiator "
@@ -195,7 +273,8 @@ def run_ramp(spinners: int, *, workers=RAMP_WORKERS, iters: int = 60,
         base = None
         for w in workers:
             r = run_storm(policy, filt, w, iters=iters, spin=spinners,
-                          engine=engine, concurrency="overlap")
+                          engine=engine, concurrency="overlap",
+                          contention=contention, settle=settle)
             if base is None:
                 base = r["ns_per_op"]
             rows.append({"scenario": "spinner-ramp", "spinners": spinners,
@@ -204,6 +283,77 @@ def run_ramp(spinners: int, *, workers=RAMP_WORKERS, iters: int = 60,
                              round(r["ns_per_op"] / base, 3),
                          **r})
     return rows
+
+
+def run_absolute_ramp(*, spinner_loads=ABS_SPINNER_LOADS,
+                      workers: int = ABS_WORKERS, iters: int = 60,
+                      engine: str = "batch", contention: str = None,
+                      settle: str = "auto") -> list:
+    """The absolute Fig 1 calibration: sweep the resident spinner load up
+    to the paper's 280-spinner regime under the default overlap model.
+
+    Per policy and load the storm runs twice — one initiator, then
+    ``workers`` concurrent initiators — and every row carries both
+    normalizations: ``vs_quiet`` (the policy's single-initiator,
+    zero-spinner value, Fig 1's y-axis — the sweep must therefore start
+    at load 0) and ``vs_single_initiator`` (the one-initiator value at
+    the same load — the concurrency-flatness numaPTE's filter buys)."""
+    spinner_loads = tuple(spinner_loads)
+    if not spinner_loads or spinner_loads[0] != 0:
+        raise ValueError("the absolute ramp normalizes to the quiet "
+                         "single-initiator baseline; spinner_loads must "
+                         f"start at 0, got {spinner_loads!r}")
+    rows = []
+    for name, policy, filt in (("linux", Policy.LINUX, False),
+                               ("numapte", Policy.NUMAPTE, True)):
+        quiet = None
+        for s in spinner_loads:
+            single = None
+            for w in (1, workers):
+                r = run_storm(policy, filt, w, iters=iters, spin=s,
+                              engine=engine, concurrency="overlap",
+                              contention=contention, settle=settle)
+                if single is None:
+                    single = r["ns_per_op"]
+                if quiet is None:
+                    quiet = r["ns_per_op"]
+                rows.append({
+                    "scenario": "fig1-absolute", "spinners": s,
+                    "total_spinners": s * PAPER_8SOCKET.n_nodes,
+                    "concurrency": "overlap", "policy": name,
+                    "vs_quiet": round(r["ns_per_op"] / quiet, 3),
+                    "vs_single_initiator":
+                        round(r["ns_per_op"] / single, 3),
+                    **r})
+                if w == workers:
+                    break   # workers == 1: one run covers both rows
+    return rows
+
+
+def settlement_walltime_rows(*, iters: int = 40) -> list:
+    """``row_type="engine_walltime"`` rows for the settlement engine
+    itself: host wall seconds of the top-of-ramp munmap storm (Linux,
+    8 initiators, 280 resident spinners — the heaviest fan-out) with
+    contended rounds settled by the vectorized array engine vs the
+    scalar model loops.  The modeled results are bit-identical (asserted
+    here), so the rows isolate pure settlement-engine speed."""
+    walls, ops = {}, {}
+    for eng in ("vector", "sequential"):
+        r = run_storm(Policy.LINUX, False, ABS_WORKERS, iters=iters,
+                      spin=max(ABS_SPINNER_LOADS), settle=eng)
+        walls[eng] = r["wall_s"]
+        ops[eng] = {k: v for k, v in r.items()
+                    if k not in ("wall_s", "settle_engine")}
+    if ops["vector"] != ops["sequential"]:
+        raise AssertionError("settlement engines diverged: "
+                             f"{ops['vector']} != {ops['sequential']}")
+    return [{"row_type": "engine_walltime", "scenario": "settlement",
+             "spin_per_socket": max(ABS_SPINNER_LOADS),
+             "n_threads": ABS_WORKERS, "iters": iters,
+             "wall_vector_s": walls["vector"],
+             "wall_sequential_s": walls["sequential"],
+             "vector_speedup": round(
+                 walls["sequential"] / max(walls["vector"], 1e-9), 2)}]
 
 
 def main(quick: bool = False, scale: int = 1,
@@ -238,12 +388,19 @@ def main(quick: bool = False, scale: int = 1,
                              "policy": name,
                              "vs_1thread": round(r["ns_per_op"] / base, 3),
                              **r})
-    # spinner-ramp: the Fig 1 cliff calibration (two-sided settlement is
-    # what the ramp measures, so it only runs when overlap is swept)
+    # spinner-ramp: the relative Fig 1 cliff calibration, and
+    # fig1-absolute: the 280-spinner absolute calibration + the
+    # settlement-engine walltime rows (two-sided settlement is what the
+    # ramps measure, so they only run when overlap is swept)
     if "overlap" in concurrency_modes(concurrency):
         rows += run_ramp(spinners,
                          workers=((1, 4, 16) if quick else RAMP_WORKERS),
                          iters=(40 if quick else 60) * scale)
+        rows += run_absolute_ramp(
+            spinner_loads=(ABS_SPINNER_LOADS_QUICK if quick
+                           else ABS_SPINNER_LOADS),
+            iters=(30 if quick else 60) * scale)
+        rows += settlement_walltime_rows(iters=(30 if quick else 60) * scale)
     # app churn: loading + exec + mprotect pass + teardown of the btree app
     spec = APPS["btree"]
     accesses = (2000 if quick else 8000) * scale

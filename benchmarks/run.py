@@ -7,12 +7,24 @@
 prints ``name,key=value,...`` CSV rows for every reproduced artifact and
 writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
 ``bench_out/``) so the perf trajectory is machine-readable and CI can
-archive it.  JSON schema (version 3):
+archive it.  JSON schema (version 4):
 
-    {"schema_version": 3, "name": str, "quick": bool, "scale": int,
+    {"schema_version": 4, "name": str, "quick": bool, "scale": int,
      "concurrency": str | null, "spinners": int | null,
      "elapsed_s": float, "rows": [ {column: value, ...} ],
      "row_types": [str, ...], "error": str | null}
+
+Version 4 (same payload shape as v3; the rows changed): overlap-settled
+``mm_concurrent`` rows carry ``model`` (the contention model) and
+``settle_engine`` (which settlement engine produced them — the
+vectorized ``repro.core.shootdown_batch`` array engine vs the scalar
+model loops, or ``"mixed"`` after a mid-batch fallback — so downstream
+determinism checks never silently compare mixed-engine artifacts), the
+``fig1-absolute`` scenario sweeps the resident spinner load to the
+paper's 280-spinner / 8-socket regime under the default
+``CoalescingContention`` model, and a ``scenario="settlement"``
+``engine_walltime`` row times the settlement engine itself against the
+scalar loops at the top of that regime.
 
 ``rows`` carries everything the CSV shows (per-policy modeled times,
 counters, speedups) plus JSON-only nested fields such as raw counter
@@ -69,7 +81,7 @@ BENCHES = {
     "roofline": roofline.main,
 }
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 #: where --emit-root writes the canonical BENCH_<name>.json files: the
 #: repository root, resolved from this package's location so the flag
@@ -212,9 +224,12 @@ def main() -> None:
         return n
 
     ap.add_argument("--spinners", type=nonneg_int, default=None,
-                    help="per-socket spinner load of the Fig 1 "
+                    help="per-socket spinner load of the relative Fig 1 "
                          "spinner-ramp calibration sweep (mm_concurrent); "
-                         "default: the benchmark's calibrated value")
+                         "default: the benchmark's calibrated value.  The "
+                         "fig1-absolute scenario always sweeps its own "
+                         "loads up to the paper's 280-spinner regime "
+                         "(35 per socket)")
     ap.add_argument("--emit-root", action="store_true",
                     help="also write canonical BENCH_<name>.json files at "
                          "the repository root (the committed perf "

@@ -17,9 +17,12 @@ from .mm_batch import apply_mm_ops, mmap_batch, mprotect_batch, munmap_batch
 from .pagetable import (PERM_R, PERM_RW, PERM_W, PERM_X, PTES_PER_TABLE,
                         LeafTable, PageTableStore, Policy, VMA, leaf_id,
                         leaf_index)
-from .shootdown import (IPI_RECEIVE_NS, CoalescingContention,
+from .shootdown import (CONTENTION_MODELS, DEFAULT_OVERLAP_MODEL,
+                        IPI_RECEIVE_NS, CoalescingContention,
                         ContentionModel, NullContention, QueueContention,
-                        RoundSettlement)
+                        RoundSettlement, make_contention)
+from .shootdown_batch import (SETTLE_MODES, BatchSettlement, settle_round,
+                              supports_vector)
 from .sim import Counters, NumaSim, SegfaultError, Thread
 from .tlb import TLB
 from .topology import (PAPER_4SOCKET, PAPER_8SOCKET, TPU_2POD, NumaTopology,
@@ -28,10 +31,12 @@ from .workloads import (APPS, AppSpec, build_app, run_app, run_exec_phase,
                         run_mprotect_phase, run_teardown_phase)
 
 __all__ = [
-    "APPS", "AppSpec", "CoalescingContention", "ContentionModel",
-    "CostModel", "Counters",
+    "APPS", "AppSpec", "BatchSettlement", "CONTENTION_MODELS",
+    "CoalescingContention", "ContentionModel",
+    "CostModel", "Counters", "DEFAULT_OVERLAP_MODEL",
     "IPI_RECEIVE_NS", "LeafTable", "MallocModel", "NullContention",
-    "QueueContention", "RoundSettlement",
+    "QueueContention", "RoundSettlement", "SETTLE_MODES",
+    "make_contention", "settle_round", "supports_vector",
     "access_stream", "touch_batch",
     "apply_mm_ops", "mmap_batch", "mprotect_batch", "munmap_batch",
     "NumaSim", "NumaTopology", "PAPER_4SOCKET", "PAPER_8SOCKET",

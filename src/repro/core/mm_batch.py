@@ -76,6 +76,19 @@ differential anchor of ``tests/test_shootdown_contention.py``.  The same
 model instance drives the scalar and batched engines through the
 identical per-round float sequence, so the scalar/batch differential
 holds under contention too.
+
+Since PR 5 contended rounds settle through the **vectorized settlement
+engine** (``repro.core.shootdown_batch``) by default: the whole target
+mask — busy horizons, ack windows, queue delays, responder stretches,
+coalescing merges, and the two-sided thread charges — is computed as
+array operations per round, with the integer-exactness guard +
+sequential-fallback pattern keeping it bit-for-bit identical to the
+scalar model loops (``settle="sequential"`` forces those; the
+differential suite is ``tests/test_shootdown_batch_differential.py``).
+This is what makes the paper's absolute 280-spinner Fig 1 regime (every
+Linux round fanning out to ~287 CPUs) practical in CI, and the default
+overlap model is now ``CoalescingContention`` (Linux's real flush
+batching) with ``QueueContention`` kept selectable.
 """
 from __future__ import annotations
 
@@ -88,8 +101,9 @@ import numpy as np
 
 from .pagetable import (LEAF_SHIFT, PERM_RW, PTE, PTES_PER_TABLE, VMA,
                         find_vma_sorted, next_table_aligned)
-from .shootdown import (ContentionModel, QueueContention,
+from .shootdown import (CoalescingContention, ContentionModel,
                         charge_responders)
+from .shootdown_batch import BatchSettlement, resolve_settle
 
 __all__ = ["CONCURRENCY_MODES", "apply_mm_ops", "mmap_batch",
            "mprotect_batch", "munmap_batch"]
@@ -111,7 +125,8 @@ _BY_START = operator.attrgetter("start_vpn")
 # --------------------------------------------------------------------------
 def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch",
                  concurrency: str = "sequential",
-                 contention: Optional[ContentionModel] = None) -> list:
+                 contention: Optional[ContentionModel] = None,
+                 settle: str = "auto") -> list:
     """Apply a sequence of memory-management ops, in order.
 
     Each op is a tuple whose first element names the kind:
@@ -137,8 +152,24 @@ def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch",
       (passing ``contention`` with this mode is an error, not a no-op).
     * ``"overlap"`` — concurrently issued mm ops from different threads
       form overlapping IPI rounds, settled by ``contention`` (or the sim's
-      model, or a fresh ``QueueContention``) — see ``repro.core.shootdown``.
-      Pass an explicit model to carry busy horizons across batches.
+      model, or a fresh ``CoalescingContention`` — Linux's real
+      flush-batching behavior, the default since the absolute Fig 1
+      calibration) — see ``repro.core.shootdown``.  Pass an explicit
+      model to carry busy horizons across batches.
+
+    ``settle`` picks the settlement engine for contended rounds (overlap
+    mode only; see ``repro.core.shootdown_batch``):
+
+    * ``"auto"`` (default) — the vectorized engine when the model is a
+      stock ``QueueContention``/``CoalescingContention``, else the
+      scalar model loops.  Bit-identical either way.
+    * ``"vector"`` — require the vectorized engine (error if the model
+      doesn't support it).
+    * ``"sequential"`` — force the scalar model loops (the differential
+      reference).
+
+    The engine actually used is reported in ``sim.last_settle_engine``
+    (``"mixed"`` if the vectorized engine abandoned mid-batch).
     """
     ops = list(ops)
     for op in ops:
@@ -152,21 +183,34 @@ def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch",
         raise ValueError("contention model given but concurrency="
                          f"{concurrency!r}; it would be silently ignored — "
                          "pass concurrency=\"overlap\"")
+    if settle != "auto" and concurrency != "overlap":
+        raise ValueError(f"settle={settle!r} given but concurrency="
+                         f"{concurrency!r}; the settlement engine only "
+                         "applies to overlap mode")
     if concurrency == "overlap":
         model: Optional[ContentionModel] = (
             contention if contention is not None
             else sim.contention if sim.contention is not None
-            else QueueContention())
+            else CoalescingContention())
+        resolved: Optional[str] = resolve_settle(settle, model)
     else:
-        model = None
-    prev = sim.contention
+        model, resolved = None, None
+    prev, prev_se = sim.contention, sim.settle_engine
     sim.contention = model
+    if resolved is not None:
+        sim.settle_engine = resolved
     try:
         if engine == "scalar":
+            sim.last_settle_engine = resolved
             return _apply_scalar(sim, ops)
-        return _MMEngine(sim, ops).run()
+        mm = _MMEngine(sim, ops, settle=resolved)
+        try:
+            return mm.run()
+        finally:
+            sim.last_settle_engine = mm.settle_used
     finally:
         sim.contention = prev
+        sim.settle_engine = prev_se
 
 
 def mmap_batch(sim, tid: int, sizes, *, perms: int = PERM_RW,
@@ -255,10 +299,11 @@ class _MMEngine:
     order, so write-back equals the scalar sequence bit-for-bit.
     """
 
-    def __init__(self, sim, ops: List[tuple]):
+    def __init__(self, sim, ops: List[tuple], settle: Optional[str] = None):
         self.sim = sim
         self.ops = ops
         self.node_of = sim.topo.node_of_cpu
+        self.hw_per_node = sim.topo.hw_threads_per_node
         self.full_mask = (1 << sim.topo.n_nodes) - 1
         # flat handler cost of the *sequential* lazy accrual only: overlap
         # mode charges responders eagerly from the model's handler_ns in
@@ -269,6 +314,17 @@ class _MMEngine:
         # overlapping-round settlement (set by apply_mm_ops for the batch's
         # duration); None = classic sequential semantics.
         self.contention = sim.contention
+        #: settlement engine for contended rounds ("vector"/"sequential";
+        #: None outside overlap mode).  settle_used reports what actually
+        #: ran — it degrades to "mixed" if the vectorized engine abandons
+        #: mid-batch, so benchmark rows can record their provenance.
+        self.settle_used = settle
+        self.vec: Optional[BatchSettlement] = (
+            BatchSettlement(sim, self.contention)
+            if settle == "vector" else None)
+        #: cached sorted shootdown fan-out per (sharer mask, initiator
+        #: cpu) — occupancy only changes on migrate, which clears it.
+        self._tcache: Dict[Tuple[int, int], tuple] = {}
         self.wt: Dict[int, float] = {}
         # IPI-receive accrual, O(nodes) per round / O(1) per settlement: a
         # thread on cpu C (node N) is targeted by every round whose mask
@@ -357,11 +413,21 @@ class _MMEngine:
 
     # ------------------------------------------------------ time accounting
     def _wtime(self, tid: int) -> float:
+        vec = self.vec
+        if vec is not None:
+            return float(vec.times[tid])
         w = self.wt.get(tid)
         if w is None:
             w = self.sim.threads[tid].time_ns
             self.wt[tid] = w
         return w
+
+    def _set_time(self, tid: int, v: float) -> None:
+        vec = self.vec
+        if vec is not None:
+            vec.times[tid] = v
+        else:
+            self.wt[tid] = v
 
     def _settle_ipis(self, tid: int) -> None:
         """Apply this thread's due IPI-receive charges (scalar order: all
@@ -379,19 +445,45 @@ class _MMEngine:
         ipi = self.ipi_ns
         total = due * ipi
         if self.ipi_int and t.is_integer() and t + total < _MAX_EXACT:
-            self.wt[tid] = t + total
+            self._set_time(tid, t + total)
         else:
             for _ in range(due):   # exact sequential fallback
                 t += ipi
-            self.wt[tid] = t
+            self._set_time(tid, t)
 
     def _settle_all_ipis(self) -> None:
         for tid in self.sim.threads:
             self._settle_ipis(tid)
 
+    def _abandon_vector(self) -> None:
+        """Mid-batch fallback to the scalar model loops: flush the array
+        state (thread times into the working dict, IPI deltas onto the
+        threads, busy/inflight horizons into the model dicts) and mark
+        the batch as mixed-engine so rows can't masquerade as
+        single-engine artifacts."""
+        vec = self.vec
+        wt = self.wt
+        for tid, thr in self.sim.threads.items():
+            wt[tid] = float(vec.times[tid])
+            d = int(vec.ipis[tid])
+            if d:
+                thr.ipis_received += d
+        vec.flush()
+        self.vec = None
+        self.settle_used = "mixed"
+
     def _finish(self) -> None:
         self._settle_all_ipis()
         threads = self.sim.threads
+        vec = self.vec
+        if vec is not None:
+            for tid, thr in threads.items():
+                thr.time_ns = float(vec.times[tid])
+                d = int(vec.ipis[tid])
+                if d:
+                    thr.ipis_received += d
+            vec.flush()
+            return
         for tid, w in self.wt.items():
             threads[tid].time_ns = w
 
@@ -441,20 +533,19 @@ class _MMEngine:
             i = bisect.bisect_right(starts, start)
             sim.vmas.insert(i, vma)
             starts.insert(i, start)
-        self.wt[tid] = self._wtime(tid) + (c.syscall_fixed_ns
-                                           + c.mmap_extra_ns)
+        self._set_time(tid, self._wtime(tid) + (c.syscall_fixed_ns
+                                                + c.mmap_extra_ns))
         return vma
 
     def _op_touch(self, tid: int, vpns, wm) -> None:
         sim = self.sim
         self._settle_ipis(tid)
         thr = sim.threads[tid]
-        if tid in self.wt:
-            thr.time_ns = self.wt.pop(tid)
+        thr.time_ns = self._wtime(tid)
         try:
             sim.touch_batch(tid, vpns, wm)
         finally:
-            self.wt[tid] = thr.time_ns
+            self._set_time(tid, thr.time_ns)
             # fills may have put batched-range vpns into this TLB
             self._relevant.add(thr.cpu)
 
@@ -466,6 +557,9 @@ class _MMEngine:
         self.applied.clear()
         self.sim.migrate_thread(tid, new_cpu)
         self._rebuild_topology_cache()
+        self._tcache.clear()
+        if self.vec is not None:
+            self.vec.rebuild_cpu_map()
 
     def _op_mprotect(self, tid: int, start: int, n: int, perms: int) -> None:
         sim = self.sim
@@ -489,7 +583,7 @@ class _MMEngine:
         if vma is not None and vma.start_vpn == start and vma.n_pages == n:
             vma.perms = perms
         t = self._shootdown(tid, t, start, end, touched)
-        self.wt[tid] = t
+        self._set_time(tid, t)
 
     def _op_munmap(self, tid: int, start: int, n: int) -> None:
         sim = self.sim
@@ -526,7 +620,7 @@ class _MMEngine:
                 t += c.pt_teardown_ns * k
                 store.drop_table(ti)
         self._carve_vmas(start, end)
-        self.wt[tid] = t
+        self._set_time(tid, t)
 
     # ----------------------------------------------------- range primitives
     def _present_vpns(self, table_ids, start: int, end: int) -> List[int]:
@@ -661,30 +755,57 @@ class _MMEngine:
             # same round-start time and float order as the scalar path: the
             # round starts at the initiator's working time before the
             # dispatch/ack charge; base and extra land as two separate adds.
-            targets = [cpu
-                       for nd, cpus in self.occ_sets.items()
-                       if (allowed >> nd) & 1
-                       for cpu in cpus if cpu != me_cpu]
-            s = model.settle(t, me_cpu, targets, self.node_of, c)
-            ctr.ipi_queue_delay_ns += s.queued_ns
-            ctr.overlapping_rounds += s.contended
-            ctr.ipis_coalesced += len(s.coalesced_cpus)
-            ctr.responder_delay_ns += s.responder_delay_ns
-            t += base
-            if s.extra_wait_ns:
-                t += s.extra_wait_ns
-            # eager two-sided responder settlement: per-round per-CPU
-            # charges (handler from the *model*, then the stretch) in the
-            # scalar path's exact order — shared with the scalar engine
-            # via shootdown.charge_responders, against this engine's
-            # working-time dict.  The lazy grouped accrual cannot express
-            # per-round stretches, so overlap mode bypasses it entirely
-            # (node_rounds stays zero for the whole batch).
-            wt = self.wt
-            charge_responders(
-                s, model.handler_ns, targets, sim._cpu_threads,
-                lambda thr: self._wtime(thr.tid),
-                lambda thr, v: wt.__setitem__(thr.tid, v))
+            cached = self._tcache.get((allowed, me_cpu))
+            if cached is None:
+                tlist = sorted(cpu
+                               for nd, cpus in self.occ_sets.items()
+                               if (allowed >> nd) & 1
+                               for cpu in cpus if cpu != me_cpu)
+                tarr = np.asarray(tlist, dtype=np.int64)
+                larr = (tarr // self.hw_per_node) == my_node
+                cached = (tlist, tarr, larr)
+                self._tcache[(allowed, me_cpu)] = cached
+            tlist, tarr, larr = cached
+            vec = self.vec
+            if vec is not None:
+                out = vec.settle_and_charge(t, me_cpu, tarr, larr,
+                                            n_local, n_remote, c)
+                if out is None:
+                    self._abandon_vector()   # rare: non-finite round start
+                    vec = None
+                else:
+                    # the vectorized engine settled AND charged the
+                    # responders (bit-identically); fold the initiator
+                    # view into the counters and the ack wait.
+                    extra_wait, queued, contended, n_coal, resp = out
+                    ctr.ipi_queue_delay_ns += queued
+                    ctr.overlapping_rounds += contended
+                    ctr.ipis_coalesced += n_coal
+                    ctr.responder_delay_ns += resp
+                    t += base
+                    if extra_wait:
+                        t += extra_wait
+            if vec is None:
+                s = model.settle(t, me_cpu, tlist, self.node_of, c)
+                ctr.ipi_queue_delay_ns += s.queued_ns
+                ctr.overlapping_rounds += s.contended
+                ctr.ipis_coalesced += len(s.coalesced_cpus)
+                ctr.responder_delay_ns += s.responder_delay_ns
+                t += base
+                if s.extra_wait_ns:
+                    t += s.extra_wait_ns
+                # eager two-sided responder settlement: per-round per-CPU
+                # charges (handler from the *model*, then the stretch) in
+                # the scalar path's exact order — shared with the scalar
+                # engine via shootdown.charge_responders, against this
+                # engine's working-time dict.  The lazy grouped accrual
+                # cannot express per-round stretches, so overlap mode
+                # bypasses it entirely (node_rounds stays zero for the
+                # whole batch).
+                charge_responders(
+                    s, model.handler_ns, tlist, sim._cpu_threads,
+                    lambda thr: self._wtime(thr.tid),
+                    lambda thr, v: self._set_time(thr.tid, v))
         else:
             t += base
         if model is None and allowed:

@@ -78,7 +78,7 @@ drives the rounds.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, FrozenSet, Iterable, Mapping
+from typing import Callable, Dict, FrozenSet, Iterable, Mapping, Optional
 
 #: interrupt-handler occupancy per received IPI, charged to each target
 #: thread and occupying the target CPU's handler.  Models that are
@@ -325,6 +325,38 @@ class CoalescingContention(QueueContention):
     already-pending handler to finish (the queue delay).  Per-CPU total
     handler occupancy therefore never exceeds the queueing model's — the
     metamorphic property pinned by the test suite.
+
+    Since PR 5 this is the **default** overlap model (it is what real
+    Linux does — its flush batching is exactly this merge), calibrated
+    against Fig 1's absolute 280-spinner cliff: the cliff survives
+    coalescing because it is dominated by the full-fan-out dispatch and
+    ack of a process-wide round, not by handler queueing alone.
+    :class:`QueueContention` stays selectable for the no-coalescing
+    counterfactual (and keeps its own relative-cliff gates).
     """
 
     merge_pending = True
+
+
+#: selectable contention models by name (benchmark CLI / row labels).
+CONTENTION_MODELS = {
+    "null": NullContention,
+    "queue": QueueContention,
+    "coalescing": CoalescingContention,
+}
+
+#: the model ``concurrency="overlap"`` uses when none is given: Linux's
+#: real flush-batching behavior (flipped from "queue" once the absolute
+#: Fig 1 cliff was calibrated under coalescing — see CoalescingContention).
+DEFAULT_OVERLAP_MODEL = "coalescing"
+
+
+def make_contention(name: Optional[str]) -> ContentionModel:
+    """Instantiate a contention model by registry name (None = default)."""
+    if name is None:
+        name = DEFAULT_OVERLAP_MODEL
+    try:
+        return CONTENTION_MODELS[name]()
+    except KeyError:
+        raise ValueError(f"unknown contention model {name!r}; pick from "
+                         f"{sorted(CONTENTION_MODELS)}") from None

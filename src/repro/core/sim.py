@@ -37,6 +37,7 @@ from .pagetable import (PERM_RW, PTE, PTES_PER_TABLE, LeafTable,
                         leaf_index, next_table_aligned)
 from .shootdown import (IPI_RECEIVE_NS, ContentionModel,
                         charge_responders)
+from .shootdown_batch import (SETTLE_MODES, settle_round, supports_vector)
 from .tlb import DEFAULT_TLB_ENTRIES, TLB
 from .topology import NumaTopology
 
@@ -100,13 +101,25 @@ class NumaSim:
                  cost: Optional[CostModel] = None,
                  tlb_entries: int = DEFAULT_TLB_ENTRIES,
                  interference_nodes: Sequence[int] = (),
-                 contention: Optional[ContentionModel] = None):
+                 contention: Optional[ContentionModel] = None,
+                 settle_engine: str = "auto"):
         if policy is not Policy.NUMAPTE:
             tlb_filter = False  # the optimization needs sharer info
+        if settle_engine not in SETTLE_MODES:
+            raise ValueError(f"unknown settle_engine {settle_engine!r}; "
+                             f"pick from {SETTLE_MODES}")
         self.topo = topology
         #: pluggable overlapping-IPI-round settlement (repro.core.shootdown);
         #: None = classic sequential semantics (every round runs alone).
         self.contention = contention
+        #: how contended rounds settle: "auto" picks the vectorized
+        #: engine (repro.core.shootdown_batch) for the stock models,
+        #: "vector" requires it, "sequential" forces the scalar model
+        #: loops (the differential reference).  Bit-identical either way.
+        self.settle_engine = settle_engine
+        #: which settlement engine the last apply_mm_ops batch used
+        #: ("vector" / "sequential" / "mixed"; None = sequential mode).
+        self.last_settle_engine: Optional[str] = None
         self.policy = policy
         self.prefetch_degree = prefetch_degree
         self.tlb_filter = tlb_filter
@@ -234,18 +247,23 @@ class NumaSim:
     # ------------------------------------------------------- batched mm ops
     def apply_mm_ops(self, ops, *, engine: str = "batch",
                      concurrency: str = "sequential",
-                     contention: Optional[ContentionModel] = None) -> list:
+                     contention: Optional[ContentionModel] = None,
+                     settle: str = "auto") -> list:
         """Apply a sequence of ``("mmap"|"touch"|"mprotect"|"munmap"|
         "migrate", tid, ...)`` ops in order (see ``repro.core.mm_batch``).
         ``engine="batch"`` runs the vectorized mm engine, byte-identical to
         ``engine="scalar"`` (the per-op reference loop).
         ``concurrency="overlap"`` settles concurrently issued shootdowns as
         overlapping IPI rounds under a ``repro.core.shootdown`` contention
-        model; ``"sequential"`` keeps the classic each-round-runs-alone
-        semantics."""
+        model (``CoalescingContention`` unless one is given);
+        ``"sequential"`` keeps the classic each-round-runs-alone
+        semantics.  ``settle`` picks the settlement engine for contended
+        rounds (``repro.core.shootdown_batch``): ``"auto"`` vectorizes
+        when the model supports it, ``"sequential"`` forces the scalar
+        model loops — bit-identical either way."""
         from .mm_batch import apply_mm_ops as _apply
         return _apply(self, ops, engine=engine, concurrency=concurrency,
-                      contention=contention)
+                      contention=contention, settle=settle)
 
     def mmap_batch(self, tid: int, sizes, *, perms: int = PERM_RW,
                    engine: str = "batch"):
@@ -559,8 +577,7 @@ class NumaSim:
             # and responders settle two-sided (handler occupancy from the
             # model + per-CPU stretch: queue delay and mid-shootdown
             # ack-horizon extensions; coalesced IPIs skip the handler).
-            s = self.contention.settle(me.time_ns, me.cpu, targets,
-                                       self.topo.node_of_cpu, c)
+            s = self._settle_contended(me, targets, c)
             ctr.ipi_queue_delay_ns += s.queued_ns
             ctr.overlapping_rounds += s.contended
             ctr.ipis_coalesced += len(s.coalesced_cpus)
@@ -584,6 +601,23 @@ class NumaSim:
             for t in self._cpu_threads.get(cpu, ()):
                 t.time_ns += IPI_RECEIVE_NS
                 t.ipis_received += 1
+
+    def _settle_contended(self, me: Thread, targets, c):
+        """Settle one contended round through the configured engine: the
+        vectorized array math (bit-identical; repro.core.shootdown_batch)
+        for the stock models, or the model's own scalar loop."""
+        model = self.contention
+        if self.settle_engine != "sequential":
+            if supports_vector(model):
+                return settle_round(model, me.time_ns, me.cpu, targets,
+                                    self.topo.node_of_cpu, c,
+                                    hw_per_node=self.topo.hw_threads_per_node)
+            if self.settle_engine == "vector":
+                raise ValueError("settle_engine='vector' requires a stock "
+                                 "QueueContention/CoalescingContention "
+                                 f"model, got {type(model).__name__}")
+        return model.settle(me.time_ns, me.cpu, targets,
+                            self.topo.node_of_cpu, c)
 
     # ------------------------------------------------------------ migration
     def migrate_thread(self, tid: int, new_cpu: int) -> None:

@@ -209,15 +209,17 @@ def test_mm_bench_json_artifacts(tmp_path):
                 pol["numapte"]["ipi_queue_delay_us"], f"storm at {w} threads"
         assert pol["linux"]["ns_per_op"] >= pol["numapte"]["ns_per_op"]
 
-    # spinner-ramp: the Fig 1 calibration rows (always overlap-settled);
-    # the hard >= 10x / < 2x gate lives in test_paper_claims — here the
-    # reduced quick ramp must still show the ordering and the two-sided
-    # story (Linux responders stretched, numaPTE responders never)
+    # spinner-ramp: the relative Fig 1 calibration rows (always
+    # overlap-settled, explicit queue model); the hard >= 10x / < 2x gate
+    # lives in test_paper_claims — here the reduced quick ramp must still
+    # show the ordering and the two-sided story (Linux responders
+    # stretched, numaPTE responders never)
     ramp = {}
     for r in rows:
         if r["scenario"] == "spinner-ramp":
             assert r["concurrency"] == "overlap"
             assert r["spinners"] == RAMP_SPINNERS_DEFAULT
+            assert r["model"] == "queue"
             ramp.setdefault(r["n_threads"], {})[r["policy"]] = r
     assert ramp, "spinner-ramp rows missing"
     top = max(ramp)
@@ -229,18 +231,103 @@ def test_mm_bench_json_artifacts(tmp_path):
         assert pol["numapte"]["responder_delay_us"] == 0.0
         assert pol["linux"]["ns_per_op"] >= pol["numapte"]["ns_per_op"]
 
+    # fig1-absolute: the schema-v4 spinner-swept rows — the quick sweep
+    # must reach the paper's full 280-spinner regime under the default
+    # (coalescing) model, with every overlap row recording which
+    # settlement engine produced it (satellite: no silent engine mixing)
+    from benchmarks.mm_concurrent import ABS_WORKERS
+    absrows = [r for r in rows if r["scenario"] == "fig1-absolute"]
+    assert absrows, "fig1-absolute rows missing"
+    seen_engines = set()
+    byabs = {}
+    for r in absrows:
+        assert r["concurrency"] == "overlap"
+        assert r["model"] == "coalescing"          # the default model
+        assert r["total_spinners"] == \
+            r["spinners"] * 8                      # 8-socket testbed
+        assert r["settle_engine"] in ("vector", "sequential", "mixed")
+        seen_engines.add(r["settle_engine"])
+        byabs[(r["policy"], r["spinners"], r["n_threads"])] = r
+    assert seen_engines == {"vector"}, seen_engines
+    loads = sorted({r["spinners"] for r in absrows})
+    assert loads[0] == 0 and loads[-1] == 35, loads   # quiet -> 280
+    top_l = byabs[("linux", 35, ABS_WORKERS)]
+    top_n = byabs[("numapte", 35, ABS_WORKERS)]
+    # the absolute cliff ordering at the 280-spinner top (the calibrated
+    # >= 30x / < 2x gate lives in test_paper_claims)
+    assert top_l["vs_quiet"] > 10 * top_n["vs_quiet"]
+    assert top_l["ipis_coalesced"] > 0
+    for r in absrows:
+        if r["policy"] == "numapte":
+            assert r["responder_delay_us"] == 0.0
+            assert r["vs_single_initiator"] < 2.0
+
+    # the settlement engine_walltime row: the vectorized settlement vs
+    # the scalar model loops at the top of the 280-spinner regime
+    wt = [r for r in rows if r.get("row_type") == "engine_walltime"]
+    assert wt and all(r["scenario"] == "settlement" for r in wt)
+    for r in wt:
+        assert r["spin_per_socket"] == 35 and r["n_threads"] == ABS_WORKERS
+        assert r["wall_vector_s"] > 0 and r["wall_sequential_s"] > 0
+        assert r["vector_speedup"] > 0
+    assert "engine_walltime" in d["row_types"]
+
 
 def test_mm_concurrent_rows_deterministic(tmp_path):
     """The overlap engine is a deterministic discrete-event settlement:
-    two runs must produce identical rows (host wall-clock fields aside)."""
+    two runs must produce identical rows (host wall-clock fields aside) —
+    and the ``settle_engine`` provenance field is part of the comparison,
+    so a run whose vectorized settlement fell back mid-ramp can never be
+    silently compared against a pure-vector run: the field itself would
+    diverge loudly before any subtle number drift could."""
     rows = []
     for sub in ("a", "b"):
         written = run_benchmarks(["mm_concurrent"], quick=True,
                                  outdir=str(tmp_path / sub), strict=True)
         r = _load(written["mm_concurrent"])["rows"]
-        rows.append([{k: v for k, v in row.items() if k != "wall_s"}
-                     for row in r])
+        # every overlap-settled modeled row must state its engine, and a
+        # single artifact must not mix engines across its settled rows
+        engines = {row["settle_engine"] for row in r
+                   if row.get("row_type", "data") == "data"
+                   and row.get("concurrency") == "overlap"
+                   and "settle_engine" in row}
+        assert engines == {"vector"}, engines
+        # engine_walltime rows are host measurements by definition —
+        # validated in test_mm_bench_json_artifacts, excluded here like
+        # every other wall field
+        rows.append([{k: v for k, v in row.items()
+                      if not k.startswith("wall")} for row in r
+                     if row.get("row_type", "data") != "engine_walltime"])
     assert rows[0] == rows[1]
+
+
+def test_emit_root_refresh_byte_stable_across_runs(tmp_path, monkeypatch):
+    """Two consecutive --emit-root quick refreshes of mm_concurrent must
+    produce byte-identical committed artifacts: the root projection
+    strips every host-walltime field (including the new settlement
+    ``engine_walltime`` rows), so only modeled — deterministic — data is
+    committed."""
+    import benchmarks.run as run_mod
+
+    root = tmp_path / "root"
+    root.mkdir()
+    monkeypatch.setattr(run_mod, "_REPO_ROOT", str(root))
+    blobs = []
+    for sub in ("a", "b"):
+        run_benchmarks(["mm_concurrent"], quick=True,
+                       outdir=str(tmp_path / sub), strict=True,
+                       emit_root=True)
+        blobs.append((root / "BENCH_mm_concurrent.json").read_bytes())
+    assert blobs[0] == blobs[1]
+    d = json.loads(blobs[0])
+    assert d["schema_version"] == SCHEMA_VERSION
+    # walltime noise stripped; the modeled fig1-absolute sweep retained
+    assert d["elapsed_s"] == 0.0
+    assert d["row_types"] == ["data"]
+    assert not any("wall_s" in r or r.get("row_type") == "engine_walltime"
+                   for r in d["rows"])
+    assert any(r["scenario"] == "fig1-absolute" and r["spinners"] == 35
+               for r in d["rows"])
 
 
 def test_fig6_prefetch_rows_consistent(tmp_path):

@@ -183,14 +183,18 @@ def test_fig10_contention_linux_superlinear_numapte_flat():
     *superlinearly* with the concurrent-initiator count — every round
     targets every CPU, so the receive queues compound and the marginal
     cost of each doubling rises — while numaPTE's sharer-filtered rounds
-    stay near-flat (filtered CPUs never enter anyone's queue)."""
+    stay near-flat (filtered CPUs never enter anyone's queue).  The
+    superlinearity is a no-coalescing queueing phenomenon, so this gate
+    runs under the explicit ``queue`` model (the repo's default overlap
+    model is ``coalescing`` since the absolute Fig 1 calibration — its
+    gate is test_fig1_absolute_280_spinner_cliff)."""
     from benchmarks.mm_concurrent import run_storm
 
     lat, qd = {}, {}
     for name, policy, filt in (("linux", Policy.LINUX, False),
                                ("numapte", Policy.NUMAPTE, True)):
         for w in (1, 2, 4, 8):
-            r = run_storm(policy, filt, w)
+            r = run_storm(policy, filt, w, contention="queue")
             lat[name, w] = r["ns_per_op"]
             qd[name, w] = r["ipi_queue_delay_us"]
     # Linux: convex (superlinear) growth, and a real cliff by 8 threads
@@ -237,6 +241,53 @@ def test_fig1_spinner_ramp_linux_cliff_numapte_flat():
     assert by["linux", top]["responder_delay_us"] > 0
     for w in RAMP_WORKERS:
         assert by["numapte", w]["responder_delay_us"] == 0.0
+
+
+def test_fig1_absolute_280_spinner_cliff():
+    """PR-5 acceptance gate — the absolute Fig 1 cliff at the paper's
+    280-spinner / 8-socket regime, under ``CoalescingContention`` as the
+    **default** overlap model (Linux's real flush batching; the rows must
+    confirm no model was passed explicitly):
+
+      * Linux's per-op munmap at the top of the ramp (280 resident
+        spinners, 8 concurrent initiators — the full 288-hw-thread
+        testbed) is >= 30x its single-initiator quiet-machine value
+        (paper: "up to 40x"; measured ~41x, upper tolerance 55x), and
+        the cliff is monotone in the spinner load — it is dominated by
+        the process-wide round's full fan-out dispatch + ack, which is
+        why it survives flush coalescing;
+      * numaPTE stays < 2x its single-initiator value at every load
+        (exactly 1.0x here: its sharer-filtered rounds never cross
+        sockets, so concurrent initiators never contend) with **zero**
+        responder stretch anywhere — the filter keeps every other
+        socket's CPUs out of the receive queues on both sides — and its
+        absolute degradation stays <= 3x quiet (paper Fig 10: ~2.6x for
+        munmap at max spinners; measured ~2.3x).
+    """
+    from benchmarks.mm_concurrent import ABS_WORKERS, run_absolute_ramp
+
+    rows = run_absolute_ramp(spinner_loads=(0, 4, 12, 35), iters=40)
+    by = {(r["policy"], r["spinners"], r["n_threads"]): r for r in rows}
+    top = by["linux", 35, ABS_WORKERS]
+    assert top["total_spinners"] == 280
+    assert 30.0 <= top["vs_quiet"] <= 55.0, top["vs_quiet"]
+    # monotone in the spinner load, at full concurrency and single-init
+    for w in (1, ABS_WORKERS):
+        cliff = [by["linux", s, w]["vs_quiet"] for s in (0, 4, 12, 35)]
+        assert cliff == sorted(cliff) and cliff[-1] > cliff[0], cliff
+    # the top of the ramp is genuinely contended and coalescing is live
+    assert top["overlapping_rounds"] > 0 and top["ipis_coalesced"] > 0
+    assert top["responder_delay_us"] > 0    # mid-shootdown ack extensions
+    for s in (0, 4, 12, 35):
+        for w in (1, ABS_WORKERS):
+            r = by["numapte", s, w]
+            assert r["vs_single_initiator"] < 2.0, (s, w)
+            assert r["responder_delay_us"] == 0.0, (s, w)
+            assert r["vs_quiet"] <= 3.0, (s, w)
+            # the default really is the coalescing model, vector-settled
+            assert r["model"] == "coalescing"
+            assert by["linux", s, w]["model"] == "coalescing"
+            assert r["settle_engine"] == "vector"
 
 
 def test_fig8_execution_parity_with_mitosis():

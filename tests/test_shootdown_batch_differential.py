@@ -1,0 +1,401 @@
+"""Differential tests: vectorized contention settlement vs scalar loops.
+
+The vectorized settlement engine (``repro.core.shootdown_batch``) must be
+**bit-for-bit identical** to the scalar model loops it replaces — every
+``Counters`` field (including ``ipi_queue_delay_ns`` /
+``responder_delay_ns`` / ``ipis_coalesced``), float-exact thread times
+and ``ipis_received``, TLB content and insertion order, page-table
+replicas and sharer masks, the oracle, the VMA layout, *and* the
+contention model's own discrete-event state (``busy_until`` /
+``initiator_until`` dicts and the monotone clock) at every sync point —
+across seeded random interleavings for all three models:
+
+  * ``QueueContention`` / ``CoalescingContention`` — the vector-eligible
+    models: ``settle="vector"`` (array math) vs ``settle="sequential"``
+    (the model's own loop), on the batched engine, the scalar engine
+    (``NumaSim._shootdown``), and across the two;
+  * ``NullContention`` — not vector-eligible (a zero-state model has
+    nothing to vectorize): ``settle="auto"`` must *report* the
+    sequential engine and stay byte-identical to the forced-sequential
+    run, preserving the overlap==sequential anchor.
+
+The slow split (100+ seeded interleavings, plus the hypothesis sweep
+when the extra is installed) runs in CI's ``mm-differential`` job; a
+fast slice is always on.  The mid-batch fallback hazard is pinned too:
+an abandoning vectorized engine must flush its state exactly (still
+byte-identical) and report ``settle_engine="mixed"`` so benchmark rows
+can never silently mix engines.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (CoalescingContention, NullContention, NumaSim,
+                        PAPER_8SOCKET, Policy, QueueContention,
+                        supports_vector)
+
+from test_mm_batch_differential import (POLICIES, _build, _random_choices,
+                                        assert_identical, materialize)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+MODELS = [NullContention, QueueContention, CoalescingContention]
+
+
+def assert_model_state_identical(ma, mb, tag=""):
+    """The discrete-event state must match bit-for-bit (dict equality is
+    order-insensitive on purpose: the vector engine flushes in cpu order,
+    the scalar loop inserts in visit order — same keys, same floats)."""
+    if isinstance(ma, QueueContention):
+        assert ma.busy_until == mb.busy_until, f"{tag}: busy horizons"
+        assert ma.initiator_until == mb.initiator_until, \
+            f"{tag}: inflight ack windows"
+        assert ma.clock == mb.clock, f"{tag}: event clock"
+
+
+def run_settle_differential(policy, choices, *, model_cls,
+                            engines=("batch", "batch"), tlb_filter=True,
+                            chunk=7, tag=""):
+    """Replay one interleaving on two sims in lockstep chunks: side A
+    settles through the vectorized engine (``auto`` resolves to it for
+    the stock models), side B through the forced-sequential model loops.
+    States — sim and model — must stay byte-identical at every sync."""
+    sa, _ = _build(policy, tlb_filter=tlb_filter)
+    sb, _ = _build(policy, tlb_filter=tlb_filter)
+    ma, mb = model_cls(), model_cls()
+    vector_ok = supports_vector(ma)
+    ops = materialize(choices, sa._next_vpn)
+    for i in range(0, len(ops), chunk):
+        part = ops[i:i + chunk]
+        sa.apply_mm_ops(part, engine=engines[0], concurrency="overlap",
+                        contention=ma,
+                        settle="vector" if vector_ok else "auto")
+        assert sa.last_settle_engine == \
+            ("vector" if vector_ok else "sequential")
+        sb.apply_mm_ops(part, engine=engines[1], concurrency="overlap",
+                        contention=mb, settle="sequential")
+        assert sb.last_settle_engine == "sequential"
+        assert_identical(sa, sb, f"{tag}/chunk{i}")
+        assert_model_state_identical(ma, mb, f"{tag}/chunk{i}")
+    sa.check_invariants()
+    sb.check_invariants()
+    return sa, sb
+
+
+# --------------------------------------------------------------------------
+# seeded suites (slow split: 150 interleavings; fast slice always on)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_vector_settlement_byte_identical(policy, model_cls):
+    """Seeded interleavings per (policy, model): vectorized settlement ==
+    scalar model loops on the batched engine — 20 seeds for the vector
+    models, 10 for the NullContention fallback-identity (3 policies x
+    (20+20+10) = 150 interleavings)."""
+    seeds = 20 if model_cls is not NullContention else 10
+    for seed in range(seeds):
+        rng = np.random.default_rng(300_000 + seed)
+        choices = _random_choices(rng, int(rng.integers(6, 36)))
+        run_settle_differential(
+            policy, choices, model_cls=model_cls,
+            tlb_filter=(seed % 2 == 0),
+            chunk=int(rng.integers(1, 12)),
+            tag=f"{policy.value}/{model_cls.__name__}/seed{seed}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("model_cls", [QueueContention,
+                                       CoalescingContention])
+def test_vector_settlement_scalar_engine_byte_identical(policy, model_cls):
+    """The scalar mm engine (``NumaSim._shootdown`` driving per-op
+    syscalls) must also settle identically through the vectorized path:
+    10 seeds per (policy, model), vector-scalar-engine vs
+    sequential-scalar-engine plus a cross-engine check against the
+    vector-batched run."""
+    for seed in range(10):
+        rng = np.random.default_rng(400_000 + seed)
+        choices = _random_choices(rng, int(rng.integers(6, 24)))
+        run_settle_differential(
+            policy, choices, model_cls=model_cls,
+            engines=("scalar", "scalar"), chunk=int(rng.integers(1, 12)),
+            tag=f"{policy.value}/{model_cls.__name__}/scalar/seed{seed}")
+        run_settle_differential(
+            policy, choices, model_cls=model_cls,
+            engines=("batch", "scalar"), chunk=5,
+            tag=f"{policy.value}/{model_cls.__name__}/cross/seed{seed}")
+
+
+@pytest.mark.parametrize("policy", [Policy.LINUX, Policy.NUMAPTE])
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_vector_settlement_byte_identical_fast(policy, model_cls):
+    """Always-on slice of the vector==sequential differential."""
+    for seed in range(2):
+        rng = np.random.default_rng(500_000 + seed)
+        choices = _random_choices(rng, 16)
+        run_settle_differential(
+            policy, choices, model_cls=model_cls, chunk=5,
+            tag=f"{policy.value}/{model_cls.__name__}/fast{seed}")
+
+
+def test_vector_settlement_custom_handler_ns():
+    """A custom ``handler_ns`` must flow through the vectorized charges
+    exactly as through the scalar loops (the PR-4 regression, now on the
+    settlement-engine axis)."""
+    for model_cls in (QueueContention, CoalescingContention):
+        for seed in range(2):
+            rng = np.random.default_rng(600_000 + seed)
+            choices = _random_choices(rng, 14)
+            sa, _ = _build(Policy.LINUX)
+            sb, _ = _build(Policy.LINUX)
+            ma = model_cls(handler_ns=123.0)
+            mb = model_cls(handler_ns=123.0)
+            ops = materialize(choices, sa._next_vpn)
+            sa.apply_mm_ops(ops, concurrency="overlap", contention=ma,
+                            settle="vector")
+            sb.apply_mm_ops(ops, concurrency="overlap", contention=mb,
+                            settle="sequential")
+            assert_identical(sa, sb, f"{model_cls.__name__}/handler123")
+            assert_model_state_identical(ma, mb)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=60, deadline=None)
+    @given(
+        choices=st.lists(
+            st.tuples(*(st.integers(0, (1 << 30) - 1) for _ in range(5))),
+            min_size=1, max_size=30),
+        policy_i=st.integers(0, len(POLICIES) - 1),
+        model_i=st.integers(0, len(MODELS) - 1),
+        tlb_filter=st.booleans(),
+        chunk=st.integers(1, 12),
+        scalar_side=st.booleans())
+    def test_hypothesis_vector_settlement(choices, policy_i, model_i,
+                                          tlb_filter, chunk, scalar_side):
+        """Property form over the same materializer: vector vs sequential
+        settlement, optionally with the scalar engine as the sequential
+        side."""
+        run_settle_differential(
+            POLICIES[policy_i], choices, model_cls=MODELS[model_i],
+            engines=("batch", "scalar" if scalar_side else "batch"),
+            tlb_filter=tlb_filter, chunk=chunk, tag="hypothesis-settle")
+
+
+# --------------------------------------------------------------------------
+# paper-scale spot checks (the regime the engine exists for)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("model_name", ["queue", "coalescing"])
+def test_storm_280_spinner_rows_engine_invariant(model_name):
+    """At the paper's 280-spinner / 8-socket regime the storm's modeled
+    rows must be identical under either settlement engine — only the
+    ``settle_engine`` provenance and host wall time may differ."""
+    from benchmarks.mm_concurrent import run_storm
+
+    rows = {}
+    for settle in ("vector", "sequential"):
+        r = run_storm(Policy.LINUX, False, 8, iters=8, spin=35,
+                      contention=model_name, settle=settle)
+        assert r["settle_engine"] == settle
+        rows[settle] = {k: v for k, v in r.items()
+                        if k not in ("settle_engine", "wall_s")}
+    assert rows["vector"] == rows["sequential"]
+
+
+def test_numasim_settle_engine_param():
+    """The sim-level knob: direct scalar syscalls settle through the
+    selected engine, bit-identically; "vector" demands a stock model."""
+    with pytest.raises(ValueError):
+        NumaSim(PAPER_8SOCKET, Policy.LINUX, settle_engine="warp")
+
+    def run(engine, model):
+        sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, contention=model,
+                      settle_engine=engine)
+        ts = []
+        for n in range(4):
+            t = sim.spawn_thread(n * sim.topo.hw_threads_per_node)
+            v = sim.mmap(t, 4)
+            for vpn in range(v.start_vpn, v.end_vpn):
+                sim.touch(t, vpn, write=True)
+            ts.append((t, v))
+        for i in range(4):
+            for t, v in ts:
+                sim.munmap(t, v.start_vpn + i, 1)
+        sim.check_invariants()
+        return sim
+
+    ma, mb = CoalescingContention(), CoalescingContention()
+    sa = run("vector", ma)
+    sb = run("sequential", mb)
+    assert_identical(sa, sb, "sim-level vector vs sequential")
+    assert_model_state_identical(ma, mb)
+    assert sa.counters.ipis_coalesced > 0   # the storm really contends
+
+    class Custom(QueueContention):
+        pass
+
+    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, contention=Custom(),
+                  settle_engine="vector")
+    a = sim.spawn_thread(0)
+    b = sim.spawn_thread(sim.topo.hw_threads_per_node)
+    for t in (a, b):
+        v = sim.mmap(t, 1)
+        sim.touch(t, v.start_vpn, write=True)
+    va = sim.mmap(a, 1)
+    sim.touch(a, va.start_vpn, write=True)
+    with pytest.raises(ValueError, match="vector"):
+        sim.munmap(a, va.start_vpn, 1)
+    # "auto" quietly falls back to the subclass's own loop instead
+    sim.settle_engine = "auto"
+    sim.munmap(a, va.start_vpn, 1)
+
+
+# --------------------------------------------------------------------------
+# knob validation + fallback hazard
+# --------------------------------------------------------------------------
+def test_settle_knob_validation():
+    sim, tids = _build(Policy.NUMAPTE)
+    with pytest.raises(ValueError):
+        sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="overlap",
+                         settle="warp")
+    # settle is an overlap-mode knob: passing it with sequential
+    # concurrency would be silently ignored — that's an error
+    with pytest.raises(ValueError, match="overlap"):
+        sim.apply_mm_ops([("mmap", tids[0], 1)], settle="vector")
+    # forcing the vectorized engine under a non-vectorizable model fails
+    with pytest.raises(ValueError, match="vector"):
+        sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="overlap",
+                         contention=NullContention(), settle="vector")
+    # auto reports what actually ran
+    sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="overlap",
+                     contention=NullContention())
+    assert sim.last_settle_engine == "sequential"
+    sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="overlap")
+    assert sim.last_settle_engine == "vector"    # default: coalescing
+    sim.apply_mm_ops([("mmap", tids[0], 1)])
+    assert sim.last_settle_engine is None        # sequential semantics
+
+
+def test_mid_batch_abandon_flushes_exactly_and_reports_mixed(monkeypatch):
+    """The fallback-path hazard: when the vectorized engine abandons
+    mid-batch, the array state must flush exactly (the run stays
+    byte-identical to the sequential reference, model dicts included)
+    and the batch must report ``settle_engine="mixed"`` so downstream
+    rows can't masquerade as single-engine artifacts."""
+    from repro.core.shootdown_batch import BatchSettlement
+
+    orig = BatchSettlement.settle_and_charge
+    for policy in (Policy.LINUX, Policy.NUMAPTE):
+        for fail_at in (1, 4):
+            calls = {"n": 0}
+
+            def flaky(self, *a, _fail_at=fail_at, _calls=calls, **k):
+                _calls["n"] += 1
+                if _calls["n"] == _fail_at:
+                    return None
+                return orig(self, *a, **k)
+
+            monkeypatch.setattr(BatchSettlement, "settle_and_charge",
+                                flaky)
+            rng = np.random.default_rng(700_000 + fail_at)
+            choices = _random_choices(rng, 20)
+            sa, _ = _build(policy)
+            sb, _ = _build(policy)
+            ma, mb = QueueContention(), QueueContention()
+            ops = materialize(choices, sa._next_vpn)
+            sa.apply_mm_ops(ops, concurrency="overlap", contention=ma,
+                            settle="vector")
+            engine_a = sa.last_settle_engine
+            monkeypatch.setattr(BatchSettlement, "settle_and_charge", orig)
+            sb.apply_mm_ops(ops, concurrency="overlap", contention=mb,
+                            settle="sequential")
+            assert_identical(sa, sb, f"abandon@{fail_at}")
+            assert_model_state_identical(ma, mb, f"abandon@{fail_at}")
+            if calls["n"] >= fail_at:   # a contended round actually hit it
+                assert engine_a == "mixed"
+
+
+def test_nonfinite_round_start_triggers_abandon():
+    """The genuine in-tree abandon trigger: a non-finite round start
+    (possible only under a pathological cost model) refuses to settle."""
+    from repro.core.shootdown_batch import BatchSettlement
+
+    sim, tids = _build(Policy.LINUX)
+    vec = BatchSettlement(sim, QueueContention())
+    tarr = np.asarray([4, 5], dtype=np.int64)
+    larr = np.asarray([True, True])
+    assert vec.settle_and_charge(float("nan"), 0, tarr, larr, 2, 0,
+                                 sim.cost) is None
+    assert vec.settle_and_charge(float("inf"), 0, tarr, larr, 2, 0,
+                                 sim.cost) is None
+    assert vec.settle_and_charge(0.0, 0, tarr, larr, 2, 0,
+                                 sim.cost) is not None
+
+
+def test_ordered_sum_matches_sequential_adds():
+    """The integer-exactness guard: integral addends sum exactly in any
+    order; non-integral addends replay the sorted sequential adds."""
+    from repro.core.shootdown_batch import _ordered_sum
+
+    assert _ordered_sum(np.asarray([], dtype=float)) == 0.0
+    ints = np.asarray([700.0, 1400.0, 2100.0] * 50)
+    assert _ordered_sum(ints) == float(ints.sum())
+    fracs = np.asarray([0.1, 0.2, 0.3, 1e16, 0.1] * 7)
+    expect = 0.0
+    for v in fracs.tolist():
+        expect += v
+    assert _ordered_sum(fracs) == expect
+    # and a sum past 2^52 of integral addends also replays sequentially
+    big = np.asarray([float(1 << 51), float(1 << 51), 3.0, 5.0])
+    expect = 0.0
+    for v in big.tolist():
+        expect += v
+    assert _ordered_sum(big) == expect
+
+
+def test_fractional_costs_stay_identical_under_vector_settlement():
+    """Non-integral cost constants (the interference multiplier makes
+    thread times fractional) force the ordered-sum fallback inside the
+    vector engine — still bit-identical to the scalar loops."""
+    import dataclasses
+
+    from repro.core import CostModel
+
+    # a fractional handler occupancy makes the queue delays themselves
+    # non-integral (free - arrival inherits the handler's fraction), so
+    # the vector engine's sum reductions must take the ordered fallback
+    cost = dataclasses.replace(CostModel.paper_default(),
+                               local_mem_ns=90.3, fault_fixed_ns=550.25,
+                               ipi_dispatch_remote_ns=95.125)
+    handler = 700.25
+    sims = {}
+    models = {}
+    for settle in ("vector", "sequential"):
+        sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, cost=cost)
+        tids = []
+        for n in range(4):
+            t = sim.spawn_thread(n * sim.topo.hw_threads_per_node)
+            v = sim.mmap(t, 6)
+            sim.touch_batch(t, np.arange(v.start_vpn, v.end_vpn), True)
+            tids.append((t, v))
+        model = QueueContention(handler_ns=handler)
+        sim.apply_mm_ops([("munmap", t, v.start_vpn + i, 1)
+                          for i in range(6) for t, v in tids],
+                         concurrency="overlap", contention=model,
+                         settle=settle)
+        assert sim.last_settle_engine == settle
+        sims[settle] = sim
+        models[settle] = model
+    assert_identical(sims["vector"], sims["sequential"], "fractional")
+    assert_model_state_identical(models["vector"], models["sequential"])
+    qd = sims["vector"].counters.ipi_queue_delay_ns
+    assert qd > 0
+    # the fractional dispatch really forced non-integral addends (the
+    # ordered-sum fallback path), and the sums still matched exactly
+    assert not float(qd).is_integer()

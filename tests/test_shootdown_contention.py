@@ -218,17 +218,59 @@ if HAVE_HYPOTHESIS:
 # --------------------------------------------------------------------------
 # metamorphic / property layer
 # --------------------------------------------------------------------------
-def test_queue_delay_monotone_in_initiator_count():
+@pytest.mark.parametrize("model_name", ["queue", "coalescing"])
+def test_queue_delay_monotone_in_initiator_count(model_name):
     """More concurrent initiators can only lengthen the receive queues:
     total queue delay of the munmap storm is monotone in the worker count,
-    and strictly positive once the handlers saturate."""
+    and strictly positive once the handlers saturate — under the explicit
+    queue model (the preserved PR-3 gate) *and* under coalescing (the
+    default since PR 5: merging removes handler occupancy, but arrivals
+    behind a pending handler still wait it out, so the delay still
+    accumulates monotonically)."""
     from benchmarks.mm_concurrent import run_storm
 
-    delays = [run_storm(Policy.LINUX, False, w)["ipi_queue_delay_us"]
+    delays = [run_storm(Policy.LINUX, False, w,
+                        contention=model_name)["ipi_queue_delay_us"]
               for w in (1, 2, 4, 8)]
     assert delays == sorted(delays), delays
     assert delays[0] == 0.0            # a lone initiator never queues
     assert delays[-1] > delays[1] > 0  # and the queues really build
+
+
+def test_default_overlap_model_is_coalescing():
+    """The PR-5 default flip: ``concurrency="overlap"`` with no model runs
+    under ``CoalescingContention`` (Linux's real flush-batching behavior)
+    — byte-identical to passing one explicitly, actually coalescing on a
+    contended storm (distinct from an explicit ``QueueContention`` run),
+    with ``QueueContention`` still selectable; and the ``NullContention``
+    overlap==sequential anchor is unaffected by the default (it only
+    applies when no model is given)."""
+    from repro.core import DEFAULT_OVERLAP_MODEL
+    from repro.core.mm_batch import apply_mm_ops as apply_fn  # noqa: F401
+
+    assert DEFAULT_OVERLAP_MODEL == "coalescing"
+
+    def storm(contention):
+        sim, tids = _build(Policy.LINUX, tlb_filter=False)
+        vmas = sim.apply_mm_ops([("mmap", t, 4) for t in tids for _ in
+                                 range(6)])
+        sim.apply_mm_ops([("touch", tids[i % len(tids)],
+                           list(range(v.start_vpn, v.end_vpn)), True)
+                          for i, v in enumerate(vmas)])
+        sim.apply_mm_ops([("munmap", tids[i % len(tids)], v.start_vpn, 4)
+                          for i, v in enumerate(vmas)],
+                         concurrency="overlap", contention=contention)
+        return sim
+
+    default = storm(None)
+    explicit = storm(CoalescingContention())
+    assert_identical(default, explicit, "default-vs-explicit-coalescing")
+    assert default.counters.ipis_coalesced > 0      # merging really ran
+    queue = storm(QueueContention())
+    assert queue.counters.ipis_coalesced == 0
+    # the flip is observable: coalescing responders end up cheaper
+    assert (sum(t.time_ns for t in default.threads.values())
+            < sum(t.time_ns for t in queue.threads.values()))
 
 
 def test_numapte_never_queues_at_filter_excluded_cpu():
