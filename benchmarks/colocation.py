@@ -1,0 +1,142 @@
+"""Multi-tenant colocation: one tenant's munmap storm vs its neighbors.
+
+The Process/ASID model's headline scenario.  N memcached-style tenants
+are pinned one per socket; a storm tenant keeps its working set on
+socket 0 but leaves co-resident (idle) threads on the victims' CPUs —
+exactly the oversubscribed placement a container host produces.  When
+the storm tenant runs a fig10-style munmap storm:
+
+  * Linux targets the storm's whole ``mm_cpumask``, so the IPIs land on
+    the shared CPUs and interrupt whichever tenant is resident there —
+    every victim pays receive-handler time (plus queue/responder delay
+    under the overlap contention model) for an address space it never
+    touched;
+  * numaPTE's sharer filter contains the storm to the sockets whose
+    page-table nodes actually cached its tables (socket 0 here), so the
+    victims' modeled clocks don't move at all.
+
+Each run is performed twice — quiet (no storm) and storming — on
+byte-identical layouts, so ``victim_interrupt_ns`` (the storm-minus-
+quiet victim time) is exactly the cross-tenant leak, and
+``victim_slowdown`` is the per-op degradation the victim tenant's
+clients would observe.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim
+from repro.core.pagetable import Policy
+
+from .common import csv, policies
+
+
+def run_one(policy: Policy, filt: bool, tenants: int, iters: int,
+            pages: int, rounds: int, storm: bool) -> dict:
+    """One colocated run; ``storm=False`` is the quiet reference (same
+    layout and setup, only the measured munmap storm is skipped)."""
+    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
+                                            concurrency="overlap"))
+    step = sim.topo.hw_threads_per_node
+    if not 1 <= tenants <= sim.topo.n_nodes - 1:
+        raise ValueError(f"tenants must be in 1..{sim.topo.n_nodes - 1}")
+
+    storm_proc = sim.spawn_process("storm")
+    # two initiators on socket 0: their interleaved munmaps overlap, so
+    # the receive queues build and the responder-side delay is nonzero —
+    # and lands on whoever the fan-out targets
+    initiators = [sim.spawn_thread(cpu, process=storm_proc)
+                  for cpu in (0, 3)]
+    # local peers: node-0 threads of the storm process, so numaPTE still
+    # has (local-socket) IPIs to send after the sharer filter
+    for cpu in (1, 2):
+        sim.spawn_thread(cpu, process=storm_proc)
+    # co-resident storm threads parked on the victims' CPUs: they never
+    # touch the stormed memory, but they drag those CPUs into the
+    # storm's mm_cpumask — the Linux fan-out the victims pay for
+    for v in range(tenants):
+        sim.spawn_thread((v + 1) * step, process=storm_proc)
+
+    victims = []
+    for v in range(tenants):
+        proc = sim.spawn_process(f"tenant{v}")
+        victims.append(sim.spawn_thread((v + 1) * step, process=proc))
+
+    # setup: the storm's socket-0 working sets (table sharers = node 0
+    # only) and each victim's own heap, first-touched in its own space
+    storm_starts = {}
+    for tid in initiators:
+        svmas = sim.mmap_batch(tid, [1] * iters)
+        starts = np.asarray([v.start_vpn for v in svmas], dtype=np.int64)
+        sim.touch_batch(tid, starts, True)
+        storm_starts[tid] = starts
+    heaps = {}
+    for tid in victims:
+        vma = sim.mmap(tid, pages)
+        sim.touch_batch(tid, np.arange(vma.start_vpn, vma.end_vpn), True)
+        heaps[tid] = vma
+
+    t0 = {tid: sim.thread_time_ns(tid) for tid in victims}
+    ipi0 = {tid: sim.threads[tid].ipis_received for tid in victims}
+    storm_ns = 0.0
+    if storm:
+        ti = sum(sim.thread_time_ns(t) for t in initiators)
+        sim.apply_mm_ops([("munmap", tid, int(storm_starts[tid][i]), 1)
+                          for i in range(iters) for tid in initiators])
+        storm_ns = (sum(sim.thread_time_ns(t) for t in initiators) - ti) \
+            / (len(initiators) * iters)
+    # the victims' serving loop: memcached-style GETs over their heaps
+    for _ in range(rounds):
+        for tid in victims:
+            vma = heaps[tid]
+            sim.touch_batch(tid, np.arange(vma.start_vpn, vma.end_vpn))
+    sim.check_invariants()
+
+    ops = rounds * pages
+    victim_ns = [sim.thread_time_ns(t) - t0[t] for t in victims]
+    c = sim.counters
+    return {
+        "victim_ns_per_op": sum(victim_ns) / (len(victims) * ops),
+        "victim_total_ns": sum(victim_ns),
+        "victim_ipis": sum(sim.threads[t].ipis_received - ipi0[t]
+                           for t in victims),
+        "storm_ns_per_op": round(storm_ns, 1),
+        "ipis_remote": c.ipis_remote,
+        "ipis_filtered": c.ipis_filtered,
+        "responder_delay_ns": round(c.responder_delay_ns, 1),
+        "ipis_coalesced": c.ipis_coalesced,
+    }
+
+
+def main(quick: bool = False, scale: int = 1, tenants: int = None) -> list:
+    """``tenants`` victim tenants (default 3 quick / 7 full — one per
+    non-storm socket); ``scale`` multiplies the storm's munmap count."""
+    if tenants is None:
+        tenants = 3 if quick else 7
+    iters = (150 if quick else 400) * scale
+    pages, rounds = (32, 2) if quick else (64, 4)
+    rows = []
+    for name, policy, filt in policies():
+        quiet = run_one(policy, filt, tenants, iters, pages, rounds,
+                        storm=False)
+        stormy = run_one(policy, filt, tenants, iters, pages, rounds,
+                        storm=True)
+        leak = stormy["victim_total_ns"] - quiet["victim_total_ns"]
+        rows.append({
+            "row_type": "colocation",
+            "policy": name, "tenants": tenants,
+            "victim_slowdown": round(stormy["victim_ns_per_op"]
+                                     / quiet["victim_ns_per_op"], 3),
+            "victim_interrupt_ns": round(leak, 1),
+            "victim_ipis": stormy["victim_ipis"],
+            "storm_ns_per_op": stormy["storm_ns_per_op"],
+            "ipis_remote": stormy["ipis_remote"],
+            "ipis_filtered": stormy["ipis_filtered"],
+            "responder_delay_ns": stormy["responder_delay_ns"],
+            "ipis_coalesced": stormy["ipis_coalesced"],
+        })
+    return csv("colocation", rows)
+
+
+if __name__ == "__main__":
+    main()

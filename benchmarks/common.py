@@ -33,21 +33,23 @@ def spinner_cpus(topo, per_socket: int, skip_cpu0: bool = True):
 
 
 def make_spinners(sim: NumaSim, per_socket: int, skip_cpu0: bool = True,
-                  engine: str = "batch"):
-    """Spinning threads on every socket (the Fig 1/10 workload)."""
-    tids = [sim.spawn_thread(cpu)
+                  process=None):
+    """Spinning threads on every socket (the Fig 1/10 workload); the mm-op
+    engine comes from ``sim.config.engine``.  ``process`` spawns them in
+    that address space (a tenant) instead of the default ASID-0 process."""
+    tids = [sim.spawn_thread(cpu, process=process)
             for cpu in spinner_cpus(sim.topo, per_socket, skip_cpu0)]
-    vmas = sim.apply_mm_ops([("mmap", t, 1) for t in tids], engine=engine)
+    vmas = sim.apply_mm_ops([("mmap", t, 1) for t in tids])
     sim.apply_mm_ops([("touch", t, [v.start_vpn], True)
-                      for t, v in zip(tids, vmas)], engine=engine)
+                      for t, v in zip(tids, vmas)])
     return tids
 
 
-def mprotect_loop(sim: NumaSim, tid: int, vpn: int, iters: int,
-                  engine: str = "batch") -> float:
-    """Fig 1's alternating-permission mprotect loop, on either engine."""
+def mprotect_loop(sim: NumaSim, tid: int, vpn: int, iters: int) -> float:
+    """Fig 1's alternating-permission mprotect loop, on the engine the
+    sim's ``SimConfig`` selects."""
     t0 = sim.thread_time_ns(tid)
-    if engine == "scalar":
+    if sim.config.engine == "scalar":
         for i in range(iters):
             sim.mprotect(tid, vpn, 1, PERM_R if i % 2 == 0 else PERM_RW)
     else:

@@ -11,7 +11,7 @@ so ``--scale`` can push the iteration count toward paper scale; pass
 """
 from __future__ import annotations
 
-from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim
 from repro.core.pagetable import Policy
 
 from .common import csv, make_spinners, mprotect_loop, policies
@@ -19,13 +19,14 @@ from .common import csv, make_spinners, mprotect_loop, policies
 
 def run_one(policy: Policy, tlb_filter: bool, spin: int,
             iters: int = 200, engine: str = "batch") -> dict:
-    sim = NumaSim(PAPER_8SOCKET, policy, prefetch_degree=0,
-                  tlb_filter=tlb_filter)
+    sim = make_sim(PAPER_8SOCKET,
+                   SimConfig(policy=policy, prefetch_degree=0,
+                             tlb_filter=tlb_filter, engine=engine))
     main = sim.spawn_thread(cpu=0)
-    make_spinners(sim, spin, engine=engine)
+    make_spinners(sim, spin)
     vma = sim.mmap(main, 1)
     sim.touch(main, vma.start_vpn, write=True)
-    ns = mprotect_loop(sim, main, vma.start_vpn, iters, engine=engine)
+    ns = mprotect_loop(sim, main, vma.start_vpn, iters)
     c = sim.counters
     sim.check_invariants()
     return {"ns_per_op": round(ns, 1), "ipis_local": c.ipis_local,

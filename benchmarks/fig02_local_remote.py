@@ -2,14 +2,14 @@
 spinners on REMOTE sockets only — remote IPIs dominate the cost."""
 from __future__ import annotations
 
-from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim
 from repro.core.pagetable import Policy
 
 from .common import csv, mprotect_loop
 
 
 def run_one(spin: int, where: str, iters: int = 200) -> float:
-    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX)
+    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=Policy.LINUX))
     main = sim.spawn_thread(cpu=0)
     nodes = [0] if where == "local" else list(range(1, sim.topo.n_nodes))
     for node in nodes:

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim
 from repro.core.pagetable import Policy
 
 from .common import csv
@@ -21,7 +21,8 @@ N_PAGES = 1 << 15        # 128MB scaled
 def run_config(pt_remote: bool, data_remote: bool, interfere: bool,
                accesses: int = 60_000, n_pages: int = N_PAGES) -> float:
     inter = (1,) if interfere else ()
-    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, interference_nodes=inter)
+    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=Policy.LINUX,
+                                            interference_nodes=inter))
     # loader thread on the node that should own PT+data initially
     setup_node = 1 if (pt_remote or data_remote) else 0
     loader = sim.spawn_thread(setup_node * sim.topo.hw_threads_per_node)

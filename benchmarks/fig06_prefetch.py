@@ -9,14 +9,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim
 from repro.core.pagetable import Policy
 
 from .common import csv
 
 
 def run_one(policy: Policy, degree: int, n_pages: int) -> float:
-    sim = NumaSim(PAPER_8SOCKET, policy, prefetch_degree=degree)
+    sim = make_sim(PAPER_8SOCKET,
+                   SimConfig(policy=policy, prefetch_degree=degree))
     t0 = sim.spawn_thread(0)
     t1 = sim.spawn_thread(sim.topo.hw_threads_per_node)
     vma = sim.mmap(t0, n_pages)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim
 from repro.core.pagetable import Policy
 
 from .common import csv
@@ -27,8 +27,9 @@ N_PAGES = 1 << 15
 
 def run_one(policy: Policy, degree: int, accesses: int,
             engine: str = "batch") -> float:
-    sim = NumaSim(PAPER_8SOCKET, policy, prefetch_degree=degree,
-                  interference_nodes=(0,))
+    sim = make_sim(PAPER_8SOCKET,
+                   SimConfig(policy=policy, prefetch_degree=degree,
+                             interference_nodes=(0,), engine=engine))
     w = sim.spawn_thread(0)
     vma = sim.mmap(w, N_PAGES)
     setup = np.arange(vma.start_vpn, vma.end_vpn, dtype=np.int64)

@@ -8,7 +8,7 @@ everything and converges to Mitosis).
 """
 from __future__ import annotations
 
-from repro.core import APPS, PAPER_8SOCKET, Policy, run_app
+from repro.core import APPS, PAPER_8SOCKET, Policy, SimConfig, run_app
 
 from .common import csv
 
@@ -27,7 +27,8 @@ def main(quick: bool = False, scale: int = 1, engine: str = "batch") -> list:
         base = None
         for pol in (Policy.LINUX, Policy.MITOSIS, Policy.NUMAPTE):
             r = run_app(pol, spec, PAPER_8SOCKET, accesses_per_thread=acc,
-                        pages_per_gb=ppg, touch_stride=1, engine=engine)
+                        pages_per_gb=ppg, touch_stride=1,
+                        config=SimConfig(prefetch_degree=9, engine=engine))
             if pol is Policy.LINUX:
                 base = r
             rows.append({

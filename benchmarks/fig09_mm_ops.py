@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim
 from repro.core.pagetable import PERM_R, PERM_RW, Policy
 
 from .common import csv, engine_walltime_rows, policies
@@ -22,7 +22,8 @@ from .common import csv, engine_walltime_rows, policies
 
 def run_one(policy: Policy, filt: bool, op: str, n_pages: int,
             iters: int = 50, engine: str = "batch") -> float:
-    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
+    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
+                                            engine=engine))
     main = sim.spawn_thread(0)
     if op == "mprotect":
         vma = sim.mmap(main, n_pages)

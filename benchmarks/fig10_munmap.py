@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import NumaSim, PAPER_8SOCKET
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim
 from repro.core.pagetable import Policy
 
 from .common import csv, engine_walltime_rows, make_spinners, policies
@@ -21,9 +21,10 @@ from .common import csv, engine_walltime_rows, make_spinners, policies
 
 def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150,
             engine: str = "batch") -> dict:
-    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
+    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
+                                            engine=engine))
     main = sim.spawn_thread(0)
-    make_spinners(sim, spin, engine=engine)
+    make_spinners(sim, spin)
     if engine == "scalar":
         vmas = [sim.mmap(main, 1) for _ in range(iters)]
         for v in vmas:

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import MallocModel, NumaSim, NumaTopology, Policy, \
-    gamma_sizes_pages
+from repro.core import MallocModel, NumaTopology, Policy, SimConfig, \
+    gamma_sizes_pages, make_sim
 
 from .common import csv, policies
 
@@ -19,12 +19,13 @@ def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
             stateful: bool, iters: int = 150,
             engine: str = "batch") -> float:
     topo = NumaTopology(n_nodes=max(2, n_sockets), cores_per_node=18)
-    sim = NumaSim(topo, policy, tlb_filter=filt)
+    sim = make_sim(topo, SimConfig(policy=policy, tlb_filter=filt,
+                                   engine=engine))
     rng = np.random.default_rng(7)
     workers = []
     for node in range(n_sockets):
         tid = sim.spawn_thread(node * topo.hw_threads_per_node)
-        workers.append((tid, MallocModel(sim, tid, flavor, engine=engine)))
+        workers.append((tid, MallocModel(sim, tid, flavor)))
     total = 0.0
     for tid, mall in workers:
         sizes = gamma_sizes_pages(rng, iters)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import NumaSim, PAPER_4SOCKET, Policy
+from repro.core import PAPER_4SOCKET, Policy, SimConfig, make_sim
 
 from .common import csv
 
@@ -22,7 +22,8 @@ STATIC_PAGES = 2048            # shared docroot cache
 def run_one(policy: Policy, filt: bool, n_threads: int,
             requests_per_thread: int = 120,
             static_pages: int = STATIC_PAGES) -> dict:
-    sim = NumaSim(PAPER_4SOCKET, policy, tlb_filter=filt, prefetch_degree=9)
+    sim = make_sim(PAPER_4SOCKET, SimConfig(policy=policy, tlb_filter=filt,
+                                            prefetch_degree=9))
     topo = sim.topo
     threads = []
     for i in range(n_threads):

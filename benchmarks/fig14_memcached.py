@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import NumaSim, PAPER_4SOCKET, Policy
+from repro.core import PAPER_4SOCKET, Policy, SimConfig, make_sim
 from repro.core.pagetable import PERM_R, PERM_RW
 
 from .common import csv
@@ -34,7 +34,8 @@ def run_one(policy: Policy, filt: bool, n_threads: int,
     (mprotect flips + writes) run in round order.  Reordering reads ahead of
     writes inside a segment only grows the sharer masks a SET's shootdown
     must honor, so the reported numaPTE filtering is conservative."""
-    sim = NumaSim(PAPER_4SOCKET, policy, tlb_filter=filt, prefetch_degree=9)
+    sim = make_sim(PAPER_4SOCKET, SimConfig(policy=policy, tlb_filter=filt,
+                                            prefetch_degree=9))
     topo = sim.topo
     workers, slabs, metas = [], [], []
     for i in range(n_threads):

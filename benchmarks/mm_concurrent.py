@@ -69,8 +69,8 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import (APPS, DEFAULT_OVERLAP_MODEL, NumaSim, PAPER_8SOCKET,
-                        Policy, make_contention, run_app)
+from repro.core import (APPS, DEFAULT_OVERLAP_MODEL, PAPER_8SOCKET,
+                        Policy, SimConfig, make_sim, run_app)
 from repro.core.pagetable import PERM_R, PERM_RW, next_table_aligned
 
 from .common import (concurrency_modes, csv, make_spinners, policies,
@@ -129,20 +129,22 @@ def run_one(policy: Policy, filt: bool, n_ops: int, *,
             spin: int = 8, workers_per_node: int = 2, seed: int = 11,
             engine: str = "batch",
             concurrency: str = "sequential") -> dict:
-    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
+    sim = make_sim(PAPER_8SOCKET,
+                   SimConfig(policy=policy, tlb_filter=filt,
+                             engine=engine, concurrency=concurrency))
     tids = []
     for node in range(sim.topo.n_nodes):
         base = node * sim.topo.hw_threads_per_node
         for i in range(workers_per_node):
             tids.append(sim.spawn_thread(base + 30 + i))
-    make_spinners(sim, spin, engine=engine)
+    make_spinners(sim, spin)
     program = [(op[0], tids[op[1]], *op[2:])
                for op in build_program(len(tids), n_ops, seed,
                                        sim._next_vpn)]
     t_before = {t: sim.thread_time_ns(t) for t in tids}
     c0 = sim.counters.snapshot()
     wall = time.perf_counter()
-    sim.apply_mm_ops(program, engine=engine, concurrency=concurrency)
+    sim.apply_mm_ops(program)
     wall = time.perf_counter() - wall
     sim.check_invariants()
     c = sim.counters.diff(c0)
@@ -201,23 +203,26 @@ def run_storm(policy: Policy, filt: bool, n_threads: int, *,
     overlap model (None = the repo default, ``coalescing``); ``settle``
     picks the settlement engine — ``wall_s`` times the munmap batch, and
     ``settle_engine`` records which engine actually ran it."""
-    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=filt)
+    sim = make_sim(PAPER_8SOCKET,
+                   SimConfig(policy=policy, tlb_filter=filt, engine=engine,
+                             concurrency=concurrency,
+                             contention=(contention or DEFAULT_OVERLAP_MODEL
+                                         if concurrency == "overlap"
+                                         else None),
+                             settle=settle))
     workers = [sim.spawn_thread(cpu)
                for cpu in worker_cpus(sim.topo, n_threads, spin)]
-    make_spinners(sim, spin, engine=engine)
+    make_spinners(sim, spin)
     mmap_ops = [("mmap", w, 1) for _ in range(iters) for w in workers]
-    vmas = sim.apply_mm_ops(mmap_ops, engine=engine)
+    vmas = sim.apply_mm_ops(mmap_ops)
     sim.apply_mm_ops([("touch", op[1], [v.start_vpn], True)
-                      for op, v in zip(mmap_ops, vmas)], engine=engine)
+                      for op, v in zip(mmap_ops, vmas)])
     munmap_ops = [("munmap", op[1], v.start_vpn, 1)
                   for op, v in zip(mmap_ops, vmas)]
     before = {w: sim.thread_time_ns(w) for w in workers}
     c0 = sim.counters.snapshot()
-    model = (make_contention(contention) if concurrency == "overlap"
-             else None)
     wall = time.perf_counter()
-    sim.apply_mm_ops(munmap_ops, engine=engine, concurrency=concurrency,
-                     contention=model, settle=settle)
+    sim.apply_mm_ops(munmap_ops)
     wall = time.perf_counter() - wall
     sim.check_invariants()
     c = sim.counters.diff(c0)

@@ -7,12 +7,20 @@
 prints ``name,key=value,...`` CSV rows for every reproduced artifact and
 writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
 ``bench_out/``) so the perf trajectory is machine-readable and CI can
-archive it.  JSON schema (version 4):
+archive it.  JSON schema (version 5):
 
-    {"schema_version": 4, "name": str, "quick": bool, "scale": int,
+    {"schema_version": 5, "name": str, "quick": bool, "scale": int,
      "concurrency": str | null, "spinners": int | null,
+     "tenants": int | null,
      "elapsed_s": float, "rows": [ {column: value, ...} ],
      "row_types": [str, ...], "error": str | null}
+
+Version 5 adds the multi-tenant ``colocation`` benchmark (the
+Process/ASID model: one tenant's munmap storm vs its co-located
+neighbors) and its knob: ``tenants`` records the victim-tenant count
+for benchmarks that take one (``--tenants``; null elsewhere), and
+``row_type="colocation"`` rows carry per-policy victim slowdown /
+cross-tenant interrupt leakage.
 
 Version 4 (same payload shape as v3; the rows changed): overlap-settled
 ``mm_concurrent`` rows carry ``model`` (the contention model) and
@@ -59,12 +67,13 @@ import sys
 import time
 from typing import Dict, Iterable, Optional
 
-from . import (fig01_mprotect, fig02_local_remote, fig03_placement,
-               fig06_prefetch, fig07_migration, fig08_apps, fig09_mm_ops,
-               fig10_munmap, fig11_malloc, fig13_webserver, fig14_memcached,
-               mm_concurrent, roofline, serving_coherence)
+from . import (colocation, fig01_mprotect, fig02_local_remote,
+               fig03_placement, fig06_prefetch, fig07_migration, fig08_apps,
+               fig09_mm_ops, fig10_munmap, fig11_malloc, fig13_webserver,
+               fig14_memcached, mm_concurrent, roofline, serving_coherence)
 
 BENCHES = {
+    "colocation": colocation.main,
     "fig01_mprotect": fig01_mprotect.main,
     "fig02_local_remote": fig02_local_remote.main,
     "fig03_placement": fig03_placement.main,
@@ -81,7 +90,7 @@ BENCHES = {
     "roofline": roofline.main,
 }
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 #: where --emit-root writes the canonical BENCH_<name>.json files: the
 #: repository root, resolved from this package's location so the flag
@@ -122,6 +131,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
                    strict: bool = False,
                    concurrency: str = "both",
                    spinners: Optional[int] = None,
+                   tenants: Optional[int] = None,
                    emit_root: bool = False) -> Dict[str, str]:
     """Run benchmarks, print their CSV, and write BENCH_<name>.json files.
 
@@ -149,6 +159,11 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             spinners_used = (spinners if spinners is not None
                              else params["spinners"].default)
             kwargs["spinners"] = spinners_used
+        tenants_used = None
+        if "tenants" in params:
+            tenants_used = tenants
+            if tenants is not None:
+                kwargs["tenants"] = tenants
         print(f"# --- {name} ---", file=sys.stderr)
         t0 = time.time()
         rows, error = None, None
@@ -167,6 +182,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             "scale": scale,
             "concurrency": concurrency if "concurrency" in params else None,
             "spinners": spinners_used,
+            "tenants": tenants_used,
             "elapsed_s": round(elapsed, 3),
             "rows": rows or [],
             "row_types": sorted({row.get("row_type", "data")
@@ -230,6 +246,17 @@ def main() -> None:
                          "fig1-absolute scenario always sweeps its own "
                          "loads up to the paper's 280-spinner regime "
                          "(35 per socket)")
+    def positive_tenants(v: str) -> int:
+        n = int(v)
+        if n < 1:
+            raise argparse.ArgumentTypeError("--tenants must be >= 1")
+        return n
+
+    ap.add_argument("--tenants", type=positive_tenants, default=None,
+                    help="victim-tenant count for the multi-tenant "
+                         "colocation benchmark (default: the benchmark's "
+                         "own 3-quick/7-full; 'tenants' is null in "
+                         "artifacts of benchmarks without the knob)")
     ap.add_argument("--emit-root", action="store_true",
                     help="also write canonical BENCH_<name>.json files at "
                          "the repository root (the committed perf "
@@ -239,7 +266,7 @@ def main() -> None:
     run_benchmarks([args.only] if args.only else None, quick=args.quick,
                    scale=args.scale, outdir=args.outdir, strict=args.strict,
                    concurrency=args.concurrency, spinners=args.spinners,
-                   emit_root=args.emit_root)
+                   tenants=args.tenants, emit_root=args.emit_root)
 
 
 if __name__ == "__main__":

@@ -7,12 +7,13 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import NumaSim, PAPER_8SOCKET                 # noqa: E402
+from repro.core import PAPER_8SOCKET, SimConfig, make_sim     # noqa: E402
 from repro.core.pagetable import PERM_R, PERM_RW, Policy      # noqa: E402
 
 
 def bench(policy, tlb_filter, spin_per_socket, iters=200):
-    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=tlb_filter)
+    sim = make_sim(PAPER_8SOCKET,
+                   SimConfig(policy=policy, tlb_filter=tlb_filter))
     main = sim.spawn_thread(cpu=0)
     for node in range(sim.topo.n_nodes):
         base = node * sim.topo.hw_threads_per_node

@@ -11,6 +11,7 @@ Two cooperating implementations live here:
     the serving runtime and the Pallas paged-attention kernel.
 """
 from .batch import access_stream, touch_batch
+from .config import ENGINES, POLICIES, SimConfig, make_sim
 from .costmodel import CostModel
 from .malloc import MallocModel, gamma_sizes_pages
 from .mm_batch import apply_mm_ops, mmap_batch, mprotect_batch, munmap_batch
@@ -23,7 +24,7 @@ from .shootdown import (CONTENTION_MODELS, DEFAULT_OVERLAP_MODEL,
                         RoundSettlement, make_contention)
 from .shootdown_batch import (SETTLE_MODES, BatchSettlement, settle_round,
                               supports_vector)
-from .sim import Counters, NumaSim, SegfaultError, Thread
+from .sim import Counters, NumaSim, Process, SegfaultError, Thread
 from .tlb import TLB
 from .topology import (PAPER_4SOCKET, PAPER_8SOCKET, TPU_2POD, NumaTopology,
                        socket_pair)
@@ -33,7 +34,8 @@ from .workloads import (APPS, AppSpec, build_app, run_app, run_exec_phase,
 __all__ = [
     "APPS", "AppSpec", "BatchSettlement", "CONTENTION_MODELS",
     "CoalescingContention", "ContentionModel",
-    "CostModel", "Counters", "DEFAULT_OVERLAP_MODEL",
+    "CostModel", "Counters", "DEFAULT_OVERLAP_MODEL", "ENGINES",
+    "POLICIES", "SimConfig", "make_sim",
     "IPI_RECEIVE_NS", "LeafTable", "MallocModel", "NullContention",
     "QueueContention", "RoundSettlement", "SETTLE_MODES",
     "make_contention", "settle_round", "supports_vector",
@@ -41,7 +43,8 @@ __all__ = [
     "apply_mm_ops", "mmap_batch", "mprotect_batch", "munmap_batch",
     "NumaSim", "NumaTopology", "PAPER_4SOCKET", "PAPER_8SOCKET",
     "PERM_R", "PERM_RW", "PERM_W", "PERM_X", "PTES_PER_TABLE",
-    "PageTableStore", "Policy", "SegfaultError", "TLB", "TPU_2POD", "Thread",
+    "PageTableStore", "Policy", "Process", "SegfaultError", "TLB",
+    "TPU_2POD", "Thread",
     "VMA", "build_app", "gamma_sizes_pages", "leaf_id", "leaf_index",
     "run_app", "run_exec_phase", "run_mprotect_phase", "run_teardown_phase",
     "socket_pair",

@@ -113,7 +113,7 @@ def access_stream(sim, chunks: Iterable[Sequence]) -> Dict[int, float]:
 class _BatchContext:
     """Per-batch bindings: thread, node, TLB, charge tables, VMA index."""
 
-    __slots__ = ("sim", "tid", "thr", "node", "tlb", "local_mem",
+    __slots__ = ("sim", "tid", "thr", "node", "proc", "tlb", "local_mem",
                  "remote_ns", "fail_ns", "_vma_starts", "_vmas_sorted")
 
     def __init__(self, sim, tid: int):
@@ -123,7 +123,11 @@ class _BatchContext:
         self.thr = thr
         node = sim.topo.node_of_cpu(thr.cpu)
         self.node = node
-        self.tlb = sim.tlbs[thr.cpu]
+        # all address-space state (VMAs, tables, oracle, TLB partition) is
+        # the thread's process's — other tenants on the same CPU are
+        # invisible to a data-access batch.
+        self.proc = sim.processes[thr.asid]
+        self.tlb = sim._asid_tlbs[thr.asid][thr.cpu]
         c = sim.cost
         interf = sim._interference
         lm, rm, mult = c.local_mem_ns, c.remote_mem_ns, c.interference_mult
@@ -143,7 +147,7 @@ class _BatchContext:
     def vma_at(self, vpn: int):
         """find_vma over a sorted interval index (VMAs are disjoint)."""
         if self._vma_starts is None:
-            self._vmas_sorted = sorted(self.sim.vmas,
+            self._vmas_sorted = sorted(self.proc.vmas,
                                        key=operator.attrgetter("start_vpn"))
             self._vma_starts = [v.start_vpn for v in self._vmas_sorted]
         return find_vma_sorted(self._vmas_sorted, self._vma_starts, vpn)
@@ -159,7 +163,7 @@ def _bulk_first_touch(ctx: _BatchContext, g: np.ndarray,
     precondition fails, so the caller can run the general loop instead."""
     sim = ctx.sim
     ti = int(g[0]) >> LEAF_SHIFT
-    store = sim.store
+    store = ctx.proc.store
     if store.tables.get(ti) is not None:
         return False
     vma = ctx.vma_at(int(g[0]))
@@ -220,7 +224,7 @@ def _bulk_first_touch(ctx: _BatchContext, g: np.ndarray,
         table.copies[owner].update(zip(idxs, ptes))
     gl = g.tolist()
     vals = [(f, perms) for f in frames]
-    sim._oracle.update(zip(gl, vals))
+    ctx.proc.oracle.update(zip(gl, vals))
     sim._frame_nodes.update(zip(frames, repeat(node)))
     # FIFO TLB: k distinct fresh fills == evict the max(0, len+k-cap) oldest
     # entries, then append the fills in order.
@@ -317,9 +321,9 @@ def _make_miss_protocol(ctx: _BatchContext, acc: List[int],
     partial state the scalar loop would have left."""
     sim = ctx.sim
     node = ctx.node
-    store = sim.store
+    store = ctx.proc.store
     tables_get = store.tables.get
-    oracle = sim._oracle
+    oracle = ctx.proc.oracle
     fnodes = sim._frame_nodes
     nf = sim._next_frame
     c = sim.cost
@@ -534,8 +538,8 @@ def _general_vec(ctx: _BatchContext, arr: np.ndarray) -> bool:
     thr, node = ctx.thr, ctx.node
     entries = ctx.tlb.entries
     cap = ctx.tlb.capacity
-    tables_get = sim.store.tables.get
-    oget = sim._oracle.get
+    tables_get = ctx.proc.store.tables.get
+    oget = ctx.proc.oracle.get
     fget = sim._frame_nodes.get
     is_linux = sim.policy is Policy.LINUX
     LM = ctx.local_mem
@@ -676,7 +680,7 @@ def _general_seq(ctx: _BatchContext, arr: np.ndarray,
     thr, node = ctx.thr, ctx.node
     entries = ctx.tlb.entries
     cap = ctx.tlb.capacity
-    oget = sim._oracle.get
+    oget = ctx.proc.oracle.get
     fget = sim._frame_nodes.get
     LM = ctx.local_mem
     REMOTE_NS = ctx.remote_ns

@@ -48,13 +48,15 @@ class MallocModel:
     """One allocator instance bound to one simulator thread."""
 
     def __init__(self, sim: NumaSim, tid: int, flavor: str = "glibc",
-                 engine: str = "batch"):
+                 engine: Optional[str] = None):
         if flavor not in ("mmap", "glibc", "tcmalloc"):
             raise ValueError(flavor)
         self.sim = sim
         self.tid = tid
         self.flavor = flavor
-        self.engine = engine  # "batch" (vectorized, byte-identical) | "scalar"
+        # "batch" (vectorized, byte-identical) | "scalar"; defaults to the
+        # sim's SimConfig.engine
+        self.engine = engine if engine is not None else sim.config.engine
         self._free_spans: List[_Span] = []     # per-thread cache / arena top
         self._cached_pages = 0
 

@@ -105,6 +105,8 @@ from .shootdown import (CoalescingContention, ContentionModel,
                         charge_responders)
 from .shootdown_batch import BatchSettlement, resolve_settle
 
+from .config import _UNSET, _warn_deprecated
+
 __all__ = ["CONCURRENCY_MODES", "apply_mm_ops", "mmap_batch",
            "mprotect_batch", "munmap_batch"]
 
@@ -123,10 +125,10 @@ _BY_START = operator.attrgetter("start_vpn")
 # --------------------------------------------------------------------------
 # public API
 # --------------------------------------------------------------------------
-def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch",
-                 concurrency: str = "sequential",
-                 contention: Optional[ContentionModel] = None,
-                 settle: str = "auto") -> list:
+def apply_mm_ops(sim, ops: Sequence[tuple], *, engine=_UNSET,
+                 concurrency=_UNSET,
+                 contention=_UNSET,
+                 settle=_UNSET) -> list:
     """Apply a sequence of memory-management ops, in order.
 
     Each op is a tuple whose first element names the kind:
@@ -171,22 +173,62 @@ def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch",
     The engine actually used is reported in ``sim.last_settle_engine``
     (``"mixed"`` if the vectorized engine abandoned mid-batch).
     """
+    # knob defaults come from the sim's SimConfig; the explicit kwargs are
+    # the deprecated per-call spellings (they still win when passed)
+    cfg = sim.config
+    if engine is _UNSET:
+        engine = cfg.engine
+    else:
+        _warn_deprecated("apply_mm_ops(engine=...)", "SimConfig(engine=...)")
+    if concurrency is _UNSET:
+        concurrency = cfg.concurrency
+    else:
+        _warn_deprecated("apply_mm_ops(concurrency=...)",
+                         "SimConfig(concurrency=...)")
+    if contention is _UNSET:
+        contention = None
+    else:
+        _warn_deprecated("apply_mm_ops(contention=...)",
+                         "SimConfig(contention=...)")
+        if contention is not None and concurrency != "overlap":
+            raise ValueError("contention model given but concurrency="
+                             f"{concurrency!r}; it would be silently "
+                             "ignored — pass concurrency=\"overlap\"")
+    if settle is _UNSET:
+        settle = cfg.settle if concurrency == "overlap" else "auto"
+    else:
+        _warn_deprecated("apply_mm_ops(settle=...)", "SimConfig(settle=...)")
+        if settle != "auto" and concurrency != "overlap":
+            raise ValueError(f"settle={settle!r} given but concurrency="
+                             f"{concurrency!r}; the settlement engine only "
+                             "applies to overlap mode")
+    return _apply_resolved(sim, ops, engine, concurrency, contention, settle)
+
+
+def _apply_resolved(sim, ops, engine: str, concurrency: str,
+                    contention: Optional[ContentionModel],
+                    settle: str) -> list:
+    """apply_mm_ops past knob resolution — the internal entry point the
+    workload phases use so routing an already-resolved engine through
+    never trips the deprecation shim."""
     ops = list(ops)
     for op in ops:
         if not op or op[0] not in _KINDS:
             raise ValueError(f"unknown mm op: {op!r}")
+    # One batch = syscalls of one address space (its threads, its VMAs, its
+    # mm_cpumask fan-out).  Different tenants issue separate batches; their
+    # rounds still contend through a shared contention model's horizons,
+    # and responder charges always land on every thread resident on a
+    # target CPU, whichever process it belongs to.
+    asids = {sim.threads[op[1]].asid for op in ops if op[1] in sim.threads}
+    if len(asids) > 1:
+        raise ValueError(
+            f"apply_mm_ops: ops span multiple processes (asids {sorted(asids)}); "
+            "issue one batch per address space")
     if engine not in ("scalar", "batch"):
         raise ValueError(f"unknown engine {engine!r}")
     if concurrency not in CONCURRENCY_MODES:
         raise ValueError(f"unknown concurrency {concurrency!r}")
-    if contention is not None and concurrency != "overlap":
-        raise ValueError("contention model given but concurrency="
-                         f"{concurrency!r}; it would be silently ignored — "
-                         "pass concurrency=\"overlap\"")
-    if settle != "auto" and concurrency != "overlap":
-        raise ValueError(f"settle={settle!r} given but concurrency="
-                         f"{concurrency!r}; the settlement engine only "
-                         "applies to overlap mode")
     if concurrency == "overlap":
         model: Optional[ContentionModel] = (
             contention if contention is not None
@@ -214,7 +256,7 @@ def apply_mm_ops(sim, ops: Sequence[tuple], *, engine: str = "batch",
 
 
 def mmap_batch(sim, tid: int, sizes, *, perms: int = PERM_RW,
-               engine: str = "batch") -> List[VMA]:
+               engine=_UNSET) -> List[VMA]:
     """Batched ``sim.mmap(tid, n)`` for every n in ``sizes`` (in order)."""
     return apply_mm_ops(
         sim, [("mmap", tid, int(n), perms) for n in np.ravel(sizes)],
@@ -222,7 +264,7 @@ def mmap_batch(sim, tid: int, sizes, *, perms: int = PERM_RW,
 
 
 def mprotect_batch(sim, tid: int, starts, n_pages, perms, *,
-                   engine: str = "batch") -> None:
+                   engine=_UNSET) -> None:
     """Batched ``sim.mprotect`` over parallel (start, n_pages, perms)
     arrays; scalar ``n_pages``/``perms`` broadcast over all ops."""
     starts = [int(s) for s in np.ravel(starts)]
@@ -233,7 +275,7 @@ def mprotect_batch(sim, tid: int, starts, n_pages, perms, *,
 
 
 def munmap_batch(sim, tid: int, starts, n_pages, *,
-                 engine: str = "batch") -> None:
+                 engine=_UNSET) -> None:
     """Batched ``sim.munmap`` over parallel (start, n_pages) arrays."""
     starts = [int(s) for s in np.ravel(starts)]
     lens = _broadcast(n_pages, len(starts))
@@ -302,6 +344,13 @@ class _MMEngine:
     def __init__(self, sim, ops: List[tuple], settle: Optional[str] = None):
         self.sim = sim
         self.ops = ops
+        # the batch's address space (apply_mm_ops validated uniqueness):
+        # VMAs, page tables, oracle, TLB partitions and the mm_cpumask
+        # fan-out all come from it; thread-time/IPI charging stays
+        # machine-global (co-resident tenants eat this process's IPIs).
+        asids = {sim.threads[op[1]].asid for op in ops
+                 if op[1] in sim.threads}
+        self.proc = sim.processes[asids.pop()] if asids else sim.processes[0]
         self.node_of = sim.topo.node_of_cpu
         self.hw_per_node = sim.topo.hw_threads_per_node
         self.full_mask = (1 << sim.topo.n_nodes) - 1
@@ -334,21 +383,24 @@ class _MMEngine:
         self.node_rounds = [0] * sim.topo.n_nodes
         self.self_rounds: Dict[int, int] = {}   # initiator cpu -> rounds
         self.applied: Dict[int, int] = {}       # tid -> rounds settled
-        # The engine keeps sim.vmas sorted by start_vpn for the whole
-        # batch.  VMAs are disjoint, so this is an equivalent permutation
-        # of the scalar path's insertion-ordered list (find_vma returns
-        # the unique containing VMA either way) — and it makes both VMA
-        # resolution and munmap carving O(log V) bisects + list splices
+        # The engine keeps the process's vmas sorted by start_vpn for the
+        # whole batch.  VMAs are disjoint, so this is an equivalent
+        # permutation of the scalar path's insertion-ordered list (find_vma
+        # returns the unique containing VMA either way) — and it makes both
+        # VMA resolution and munmap carving O(log V) bisects + list splices
         # instead of O(V) rebuilds per op.
-        sim.vmas.sort(key=_BY_START)
-        self._vma_starts: List[int] = [v.start_vpn for v in sim.vmas]
+        self.proc.vmas.sort(key=_BY_START)
+        self._vma_starts: List[int] = [v.start_vpn for v in self.proc.vmas]
         self._rebuild_topology_cache()
         self._relevant = self._initial_relevant(ops)
 
     # ------------------------------------------------------------- caches
     def _rebuild_topology_cache(self) -> None:
+        # occupancy of the *initiating process's* threads: its mm_cpumask,
+        # the unfiltered shootdown fan-out (per-process since the Process
+        # refactor; with one process this is every thread, as before).
         occ: Dict[int, set] = {}
-        for t in self.sim.threads.values():
+        for t in self.proc.threads.values():
             occ.setdefault(self.node_of(t.cpu), set()).add(t.cpu)
         self.occ_sets = occ                 # node -> occupied cpus
         self.occ_count = {n: len(s) for n, s in occ.items()}
@@ -375,7 +427,8 @@ class _MMEngine:
         starts = np.asarray([m[0] for m in merged], dtype=np.int64)
         ends = np.asarray([m[1] for m in merged], dtype=np.int64)
         rel = set()
-        for cpu, tlb in self.sim.tlbs.items():
+        # only this process's ASID partitions can hold its translations
+        for cpu, tlb in self.sim._asid_tlbs.get(self.proc.asid, {}).items():
             n = len(tlb.entries)
             if not n:
                 continue
@@ -388,13 +441,13 @@ class _MMEngine:
 
     def _vma_at(self, vpn: int) -> Optional[VMA]:
         """find_vma over the live sorted interval index."""
-        return find_vma_sorted(self.sim.vmas, self._vma_starts, vpn)
+        return find_vma_sorted(self.proc.vmas, self._vma_starts, vpn)
 
     def _carve_vmas(self, start: int, end: int) -> None:
         """`NumaSim._carve_vmas`, as a splice on the sorted VMA list:
         identical resulting VMA set (same objects / same replace() pieces),
         without rebuilding the whole list per op."""
-        vmas = self.sim.vmas
+        vmas = self.proc.vmas
         starts = self._vma_starts
         i = bisect.bisect_right(starts, start) - 1
         if i < 0 or vmas[i].end_vpn <= start:
@@ -434,6 +487,12 @@ class _MMEngine:
         700s a target accumulates land before its own next op's charges)."""
         thr = self.sim.threads[tid]
         cpu = thr.cpu
+        # rounds only ever target the initiating process's mm_cpumask; a
+        # thread (of any process) on a cpu outside it is never charged.
+        # With one process this guard never fires (every thread's cpu is
+        # occupied by construction).
+        if cpu not in self.occupied_all:
+            return
         due = (self.node_rounds[self.node_of(cpu)]
                - self.self_rounds.get(cpu, 0)
                - self.applied.get(tid, 0))
@@ -519,19 +578,20 @@ class _MMEngine:
     # ------------------------------------------------------------------ ops
     def _op_mmap(self, tid: int, n_pages: int, perms: int) -> VMA:
         sim = self.sim
+        proc = self.proc
         self._settle_ipis(tid)
         c = sim.cost
         node = sim.thread_node(tid)
-        start = sim._next_vpn
-        sim._next_vpn = next_table_aligned(start + n_pages)
+        start = proc.next_vpn
+        proc.next_vpn = next_table_aligned(start + n_pages)
         vma = VMA(next(sim._next_vma), start, start + n_pages, node, perms)
         starts = self._vma_starts
         if not starts or start > starts[-1]:
-            sim.vmas.append(vma)
+            proc.vmas.append(vma)
             starts.append(start)
         else:  # pre-existing at_vpn area beyond the allocator cursor
             i = bisect.bisect_right(starts, start)
-            sim.vmas.insert(i, vma)
+            proc.vmas.insert(i, vma)
             starts.insert(i, start)
         self._set_time(tid, self._wtime(tid) + (c.syscall_fixed_ns
                                                 + c.mmap_extra_ns))
@@ -567,7 +627,7 @@ class _MMEngine:
         t = self._wtime(tid) + sim.cost.syscall_fixed_ns
         t, touched = self._update_range(tid, t, start, n, perms)
         end = start + n
-        oracle = sim._oracle
+        oracle = self.proc.oracle
         if n > PTES_PER_TABLE:
             # enumerate present vpns from the canonical/owner copies (the
             # owner copy is complete under every policy: I1) instead of
@@ -599,7 +659,7 @@ class _MMEngine:
         else:
             present = None
         t, touched = self._update_range(tid, t, start, n, None)
-        pop = sim._oracle.pop
+        pop = self.proc.oracle.pop
         freed = 0
         if present is None:
             for vpn in range(start, end):
@@ -611,7 +671,7 @@ class _MMEngine:
                     freed += 1
         ctr.data_pages_freed += freed
         t = self._shootdown(tid, t, start, end, touched)
-        store = sim.store
+        store = self.proc.store
         for ti in touched:
             table = store.get(ti)
             if table is not None and table.empty():
@@ -626,7 +686,7 @@ class _MMEngine:
     def _present_vpns(self, table_ids, start: int, end: int) -> List[int]:
         """All vpns in [start, end) whose PTE is present, via the canonical
         (LINUX) / owner (MITOSIS, NUMAPTE: invariant I1) copies."""
-        store_get = self.sim.store.tables.get
+        store_get = self.proc.store.tables.get
         out: List[int] = []
         for ti in table_ids:
             table = store_get(ti)
@@ -656,7 +716,7 @@ class _MMEngine:
         ctr, c = sim.counters, sim.cost
         node = sim.thread_node(tid)
         WL, WR = c.pte_write_local_ns, c.pte_write_remote_ns
-        store_get = sim.store.tables.get
+        store_get = self.proc.store.tables.get
         end = start + n
         # table-id bounds are the scalar path's exact formula: a
         # zero-length op at an unaligned start still "touches" (and so
@@ -730,7 +790,7 @@ class _MMEngine:
         my_node = self.node_of(me_cpu)
         if sim.tlb_filter:
             allowed = 0
-            store_get = sim.store.tables.get
+            store_get = self.proc.store.tables.get
             for ti in touched:
                 table = store_get(ti)
                 if table is not None:
@@ -818,7 +878,7 @@ class _MMEngine:
                     self.self_rounds.get(me_cpu, 0) + 1
         rel = self._relevant
         if rel:
-            tlbs = sim.tlbs
+            tlbs = sim._asid_tlbs[self.proc.asid]
             node_of = self.node_of
             occupied = self.occupied_all
             for cpu in rel:

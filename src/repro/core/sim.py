@@ -1,7 +1,18 @@
 """numaPTE protocol simulator: the paper's mechanism, exactly.
 
-One `NumaSim` instance models one machine running one process (the paper's
-benchmarks are all single-process).  It implements, switchable per run:
+One `NumaSim` instance models one machine running N processes (address
+spaces).  Each ``Process`` owns its VMAs, page-table root/replicas
+(``PageTableStore``), translation oracle, thread membership and the implied
+``mm_cpumask``; TLB entries are ASID/PCID-tagged (one ``TLB`` partition per
+(cpu, asid), see ``repro.core.tlb``), so context switches between processes
+sharing a hardware thread flush nothing.  Shootdown fan-out is per-process:
+Linux targets the initiating process's whole ``mm_cpumask`` — which is how
+one tenant's munmap storm interrupts *whoever* is resident on shared CPUs,
+the cross-tenant blast radius the colocation benchmark measures — while
+numaPTE's sharer filter contains it.  Every sim starts with a default
+process (ASID 0) that all single-process APIs operate on, which keeps the
+classic one-process behaviour bit-for-bit identical; ``spawn_process()``
+adds tenants.  It implements, switchable per run:
 
   * ``Policy.LINUX``   — no replication, first-touch page-table placement,
     process-wide TLB shootdowns (baseline Linux v4.17 semantics).
@@ -31,6 +42,7 @@ import dataclasses
 import itertools
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .config import SimConfig, _UNSET, _warn_deprecated
 from .costmodel import CostModel
 from .pagetable import (PERM_RW, PTE, PTES_PER_TABLE, LeafTable,
                         PageTableStore, Policy, VMA, leaf_base_vpn, leaf_id,
@@ -41,7 +53,8 @@ from .shootdown_batch import (SETTLE_MODES, settle_round, supports_vector)
 from .tlb import DEFAULT_TLB_ENTRIES, TLB
 from .topology import NumaTopology
 
-__all__ = ["Counters", "IPI_RECEIVE_NS", "NumaSim", "SegfaultError", "Thread"]
+__all__ = ["Counters", "IPI_RECEIVE_NS", "NumaSim", "Process",
+           "SegfaultError", "Thread"]
 
 
 @dataclasses.dataclass
@@ -85,6 +98,38 @@ class Thread:
     cpu: int
     time_ns: float = 0.0         # modeled time consumed by this thread
     ipis_received: int = 0
+    asid: int = 0                # owning process (address-space id)
+
+
+class Process:
+    """One address space on the machine: VMAs, page tables, oracle, threads.
+
+    The default process (ASID 0) exists from construction and is what every
+    single-process API (and the ``NumaSim.store``/``vmas``/``_oracle``
+    compatibility properties) operates on.  ``cpus()`` is the process's
+    ``mm_cpumask``: the set of hardware threads currently running one of its
+    threads, i.e. exactly the CPUs a Linux process-wide shootdown targets.
+    """
+
+    __slots__ = ("asid", "name", "store", "vmas", "threads", "oracle",
+                 "next_vpn")
+
+    def __init__(self, asid: int, n_nodes: int, name: Optional[str] = None):
+        self.asid = asid
+        self.name = name if name is not None else f"proc{asid}"
+        self.store = PageTableStore(n_nodes)
+        self.vmas: List[VMA] = []
+        self.threads: Dict[int, Thread] = {}
+        self.oracle: Dict[int, Tuple[int, int]] = {}  # vpn -> (frame, perms)
+        self.next_vpn = 1 << 20      # start allocations at 4GB
+
+    def cpus(self) -> set:
+        """The process's mm_cpumask (CPUs with a resident thread)."""
+        return {t.cpu for t in self.threads.values()}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Process(asid={self.asid}, name={self.name!r}, "
+                f"threads={sorted(self.threads)}, vmas={len(self.vmas)})")
 
 
 class SegfaultError(Exception):
@@ -101,51 +146,138 @@ class NumaSim:
                  cost: Optional[CostModel] = None,
                  tlb_entries: int = DEFAULT_TLB_ENTRIES,
                  interference_nodes: Sequence[int] = (),
-                 contention: Optional[ContentionModel] = None,
-                 settle_engine: str = "auto"):
+                 contention=_UNSET,
+                 settle_engine=_UNSET,
+                 config: Optional[SimConfig] = None):
+        if config is None:
+            # legacy kwarg surface folds into a config; contention= /
+            # settle_engine= are the deprecated spellings
+            if contention is not _UNSET:
+                _warn_deprecated("NumaSim(contention=...)",
+                                 "SimConfig(contention=...) / make_sim")
+            else:
+                contention = None
+            if settle_engine is not _UNSET:
+                _warn_deprecated("NumaSim(settle_engine=...)",
+                                 "SimConfig(settle=...) / make_sim")
+            else:
+                settle_engine = "auto"
+            config = SimConfig(policy=policy,
+                               prefetch_degree=prefetch_degree,
+                               tlb_filter=tlb_filter, cost=cost,
+                               tlb_entries=tlb_entries,
+                               interference_nodes=tuple(interference_nodes),
+                               contention=contention,
+                               settle=settle_engine)
+        elif contention is not _UNSET or settle_engine is not _UNSET:
+            raise ValueError("pass knobs via config=SimConfig(...) or via "
+                             "legacy kwargs, not both")
+        #: the resolved declarative config this sim was built from
+        self.config = config
+        policy = config.resolved_policy()
+        tlb_filter = config.tlb_filter
         if policy is not Policy.NUMAPTE:
             tlb_filter = False  # the optimization needs sharer info
-        if settle_engine not in SETTLE_MODES:
-            raise ValueError(f"unknown settle_engine {settle_engine!r}; "
-                             f"pick from {SETTLE_MODES}")
         self.topo = topology
         #: pluggable overlapping-IPI-round settlement (repro.core.shootdown);
         #: None = classic sequential semantics (every round runs alone).
-        self.contention = contention
+        self.contention = config.resolved_contention()
         #: how contended rounds settle: "auto" picks the vectorized
         #: engine (repro.core.shootdown_batch) for the stock models,
         #: "vector" requires it, "sequential" forces the scalar model
         #: loops (the differential reference).  Bit-identical either way.
-        self.settle_engine = settle_engine
+        self.settle_engine = config.settle
         #: which settlement engine the last apply_mm_ops batch used
         #: ("vector" / "sequential" / "mixed"; None = sequential mode).
         self.last_settle_engine: Optional[str] = None
         self.policy = policy
-        self.prefetch_degree = prefetch_degree
+        self.prefetch_degree = config.prefetch_degree
         self.tlb_filter = tlb_filter
-        self.cost = cost or CostModel.paper_default()
-        self.store = PageTableStore(topology.n_nodes)
+        self.cost = config.cost or CostModel.paper_default()
+        self.tlb_entries = config.tlb_entries
+        interference_nodes = config.interference_nodes
+        #: ASID-0 per-CPU TLB partitions (the default process's view; the
+        #: classic single-process attribute).  asid>0 partitions live in
+        #: ``_asid_tlbs``, which aliases this dict at key 0.
         self.tlbs: Dict[int, TLB] = {}
-        self.tlb_entries = tlb_entries
+        self._asid_tlbs: Dict[int, Dict[int, TLB]] = {0: self.tlbs}
+        #: every thread on the machine, across all processes (tids are
+        #: machine-global and dense; per-process membership is
+        #: ``Process.threads``).
         self.threads: Dict[int, Thread] = {}
-        self.vmas: List[VMA] = []
         self.counters = Counters()
         self._next_tid = itertools.count()
         self._next_vma = itertools.count()
-        self._next_frame = itertools.count()
-        self._next_vpn = 1 << 20     # start allocations at 4GB
-        self._oracle: Dict[int, Tuple[int, int]] = {}  # vpn -> (frame, perms)
+        self._next_frame = itertools.count()   # physical frames: machine-wide
+        self._next_asid = itertools.count(1)
         self._frame_nodes: Dict[int, int] = {}         # frame -> data node
         self._cpu_threads: Dict[int, List[Thread]] = {}
         self._interference = frozenset(interference_nodes)
+        #: address spaces on this machine; ASID 0 is the default process
+        self.processes: Dict[int, Process] = {0: Process(0, topology.n_nodes)}
+
+    # ----------------------------------------------- default-process aliases
+    # The classic single-process attributes delegate to the default process
+    # (ASID 0) so every pre-Process API, engine binding and test keeps
+    # working unchanged; multi-process code goes through ``process_of``.
+    @property
+    def store(self) -> PageTableStore:
+        return self.processes[0].store
+
+    @property
+    def vmas(self) -> List[VMA]:
+        return self.processes[0].vmas
+
+    @vmas.setter
+    def vmas(self, value: List[VMA]) -> None:
+        self.processes[0].vmas = value
+
+    @property
+    def _oracle(self) -> Dict[int, Tuple[int, int]]:
+        return self.processes[0].oracle
+
+    @property
+    def _next_vpn(self) -> int:
+        return self.processes[0].next_vpn
+
+    @_next_vpn.setter
+    def _next_vpn(self, value: int) -> None:
+        self.processes[0].next_vpn = value
 
     # ------------------------------------------------------------------ utils
-    def spawn_thread(self, cpu: int) -> int:
+    def spawn_process(self, name: Optional[str] = None) -> Process:
+        """Create a new address space (tenant).  Pass the returned process
+        (or its asid) to ``spawn_thread`` to place threads in it."""
+        asid = next(self._next_asid)
+        proc = Process(asid, self.topo.n_nodes, name=name)
+        self.processes[asid] = proc
+        return proc
+
+    def process_of(self, tid: int) -> Process:
+        return self.processes[self.threads[tid].asid]
+
+    def tlb_partition(self, cpu: int, asid: int = 0) -> TLB:
+        """The (cpu, asid) TLB partition, created on first use — the tagged
+        entries a context switch to this process finds (PCID: no flush)."""
+        parts = self._asid_tlbs.setdefault(asid, {})
+        tlb = parts.get(cpu)
+        if tlb is None:
+            tlb = parts[cpu] = TLB(self.tlb_entries, asid=asid)
+        return tlb
+
+    def spawn_thread(self, cpu: int, process=None) -> int:
         self.topo.validate_cpu(cpu)
+        if process is None:
+            proc = self.processes[0]
+        elif isinstance(process, Process):
+            proc = process
+        else:
+            proc = self.processes[process]
         tid = next(self._next_tid)
-        thr = Thread(tid=tid, cpu=cpu)
+        thr = Thread(tid=tid, cpu=cpu, asid=proc.asid)
         self.threads[tid] = thr
-        self.tlbs.setdefault(cpu, TLB(self.tlb_entries))
+        proc.threads[tid] = thr
+        self.tlb_partition(cpu, proc.asid)
         self._cpu_threads.setdefault(cpu, []).append(thr)
         return tid
 
@@ -159,8 +291,8 @@ class NumaSim:
         """Cross-socket traffic between a,b competes with interference apps."""
         return a != b and (a in self._interference or b in self._interference)
 
-    def find_vma(self, vpn: int) -> Optional[VMA]:
-        for vma in self.vmas:
+    def find_vma(self, vpn: int, asid: int = 0) -> Optional[VMA]:
+        for vma in self.processes[asid].vmas:
             if vpn in vma:
                 return vma
         return None
@@ -170,18 +302,19 @@ class NumaSim:
              owner_node: Optional[int] = None, populate: bool = False,
              at_vpn: Optional[int] = None) -> VMA:
         c = self.cost
+        proc = self.process_of(tid)
         node = owner_node if owner_node is not None else self.thread_node(tid)
         if at_vpn is None:
             # Distinct VMAs live in distinct leaf tables: mmap'd areas get
             # their own PT pages in practice (per-thread arenas, guard gaps,
             # top-down mmap layout); co-locating unrelated VMAs in one leaf
             # table would charge numaPTE for false table-level sharing.
-            start = self._next_vpn
-            self._next_vpn = next_table_aligned(start + n_pages)
+            start = proc.next_vpn
+            proc.next_vpn = next_table_aligned(start + n_pages)
         else:
             start = at_vpn
         vma = VMA(next(self._next_vma), start, start + n_pages, node, perms)
-        self.vmas.append(vma)
+        proc.vmas.append(vma)
         self._charge(tid, c.syscall_fixed_ns + c.mmap_extra_ns)
         if populate:
             for vpn in range(vma.start_vpn, vma.end_vpn):
@@ -192,8 +325,9 @@ class NumaSim:
     def touch(self, tid: int, vpn: int, write: bool = False) -> int:
         """One memory access by thread `tid` to `vpn`. Returns the frame id."""
         thr = self.threads[tid]
+        proc = self.processes[thr.asid]
         node = self.topo.node_of_cpu(thr.cpu)
-        tlb = self.tlbs[thr.cpu]
+        tlb = self._asid_tlbs[thr.asid][thr.cpu]
         hit = tlb.lookup(vpn)
         ctr, c = self.counters, self.cost
         if hit is not None:
@@ -203,7 +337,7 @@ class NumaSim:
             return frame
         ctr.tlb_misses += 1
         tid_table = leaf_id(vpn)
-        table = self.store.get(tid_table)
+        table = proc.store.get(tid_table)
         # -- hardware walk against the local (or canonical) copy ------------
         if table is not None:
             walk_node, pte = self._walk(table, node, leaf_index(vpn))
@@ -222,7 +356,7 @@ class NumaSim:
             self._charge(tid, c.walk_cost_ns(local=local))
         # -- page fault -------------------------------------------------------
         frame = self._page_fault(tid, node, vpn, write)
-        pte = self._lookup_for_fill(tid_table, node, vpn)
+        pte = self._lookup_for_fill(proc, tid_table, node, vpn)
         assert pte is not None
         tlb.fill(vpn, pte.frame, pte.perms)
         self._count_data(node, vpn, tid)
@@ -245,10 +379,10 @@ class NumaSim:
                             return_frames=return_frames)
 
     # ------------------------------------------------------- batched mm ops
-    def apply_mm_ops(self, ops, *, engine: str = "batch",
-                     concurrency: str = "sequential",
-                     contention: Optional[ContentionModel] = None,
-                     settle: str = "auto") -> list:
+    def apply_mm_ops(self, ops, *, engine=_UNSET,
+                     concurrency=_UNSET,
+                     contention=_UNSET,
+                     settle=_UNSET) -> list:
         """Apply a sequence of ``("mmap"|"touch"|"mprotect"|"munmap"|
         "migrate", tid, ...)`` ops in order (see ``repro.core.mm_batch``).
         ``engine="batch"`` runs the vectorized mm engine, byte-identical to
@@ -260,19 +394,22 @@ class NumaSim:
         semantics.  ``settle`` picks the settlement engine for contended
         rounds (``repro.core.shootdown_batch``): ``"auto"`` vectorizes
         when the model supports it, ``"sequential"`` forces the scalar
-        model loops — bit-identical either way."""
+        model loops — bit-identical either way.
+
+        Knob defaults come from ``self.config`` (a ``SimConfig``); the
+        explicit kwargs are deprecated per-call overrides."""
         from .mm_batch import apply_mm_ops as _apply
         return _apply(self, ops, engine=engine, concurrency=concurrency,
                       contention=contention, settle=settle)
 
     def mmap_batch(self, tid: int, sizes, *, perms: int = PERM_RW,
-                   engine: str = "batch"):
+                   engine=_UNSET):
         """Batched ``mmap``: one VMA per entry of ``sizes``, in order."""
         from .mm_batch import mmap_batch as _mmap_batch
         return _mmap_batch(self, tid, sizes, perms=perms, engine=engine)
 
     def mprotect_batch(self, tid: int, starts, n_pages, perms, *,
-                       engine: str = "batch") -> None:
+                       engine=_UNSET) -> None:
         """Batched ``mprotect`` over parallel (start, n_pages, perms)
         arrays; scalars broadcast.  Counters, modeled nanoseconds, TLB and
         page-table state are byte-identical to the scalar loop."""
@@ -280,13 +417,13 @@ class NumaSim:
         _mprotect_batch(self, tid, starts, n_pages, perms, engine=engine)
 
     def munmap_batch(self, tid: int, starts, n_pages, *,
-                     engine: str = "batch") -> None:
+                     engine=_UNSET) -> None:
         """Batched ``munmap`` over parallel (start, n_pages) arrays."""
         from .mm_batch import munmap_batch as _munmap_batch
         _munmap_batch(self, tid, starts, n_pages, engine=engine)
 
     def _count_data(self, node: int, vpn: int, tid: int) -> None:
-        entry = self._oracle.get(vpn)
+        entry = self.process_of(tid).oracle.get(vpn)
         if entry is None:
             return
         # oracle stores (frame, perms); data node tracked separately
@@ -311,9 +448,9 @@ class NumaSim:
             return node, table.lookup(node, idx)
         return None, None
 
-    def _lookup_for_fill(self, tid_table: int, node: int,
+    def _lookup_for_fill(self, proc: Process, tid_table: int, node: int,
                          vpn: int) -> Optional[PTE]:
-        table = self.store.get(tid_table)
+        table = proc.store.get(tid_table)
         if table is None:
             return None
         if self.policy is Policy.LINUX:
@@ -325,16 +462,18 @@ class NumaSim:
         ctr, c = self.counters, self.cost
         ctr.faults += 1
         self._charge(tid, c.fault_fixed_ns)
-        vma = self.find_vma(vpn)
+        proc = self.process_of(tid)
+        store = proc.store
+        vma = self.find_vma(vpn, proc.asid)
         if vma is None:
             raise SegfaultError(f"vpn {vpn} not mapped")
         tbl_id = leaf_id(vpn)
         idx = leaf_index(vpn)
-        table = self.store.get(tbl_id)
+        table = store.get(tbl_id)
 
         if self.policy is Policy.LINUX:
             if table is None:
-                table = self.store.create(tbl_id, owner=node)  # first touch
+                table = store.create(tbl_id, owner=node)  # first touch
                 ctr.pt_pages_alloc += 1
                 self._charge(tid, c.pt_alloc_ns)
             pte = table.lookup(table.owner, idx)
@@ -344,13 +483,13 @@ class NumaSim:
 
         if self.policy is Policy.MITOSIS:
             if table is None:
-                table = self.store.create(tbl_id, owner=node)
+                table = store.create(tbl_id, owner=node)
                 ctr.pt_pages_alloc += 1
                 self._charge(tid, c.pt_alloc_ns)
                 # eager: replicate the table page on every node immediately
                 for n in range(self.topo.n_nodes):
                     if n not in table.copies:
-                        self.store.install_replica(table, n)
+                        store.install_replica(table, n)
                         ctr.pt_pages_alloc += 1
                         self._charge(tid, c.pt_alloc_ns)
             pte = table.lookup(node, idx)
@@ -368,11 +507,11 @@ class NumaSim:
         # ---- NUMAPTE --------------------------------------------------------
         owner = vma.owner
         if table is None:
-            table = self.store.create(tbl_id, owner=owner)
+            table = store.create(tbl_id, owner=owner)
             ctr.pt_pages_alloc += 1
             self._charge(tid, c.pt_alloc_ns)
         if node not in table.copies:
-            self.store.install_replica(table, node)
+            store.install_replica(table, node)
             ctr.pt_pages_alloc += 1
             self._charge(tid, c.pt_alloc_ns)
         owner_pte = table.lookup(table.owner, idx)
@@ -438,53 +577,54 @@ class NumaSim:
             ctr.replica_writes_remote += 1
             self._charge(tid, c.pte_write_remote_ns)
         vpn = leaf_base_vpn(table.tid) + idx
-        self._oracle[vpn] = (frame, vma.perms)
-        if not hasattr(self, "_frame_nodes"):
-            self._frame_nodes: Dict[int, int] = {}
+        self.process_of(tid).oracle[vpn] = (frame, vma.perms)
         self._frame_nodes[frame] = toucher_node
         return pte
 
     # ------------------------------------------------------------- mutation
     def mprotect(self, tid: int, start_vpn: int, n_pages: int,
                  perms: int) -> None:
+        proc = self.process_of(tid)
         self._charge(tid, self.cost.syscall_fixed_ns)
         touched_tables = self._update_range(
             tid, start_vpn, n_pages,
             lambda pte: dataclasses.replace(pte, perms=perms))
+        oracle = proc.oracle
         for vpn in range(start_vpn, start_vpn + n_pages):
-            if vpn in self._oracle:
-                self._oracle[vpn] = (self._oracle[vpn][0], perms)
-        vma = self.find_vma(start_vpn)
+            if vpn in oracle:
+                oracle[vpn] = (oracle[vpn][0], perms)
+        vma = self.find_vma(start_vpn, proc.asid)
         if vma is not None and vma.start_vpn == start_vpn and vma.n_pages == n_pages:
             vma.perms = perms
         self._shootdown(tid, start_vpn, start_vpn + n_pages, touched_tables)
 
     def munmap(self, tid: int, start_vpn: int, n_pages: int) -> None:
         ctr, c = self.counters, self.cost
+        proc = self.process_of(tid)
         self._charge(tid, c.syscall_fixed_ns)
         end_vpn = start_vpn + n_pages
         touched_tables = self._update_range(tid, start_vpn, n_pages, None)
         # free data pages
         for vpn in range(start_vpn, end_vpn):
-            entry = self._oracle.pop(vpn, None)
+            entry = proc.oracle.pop(vpn, None)
             if entry is not None:
                 ctr.data_pages_freed += 1
         # shootdown BEFORE page-table pages are freed (kernel ordering)
         self._shootdown(tid, start_vpn, end_vpn, touched_tables)
         # tear down empty leaf tables (and their replicas)
         for tbl_id in touched_tables:
-            table = self.store.get(tbl_id)
+            table = proc.store.get(tbl_id)
             if table is not None and table.empty():
                 freed = table.n_copies()
                 ctr.pt_pages_freed += freed
                 self._charge(tid, c.pt_teardown_ns * freed)
-                self.store.drop_table(tbl_id)
+                proc.store.drop_table(tbl_id)
         # shrink VMA list
-        self._carve_vmas(start_vpn, end_vpn)
+        self._carve_vmas(proc, start_vpn, end_vpn)
 
-    def _carve_vmas(self, start: int, end: int) -> None:
+    def _carve_vmas(self, proc: Process, start: int, end: int) -> None:
         out: List[VMA] = []
-        for vma in self.vmas:
+        for vma in proc.vmas:
             if vma.end_vpn <= start or vma.start_vpn >= end:
                 out.append(vma)
                 continue
@@ -492,20 +632,21 @@ class NumaSim:
                 out.append(dataclasses.replace(vma, end_vpn=start))
             if vma.end_vpn > end:
                 out.append(dataclasses.replace(vma, start_vpn=end))
-        self.vmas = out
+        proc.vmas = out
 
     def _update_range(self, tid: int, start_vpn: int, n_pages: int,
                       fn) -> List[int]:
         """Apply fn (None = clear) to every present PTE in range, in the
         canonical copy and per-policy replicas.  Returns touched table ids."""
         ctr, c = self.counters, self.cost
+        store = self.process_of(tid).store
         node = self.thread_node(tid)
         end_vpn = start_vpn + n_pages
         touched: List[int] = []
         t0 = leaf_id(start_vpn)
         t1 = leaf_id(end_vpn - 1)
         for tbl_id in range(t0, t1 + 1):
-            table = self.store.get(tbl_id)
+            table = store.get(tbl_id)
             if table is None:
                 continue
             touched.append(tbl_id)
@@ -544,16 +685,25 @@ class NumaSim:
     # ------------------------------------------------------------ shootdowns
     def _shootdown(self, tid: int, start_vpn: int, end_vpn: int,
                    touched_tables: Sequence[int]) -> None:
-        """IPI round for a PTE-range change, with numaPTE's sharer filter."""
+        """IPI round for a PTE-range change, with numaPTE's sharer filter.
+
+        Fan-out is per-process: the unfiltered (Linux) target set is the
+        initiating process's ``mm_cpumask`` — so on shared CPUs the IPIs
+        interrupt *every* resident thread, other tenants' included (the
+        charging loops below walk ``_cpu_threads``, which is machine-global
+        on purpose) — while numaPTE's sharer filter cuts it down to nodes
+        that actually cached this process's tables.
+        """
         ctr, c = self.counters, self.cost
         me = self.threads[tid]
+        proc = self.processes[me.asid]
         my_node = self.topo.node_of_cpu(me.cpu)
         # cores that currently run a thread of this process (mm_cpumask)
-        running_cpus = {t.cpu for t in self.threads.values()}
+        running_cpus = proc.cpus()
         if self.tlb_filter:
             allowed_nodes = 0
             for tbl_id in touched_tables:
-                table = self.store.get(tbl_id)
+                table = proc.store.get(tbl_id)
                 if table is not None:
                     allowed_nodes |= table.sharers
             targets = {cpu for cpu in running_cpus
@@ -585,19 +735,22 @@ class NumaSim:
             self._charge(tid, base)
             if s.extra_wait_ns:
                 self._charge(tid, s.extra_wait_ns)
-            self.tlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
+            ptlbs = self._asid_tlbs[me.asid]
+            ptlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
             for cpu in targets:
-                self.tlbs[cpu].invalidate_range(start_vpn, end_vpn)
+                ptlbs[cpu].invalidate_range(start_vpn, end_vpn)
             charge_responders(
                 s, self.contention.handler_ns, targets, self._cpu_threads,
                 lambda thr: thr.time_ns,
                 lambda thr, v: setattr(thr, "time_ns", v))
             return
         self._charge(tid, base)
-        # apply invalidations on targets (and self)
-        self.tlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
+        # apply invalidations on targets (and self): tag-selective — only
+        # the initiating process's ASID partition drops entries
+        ptlbs = self._asid_tlbs[me.asid]
+        ptlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
         for cpu in targets:
-            self.tlbs[cpu].invalidate_range(start_vpn, end_vpn)
+            ptlbs[cpu].invalidate_range(start_vpn, end_vpn)
             for t in self._cpu_threads.get(cpu, ()):
                 t.time_ns += IPI_RECEIVE_NS
                 t.ipis_received += 1
@@ -623,15 +776,18 @@ class NumaSim:
     def migrate_thread(self, tid: int, new_cpu: int) -> None:
         self.topo.validate_cpu(new_cpu)
         thr = self.threads[tid]
+        proc = self.processes[thr.asid]
         old_cpu = thr.cpu
         thr.cpu = new_cpu
         self._cpu_threads[old_cpu].remove(thr)
         self._cpu_threads.setdefault(new_cpu, []).append(thr)
-        self.tlbs.setdefault(new_cpu, TLB(self.tlb_entries))
-        # context switch on the old cpu flushes its (non-PCID) TLB state;
-        # conservatively drop this process's entries there.
-        if all(t.cpu != old_cpu for t in self.threads.values()):
-            self.tlbs[old_cpu].flush()
+        self.tlb_partition(new_cpu, thr.asid)
+        # Entries are ASID-tagged, so the context switch itself flushes
+        # nothing for the processes staying resident (the PCID win); we
+        # conservatively drop *this* process's partition once its last
+        # thread leaves the cpu (its tags won't be refreshed there).
+        if all(t.cpu != old_cpu for t in proc.threads.values()):
+            self._asid_tlbs[thr.asid][old_cpu].flush()
 
     # ------------------------------------------------------------ reporting
     def total_time_ns(self) -> float:
@@ -641,32 +797,47 @@ class NumaSim:
         return self.threads[tid].time_ns
 
     def pt_footprint_bytes(self) -> int:
-        return self.store.footprint_bytes()
+        return sum(p.store.footprint_bytes() for p in self.processes.values())
 
     # ----------------------------------------------------------- validation
     def check_invariants(self) -> None:
-        """Raise AssertionError if any paper invariant is violated."""
-        for table in self.store.tables.values():
-            owner_copy = table.copies.get(table.owner, {})
-            for node, copy in table.copies.items():
-                assert table.is_sharer(node), \
-                    f"node {node} holds copy of T{table.tid} but not a sharer"
-                if self.policy is Policy.NUMAPTE and node != table.owner:
-                    for i, pte in copy.items():
-                        assert i in owner_copy, \
-                            f"I1 violated: T{table.tid}[{i}] on {node} not on owner"
-                        o = owner_copy[i]
-                        assert (pte.frame, pte.perms) == (o.frame, o.perms), \
-                            f"replica divergence at T{table.tid}[{i}]"
-        for cpu, tlb in self.tlbs.items():
-            node = self.topo.node_of_cpu(cpu)
-            for vpn in tlb.vpns():
-                table = self.store.get(leaf_id(vpn))
-                assert table is not None, f"I4: TLB holds unmapped vpn {vpn}"
-                if self.policy is not Policy.LINUX:
+        """Raise AssertionError if any paper invariant is violated.
+
+        Every invariant is checked per address space: a (cpu, asid) TLB
+        partition is validated against *its own* process's page tables and
+        oracle, which is also the cross-process isolation property — a
+        partition tagged with ASID a can never satisfy I3/I4 from another
+        process's mappings.
+        """
+        for proc in self.processes.values():
+            for table in proc.store.tables.values():
+                owner_copy = table.copies.get(table.owner, {})
+                for node, copy in table.copies.items():
                     assert table.is_sharer(node), \
-                        f"I2 violated: cpu {cpu} caches vpn {vpn}, node {node}" \
-                        f" not in sharers of T{table.tid}"
-                frame, perms = tlb.lookup(vpn)
-                assert vpn in self._oracle, f"I4: stale TLB for freed vpn {vpn}"
-                assert self._oracle[vpn][0] == frame, f"I3: wrong frame {vpn}"
+                        f"node {node} holds copy of T{table.tid} but not a sharer"
+                    if self.policy is Policy.NUMAPTE and node != table.owner:
+                        for i, pte in copy.items():
+                            assert i in owner_copy, \
+                                f"I1 violated: T{table.tid}[{i}] on {node} not on owner"
+                            o = owner_copy[i]
+                            assert (pte.frame, pte.perms) == (o.frame, o.perms), \
+                                f"replica divergence at T{table.tid}[{i}]"
+        for asid, parts in self._asid_tlbs.items():
+            proc = self.processes[asid]
+            for cpu, tlb in parts.items():
+                assert tlb.asid == asid, \
+                    f"partition ({cpu}, {asid}) tagged {tlb.asid}"
+                node = self.topo.node_of_cpu(cpu)
+                for vpn in tlb.vpns():
+                    table = proc.store.get(leaf_id(vpn))
+                    assert table is not None, \
+                        f"I4: TLB holds unmapped vpn {vpn} (asid {asid})"
+                    if self.policy is not Policy.LINUX:
+                        assert table.is_sharer(node), \
+                            f"I2 violated: cpu {cpu} caches vpn {vpn}, node {node}" \
+                            f" not in sharers of T{table.tid} (asid {asid})"
+                    frame, perms = tlb.lookup(vpn)
+                    assert vpn in proc.oracle, \
+                        f"I4: stale TLB for freed vpn {vpn} (asid {asid})"
+                    assert proc.oracle[vpn][0] == frame, \
+                        f"I3: wrong frame {vpn} (asid {asid})"

@@ -4,6 +4,18 @@ Testbed (Section 4.1): 64-entry private L1 TLB + 1024-entry unified L2 TLB
 per core.  We model one unified 1088-entry structure per hardware thread;
 replacement is FIFO (insertion order), which is close enough to the
 pseudo-LRU of real L2 TLBs for the event counts we care about.
+
+ASID/PCID tagging: every entry belongs to exactly one address space, and a
+hardware thread may cache translations of several processes at once (the
+PCID feature real kernels use to make context switches flush-free).  We
+model the tagged TLB as one ``TLB`` instance per (cpu, asid) — the ``asid``
+slot is the tag shared by every entry in the instance — so lookups and
+invalidations are tag-selective by construction: a shootdown for process P
+only ever touches P's partition, and a context switch to another resident
+process invalidates nothing.  Cross-ASID capacity contention (tenants
+evicting each other's entries) is not modeled; each partition keeps its own
+FIFO, which also keeps a tenant's TLB behaviour independent of who shares
+its CPUs.
 """
 from __future__ import annotations
 
@@ -13,10 +25,11 @@ DEFAULT_TLB_ENTRIES = 1088  # 64 L1 + 1024 L2
 
 
 class TLB:
-    __slots__ = ("capacity", "entries")
+    __slots__ = ("capacity", "entries", "asid")
 
-    def __init__(self, capacity: int = DEFAULT_TLB_ENTRIES):
+    def __init__(self, capacity: int = DEFAULT_TLB_ENTRIES, asid: int = 0):
         self.capacity = capacity
+        self.asid = asid  # the PCID tag shared by every entry below
         # vpn -> (frame, perms); dict preserves insertion order => FIFO evict
         self.entries: Dict[int, Tuple[int, int]] = {}
 

@@ -29,10 +29,27 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from .config import SimConfig, _UNSET, _warn_deprecated
 from .pagetable import PERM_R, PERM_RW, PTES_PER_TABLE, Policy
 from .sim import NumaSim
 
 PAGES_PER_GB_DEFAULT = 256
+
+
+def _resolve_engine(sim: NumaSim, engine, fn: str) -> str:
+    """Engine for a workload phase: the sim's ``SimConfig.engine`` unless
+    the (deprecated) per-call kwarg overrides it."""
+    if engine is _UNSET:
+        return sim.config.engine
+    _warn_deprecated(f"{fn}(engine=...)", "SimConfig(engine=...)")
+    return engine
+
+
+def _apply_engine(sim: NumaSim, ops, engine: str) -> list:
+    """apply_mm_ops with an already-resolved engine (no deprecation shim)."""
+    from .mm_batch import _apply_resolved
+    return _apply_resolved(sim, ops, engine, sim.config.concurrency,
+                           None, sim.config.settle)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,16 +106,22 @@ class AppLayout:
 def build_app(sim: NumaSim, spec: AppSpec, *,
               pages_per_gb: int = PAGES_PER_GB_DEFAULT,
               touch_stride: int = 1,
-              engine: str = "batch") -> Tuple[AppLayout, float]:
+              engine=_UNSET,
+              process=None) -> Tuple[AppLayout, float]:
     """mmap + first-touch the dataset (the paper's loading phase).
 
     Returns (layout, loading_time_ns) where loading time is the sum of the
-    loading threads' modeled time for this phase.  ``engine="batch"`` runs
-    the first-touch streams through the vectorized engine (byte-identical
-    counters/times); ``engine="scalar"`` keeps the per-page reference loop.
+    loading threads' modeled time for this phase.  The engine comes from
+    ``sim.config.engine``: ``"batch"`` runs the first-touch streams through
+    the vectorized engine (byte-identical counters/times); ``"scalar"``
+    keeps the per-page reference loop.  ``process`` spawns the app's
+    workers in that address space (a tenant); default is the sim's
+    ASID-0 process.
     """
+    engine = _resolve_engine(sim, engine, "build_app")
     n_nodes = sim.topo.n_nodes
-    threads = {node: sim.spawn_thread(node * sim.topo.hw_threads_per_node)
+    threads = {node: sim.spawn_thread(node * sim.topo.hw_threads_per_node,
+                                      process=process)
                for node in range(n_nodes)}
     total_pages = int(spec.dataset_gb * pages_per_gb)
     t_before = {n: sim.thread_time_ns(t) for n, t in threads.items()}
@@ -182,14 +205,15 @@ def _exec_stream_vpns(kinds, kind_draw, offs, node, n_nodes,
 def run_exec_phase(sim: NumaSim, layout: AppLayout, *,
                    accesses_per_thread: int = 50_000,
                    seed: int = 0,
-                   engine: str = "batch") -> float:
+                   engine=_UNSET) -> float:
     """Execution phase: every node's worker issues an access stream with the
     app's sharing profile.  Returns summed modeled thread time (ns).
 
     The stream (rng draws and region selection) is identical under both
-    engines; ``engine="batch"`` assembles it as one array per thread and
-    runs it through ``NumaSim.touch_batch``, which is differentially tested
-    to be byte-identical to the scalar loop."""
+    engines (``sim.config.engine``); ``"batch"`` assembles it as one array
+    per thread and runs it through ``NumaSim.touch_batch``, which is
+    differentially tested to be byte-identical to the scalar loop."""
+    engine = _resolve_engine(sim, engine, "run_exec_phase")
     spec = layout.spec
     rng = np.random.default_rng(seed)
     n_nodes = sim.topo.n_nodes
@@ -244,34 +268,36 @@ def _regions_by_worker(layout: AppLayout) -> Dict[int, List[Region]]:
 
 
 def run_mprotect_phase(sim: NumaSim, layout: AppLayout, *,
-                       engine: str = "batch") -> float:
+                       engine=_UNSET) -> float:
     """Protection pass over the whole dataset (a GC / COW-checkpoint
     analogue): every worker write-protects the regions it owns, then
     restores them — two full-range mprotects per region, exercising the
     replica-coherence UPDATE path the paper's Figs 1/9 measure.  Returns
     summed modeled thread time (ns).  ``engine="batch"`` runs on
     ``NumaSim.mprotect_batch`` (byte-identical to ``engine="scalar"``)."""
+    engine = _resolve_engine(sim, engine, "run_mprotect_phase")
     t_before = {n: sim.thread_time_ns(t) for n, t in layout.threads.items()}
     for node, regions in _regions_by_worker(layout).items():
         tid = layout.threads[node]
         ops = [("mprotect", tid, r.start_vpn, r.n_pages, perms)
                for r in regions
                for perms in (PERM_R, PERM_RW)]
-        sim.apply_mm_ops(ops, engine=engine)
+        _apply_engine(sim, ops, engine)
     return sum(sim.thread_time_ns(t) - t_before[n]
                for n, t in layout.threads.items())
 
 
 def run_teardown_phase(sim: NumaSim, layout: AppLayout, *,
-                       engine: str = "batch") -> float:
+                       engine=_UNSET) -> float:
     """Exit-time teardown: every worker munmaps the regions it owns
     (the paper's munmap / page-table-teardown path, Figs 9/10).  Returns
     summed modeled thread time (ns)."""
+    engine = _resolve_engine(sim, engine, "run_teardown_phase")
     t_before = {n: sim.thread_time_ns(t) for n, t in layout.threads.items()}
     for node, regions in _regions_by_worker(layout).items():
         tid = layout.threads[node]
-        sim.apply_mm_ops([("munmap", tid, r.start_vpn, r.n_pages)
-                          for r in regions], engine=engine)
+        _apply_engine(sim, [("munmap", tid, r.start_vpn, r.n_pages)
+                            for r in regions], engine)
     return sum(sim.thread_time_ns(t) - t_before[n]
                for n, t in layout.threads.items())
 
@@ -283,35 +309,45 @@ def run_app(policy: Policy, spec: AppSpec, topo, *,
             accesses_per_thread: int = 50_000,
             touch_stride: int = 1,
             seed: int = 0,
-            engine: str = "batch",
-            mm_phases: bool = False):
+            engine=_UNSET,
+            mm_phases: bool = False,
+            config: "SimConfig" = None):
     """Build + run one app under one policy.  Returns a result dict.
+
+    Simulator knobs come from ``config`` (a :class:`SimConfig`; its
+    ``policy`` field is overridden by the positional ``policy``); when
+    omitted, one is built from ``prefetch_degree``/``tlb_filter``.  The
+    per-call ``engine=`` kwarg is deprecated — set
+    ``SimConfig(engine=...)`` instead.
 
     ``mm_phases=True`` appends the memory-management phases (a full
     mprotect protection pass, then exit-time munmap teardown) after the
     execution phase, adding ``mprotect_ns`` / ``teardown_ns`` to the
     result; page-table footprints are recorded before teardown."""
-    sim = NumaSim(topo, policy, prefetch_degree=prefetch_degree,
-                  tlb_filter=tlb_filter)
+    cfg = config if config is not None else \
+        SimConfig(prefetch_degree=prefetch_degree, tlb_filter=tlb_filter)
+    cfg = cfg.replace(policy=policy)
+    if engine is not _UNSET:
+        _warn_deprecated("run_app(engine=...)", "SimConfig(engine=...)")
+        cfg = cfg.replace(engine=engine)
+    sim = NumaSim(topo, config=cfg)
     layout, loading_ns = build_app(sim, spec, pages_per_gb=pages_per_gb,
-                                   touch_stride=touch_stride, engine=engine)
+                                   touch_stride=touch_stride)
     exec_ns = run_exec_phase(sim, layout,
                              accesses_per_thread=accesses_per_thread,
-                             seed=seed, engine=engine)
+                             seed=seed)
     result = {
         "app": spec.name,
-        "policy": policy.value,
+        "policy": sim.policy.value,
         "loading_ns": loading_ns,
         "exec_ns": exec_ns,
     }
     if mm_phases:
-        result["mprotect_ns"] = run_mprotect_phase(sim, layout,
-                                                   engine=engine)
+        result["mprotect_ns"] = run_mprotect_phase(sim, layout)
     result["pt_bytes"] = sim.pt_footprint_bytes()
     result["pt_bytes_single"] = sim.store.footprint_bytes_single_copy()
     if mm_phases:
-        result["teardown_ns"] = run_teardown_phase(sim, layout,
-                                                   engine=engine)
+        result["teardown_ns"] = run_teardown_phase(sim, layout)
     result["dataset_bytes"] = layout.total_pages * 4096
     result["counters"] = dataclasses.asdict(sim.counters)
     return result

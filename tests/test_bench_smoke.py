@@ -31,6 +31,7 @@ def test_bench_json_schema(tmp_path):
         # those knobs; row_types summarizes row kinds
         assert d["concurrency"] is None
         assert d["spinners"] is None
+        assert d["tenants"] is None
         assert d["row_types"] == ["data"]
         assert d["error"] is None
         assert d["elapsed_s"] >= 0
@@ -93,6 +94,48 @@ def test_fig07_and_roofline_batch_engine_rows_match_scalar():
     assert cfg["RPI-LD-M(mitosis)"] < 1.0          # replication avoids it
     assert cfg["RPI-LD-NP(numapte-pf9)"] <= \
         cfg["RPI-LD-N(numapte)"]                   # prefetch recovers lazy
+
+
+def test_colocation_artifact(tmp_path):
+    """Schema v5: the multi-tenant colocation benchmark — the ``tenants``
+    knob recorded in the payload (null = benchmark default),
+    ``row_type="colocation"`` rows, and the isolation story: numaPTE's
+    sharer filter contains the storm so the victims never move, while the
+    unfiltered policies all interrupt the co-located tenants."""
+    written = run_benchmarks(["colocation"], quick=True,
+                             outdir=str(tmp_path), strict=True, tenants=2)
+    d = _load(written["colocation"])
+    assert d["schema_version"] == SCHEMA_VERSION
+    assert d["tenants"] == 2
+    assert d["row_types"] == ["colocation"]
+    assert d["error"] is None
+    json.dumps(d)
+    rows = {r["policy"]: r for r in d["rows"]}
+    assert {"linux", "mitosis", "numapte-nofilter", "numapte"} <= set(rows)
+    for r in d["rows"]:
+        assert r["row_type"] == "colocation"
+        assert r["tenants"] == 2
+        for field in ("victim_slowdown", "victim_interrupt_ns",
+                      "victim_ipis", "storm_ns_per_op", "ipis_remote",
+                      "ipis_filtered", "responder_delay_ns",
+                      "ipis_coalesced"):
+            assert field in r, field
+    numapte = rows["numapte"]
+    assert numapte["victim_slowdown"] == 1.0
+    assert numapte["victim_interrupt_ns"] == 0.0
+    assert numapte["victim_ipis"] == 0
+    assert numapte["responder_delay_ns"] == 0.0
+    assert numapte["ipis_filtered"] > 0
+    for name in ("linux", "mitosis", "numapte-nofilter"):
+        assert rows[name]["victim_slowdown"] > 1.0, name
+        assert rows[name]["victim_ipis"] > 0, name
+        assert rows[name]["responder_delay_ns"] > 0, name
+    # without --tenants the payload records null (the benchmark default)
+    written = run_benchmarks(["colocation"], quick=True,
+                             outdir=str(tmp_path / "dflt"), strict=True)
+    d = _load(written["colocation"])
+    assert d["tenants"] is None
+    assert all(r["tenants"] == 3 for r in d["rows"])   # quick default
 
 
 def test_fig13_numapte_beats_linux(tmp_path):

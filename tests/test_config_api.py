@@ -1,0 +1,226 @@
+"""The ``SimConfig``/``make_sim`` API: equivalence, registries, shims.
+
+The PR-6 API redesign consolidates the knob sprawl (``NumaSim(policy=,
+contention=, settle_engine=, ...)``, ``apply_mm_ops(engine=,
+concurrency=, settle=)``, ``run_app(engine=)``) behind one frozen
+``SimConfig`` dataclass and a ``make_sim`` factory with string-registry
+lookups.  These tests pin the redesign's contract:
+
+* a ``SimConfig``-built sim replays programs **byte-identically** to the
+  classic kwarg-built ``NumaSim`` (counters, float-exact thread times,
+  TLB insertion order) — the redesign changes no semantics;
+* registry strings (``POLICIES``, ``CONTENTION_MODELS``) resolve, are
+  validated at construction, and names instantiate a fresh contention
+  model per ``make_sim`` (no accidentally shared busy horizons);
+* every legacy kwarg still works but emits ``DeprecationWarning``, and
+  the legacy spelling is byte-identical to its config equivalent;
+* the Process/ASID model's always-on isolation smoke: two tenants on
+  shared CPUs keep disjoint frames/oracles over identical VPN ranges,
+  munmap invalidation is ASID-tag-selective, and the Linux mm_cpumask
+  fan-out really does interrupt the co-resident tenant (the colocation
+  leak) while leaving its translations intact.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (APPS, CoalescingContention, NumaSim, Policy,
+                        QueueContention, SimConfig, build_app, make_sim,
+                        run_app, run_mprotect_phase, run_teardown_phase)
+
+from test_mm_batch_differential import (TOPO, _build, _random_choices,
+                                        assert_identical, materialize)
+
+
+# --------------------------------------------------------------------------
+# byte-identity: the redesign changes no semantics
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", [Policy.LINUX, Policy.MITOSIS,
+                                    Policy.NUMAPTE])
+def test_config_sim_byte_identical_to_legacy(policy):
+    """A SimConfig-built sim replays a random program byte-identically to
+    the classic kwarg-built NumaSim."""
+    rng = np.random.default_rng(42)
+    choices = _random_choices(rng, 24)
+    legacy = NumaSim(TOPO, policy, prefetch_degree=9, tlb_filter=True,
+                     tlb_entries=64, interference_nodes=(1,))
+    via_cfg = make_sim(TOPO, SimConfig(policy=policy, prefetch_degree=9,
+                                       tlb_filter=True, tlb_entries=64,
+                                       interference_nodes=(1,)))
+    for sim in (legacy, via_cfg):
+        for n in range(TOPO.n_nodes):
+            sim.spawn_thread(n * TOPO.hw_threads_per_node)
+    ops = materialize(choices, legacy._next_vpn)
+    legacy.apply_mm_ops(ops)
+    via_cfg.apply_mm_ops(ops)
+    assert_identical(legacy, via_cfg, f"{policy.value}/legacy-vs-config")
+    legacy.check_invariants()
+    via_cfg.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# registries + validation
+# --------------------------------------------------------------------------
+def test_string_registries_resolve():
+    cfg = SimConfig(policy="linux", contention="queue")
+    assert cfg.resolved_policy() is Policy.LINUX
+    assert isinstance(cfg.resolved_contention(), QueueContention)
+    # a registry name instantiates fresh per make_sim: two sims never
+    # share busy horizons by accident
+    a, b = make_sim(TOPO, cfg), make_sim(TOPO, cfg)
+    assert a.policy is Policy.LINUX
+    assert isinstance(a.contention, QueueContention)
+    assert a.contention is not b.contention
+    # instances pass through (deliberate sharing)
+    model = CoalescingContention()
+    shared = SimConfig(contention=model)
+    assert make_sim(TOPO, shared).contention is model
+
+
+def test_config_validation():
+    for bad in (dict(policy="sunos"), dict(contention="magic"),
+                dict(settle="warp"), dict(engine="nope"),
+                dict(concurrency="parallel")):
+        with pytest.raises(ValueError):
+            SimConfig(**bad)
+    with pytest.raises(TypeError):
+        SimConfig(policy=7)
+    # interference lists are normalized to tuples (configs are values)
+    assert SimConfig(interference_nodes=[1, 2]) == \
+        SimConfig(interference_nodes=(1, 2))
+
+
+def test_make_sim_overrides():
+    base = SimConfig(policy="numapte", prefetch_degree=9)
+    sim = make_sim(TOPO, base, concurrency="overlap")
+    assert sim.config.concurrency == "overlap"
+    assert sim.config.prefetch_degree == 9
+    assert base.concurrency == "sequential"    # base is a frozen value
+    assert make_sim(TOPO).config == SimConfig()
+    assert base.replace(engine="scalar").engine == "scalar"
+
+
+# --------------------------------------------------------------------------
+# deprecation shims: warn, but keep working byte-identically
+# --------------------------------------------------------------------------
+def test_deprecated_numasim_kwargs_warn_but_work():
+    with pytest.deprecated_call():
+        sim = NumaSim(TOPO, Policy.LINUX, contention=QueueContention())
+    assert isinstance(sim.contention, QueueContention)
+    with pytest.deprecated_call():
+        sim = NumaSim(TOPO, Policy.LINUX, settle_engine="sequential")
+    assert sim.settle_engine == "sequential"
+    # mixing config= with legacy kwargs is ambiguous — an error
+    with pytest.raises(ValueError):
+        NumaSim(TOPO, Policy.LINUX, config=SimConfig(),
+                settle_engine="sequential")
+    # the plain constructor surface stays first-class: no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sim = NumaSim(TOPO, Policy.LINUX, prefetch_degree=3,
+                      tlb_filter=False)
+    assert sim.config.prefetch_degree == 3
+
+
+def test_deprecated_apply_engine_kwarg_matches_config():
+    rng = np.random.default_rng(7)
+    choices = _random_choices(rng, 20)
+    sa, _ = _build(Policy.NUMAPTE, engine="scalar")
+    sb, _ = _build(Policy.NUMAPTE)             # config engine: batch
+    ops = materialize(choices, sa._next_vpn)
+    sa.apply_mm_ops(ops)                       # config-selected scalar
+    with pytest.deprecated_call():
+        sb.apply_mm_ops(ops, engine="scalar")  # legacy per-call override
+    assert_identical(sa, sb, "deprecated-engine-override")
+
+
+def test_deprecated_overlap_kwargs_match_config():
+    rng = np.random.default_rng(11)
+    choices = _random_choices(rng, 20)
+    ma, mb = CoalescingContention(), CoalescingContention()
+    sa, _ = _build(Policy.LINUX, concurrency="overlap", contention=ma,
+                   settle="vector")
+    sb, _ = _build(Policy.LINUX)
+    ops = materialize(choices, sa._next_vpn)
+    sa.apply_mm_ops(ops)
+    with pytest.deprecated_call():
+        sb.apply_mm_ops(ops, concurrency="overlap", contention=mb,
+                        settle="vector")
+    assert_identical(sa, sb, "deprecated-overlap-kwargs")
+
+
+def test_deprecated_workload_engine_kwargs_match_config():
+    spec = APPS["btree"]
+    sa = make_sim(TOPO, SimConfig(prefetch_degree=9, engine="scalar"))
+    la, _ = build_app(sa, spec, pages_per_gb=8)
+    mp_a = run_mprotect_phase(sa, la)
+    td_a = run_teardown_phase(sa, la)
+    sb = make_sim(TOPO, SimConfig(prefetch_degree=9))   # batch default
+    with pytest.deprecated_call():
+        lb, _ = build_app(sb, spec, pages_per_gb=8, engine="scalar")
+    with pytest.deprecated_call():
+        mp_b = run_mprotect_phase(sb, lb, engine="scalar")
+    with pytest.deprecated_call():
+        td_b = run_teardown_phase(sb, lb, engine="scalar")
+    assert mp_a == mp_b and td_a == td_b
+    assert_identical(sa, sb, "phase-engine-kwarg")
+
+
+def test_deprecated_run_app_engine_kwarg_matches_config():
+    spec = APPS["xsbench"]
+    kw = dict(accesses_per_thread=400, pages_per_gb=4)
+    a = run_app(Policy.NUMAPTE, spec, TOPO,
+                config=SimConfig(prefetch_degree=9, engine="scalar"), **kw)
+    with pytest.deprecated_call():
+        b = run_app(Policy.NUMAPTE, spec, TOPO, engine="scalar", **kw)
+    assert a == b
+
+
+# --------------------------------------------------------------------------
+# Process/ASID isolation (always-on smoke; property form lives in
+# test_core_invariants under the hypothesis extra)
+# --------------------------------------------------------------------------
+def test_process_isolation_and_colocation_leak():
+    sim = make_sim(TOPO, SimConfig(policy="linux"))
+    tenant = sim.spawn_process("tenant")
+    a = sim.spawn_thread(0)
+    b = sim.spawn_thread(0, process=tenant)    # shared CPU 0
+    a2 = sim.spawn_thread(1)                   # keeps cpu 1 in A's mask
+    c = sim.spawn_thread(1, process=tenant)    # co-resident victim
+    va = sim.mmap(a, 8)
+    vb = sim.mmap(b, 8)
+    # identical virtual range in both address spaces...
+    assert (va.start_vpn, va.end_vpn) == (vb.start_vpn, vb.end_vpn)
+    for vpn in range(va.start_vpn, va.end_vpn):
+        sim.touch(a, vpn, write=True)
+        sim.touch(b, vpn, write=True)
+        sim.touch(c, vpn)
+    # ...backed by disjoint physical frames and disjoint oracles
+    for vpn in range(va.start_vpn, va.end_vpn):
+        assert sim.processes[0].oracle[vpn][0] != tenant.oracle[vpn][0]
+    tlb_b = list(sim.tlb_partition(0, tenant.asid).entries)
+    tlb_c = list(sim.tlb_partition(1, tenant.asid).entries)
+    oracle_t = dict(tenant.oracle)
+    ipis_c = sim.threads[c].ipis_received
+    t_c = sim.threads[c].time_ns
+
+    sim.munmap(a, va.start_vpn, 8)
+
+    # the Linux fan-out targets A's mm_cpumask (cpu 1), and the charging
+    # loop interrupts every resident thread there — the co-located
+    # tenant's thread pays receive-handler time for a foreign munmap
+    assert sim.threads[c].ipis_received == ipis_c + 1
+    assert sim.threads[c].time_ns > t_c
+    # ...but the invalidation is ASID-tag-selective: the tenant's TLB
+    # partitions and oracle still hold the very vpns A just unmapped
+    assert list(sim.tlb_partition(0, tenant.asid).entries) == tlb_b
+    assert list(sim.tlb_partition(1, tenant.asid).entries) == tlb_c
+    assert dict(tenant.oracle) == oracle_t
+    assert not sim.processes[0].oracle
+    # A's own tagged entries are gone everywhere
+    for cpu, tlb in sim._asid_tlbs[0].items():
+        assert not tlb.entries, cpu
+    sim.check_invariants()

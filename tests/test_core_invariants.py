@@ -10,6 +10,14 @@ check the simulator's full invariant suite:
   I4  unmapped vpns appear in no TLB
 plus: numaPTE footprint <= Mitosis footprint; numaPTE shootdown targets
 are a subset of the unfiltered target set.
+
+All four invariants are checked *per address space* (``check_invariants``
+walks every ``(cpu, asid)`` TLB partition against its own process's
+tables and oracle), so the multi-process properties below run the same
+random programs in two tenants sharing every CPU: I2/I4 must hold for
+each ASID independently, one tenant's munmap must never drop — or leave
+— entries in the other tenant's tagged partitions, and the per-process
+oracles stay disjoint even over identical VPN ranges.
 """
 from __future__ import annotations
 
@@ -45,9 +53,22 @@ def build_sim(policy: Policy, prefetch: int, tlb_filter: bool) -> NumaSim:
     return sim
 
 
-def apply_ops(sim: NumaSim, ops) -> None:
+def build_two_tenant_sim(policy: Policy, prefetch: int,
+                         tlb_filter: bool) -> tuple:
+    """One sim, two address spaces, both resident on every CPU — the
+    shared-CPU colocation the ASID-tagged TLB partitions exist for."""
+    sim = NumaSim(TOPO, policy, prefetch_degree=prefetch,
+                  tlb_filter=tlb_filter, tlb_entries=64)
+    other = sim.spawn_process("tenant")
+    for node in range(TOPO.n_nodes):
+        sim.spawn_thread(node * TOPO.hw_threads_per_node)
+        sim.spawn_thread(node * TOPO.hw_threads_per_node, process=other)
+    return sim, other
+
+
+def apply_ops(sim: NumaSim, ops, tids=None) -> None:
     vmas = []
-    tids = list(sim.threads)
+    tids = list(tids) if tids is not None else list(sim.threads)
     for kind, ti, sel, size in ops:
         tid = tids[ti % len(tids)]
         if kind == "mmap":
@@ -84,6 +105,49 @@ def apply_ops(sim: NumaSim, ops) -> None:
 def test_invariants_random_ops(ops, policy, prefetch, tlb_filter):
     sim = build_sim(policy, prefetch, tlb_filter)
     apply_ops(sim, ops)
+    sim.check_invariants()
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=op_strategy,
+       policy=st.sampled_from(list(Policy)),
+       tlb_filter=st.booleans())
+def test_invariants_random_ops_two_tenants(ops, policy, tlb_filter):
+    """I1-I4 hold per address space when two tenants run the same random
+    program on shared CPUs: every (cpu, asid) partition is checked
+    against its own process's tables/oracle after every op."""
+    sim, other = build_two_tenant_sim(policy, 0, tlb_filter)
+    apply_ops(sim, ops, tids=list(sim.processes[0].threads))
+    apply_ops(sim, ops, tids=list(other.threads))
+    sim.check_invariants()
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=op_strategy, policy=st.sampled_from(list(Policy)))
+def test_munmap_isolates_address_spaces(ops, policy):
+    """Tagged I2/I4 across tenants: after one tenant unmaps its entire
+    address space, no CPU holds any of that tenant's ASID-tagged
+    translations — while the co-resident tenant's TLB entries and oracle
+    are byte-for-byte untouched (invalidation is tag-selective)."""
+    sim, other = build_two_tenant_sim(policy, 0, True)
+    apply_ops(sim, ops, tids=list(sim.processes[0].threads))
+    apply_ops(sim, ops, tids=list(other.threads))
+    other_tlbs = {cpu: list(tlb.entries.items())
+                  for cpu, tlb in sim._asid_tlbs[other.asid].items()}
+    other_oracle = dict(other.oracle)
+    a_tid = next(iter(sim.processes[0].threads))
+    for vma in list(sim.vmas):
+        sim.munmap(a_tid, vma.start_vpn, vma.n_pages)
+    assert not sim.processes[0].oracle
+    for cpu, tlb in sim._asid_tlbs[0].items():
+        assert not tlb.entries, \
+            f"cpu {cpu} still holds ASID-0 entries after full munmap"
+    assert dict(other.oracle) == other_oracle
+    for cpu, tlb in sim._asid_tlbs[other.asid].items():
+        assert list(tlb.entries.items()) == other_tlbs.get(cpu, []), \
+            f"tenant partition on cpu {cpu} disturbed by foreign munmap"
     sim.check_invariants()
 
 

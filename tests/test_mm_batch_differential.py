@@ -24,7 +24,8 @@ import numpy as np
 import pytest
 
 from repro.core import (NumaSim, NumaTopology, Policy, SegfaultError,
-                        run_mprotect_phase, run_teardown_phase)
+                        SimConfig, make_sim, run_mprotect_phase,
+                        run_teardown_phase)
 from repro.core.pagetable import (PERM_R, PERM_RW, PTES_PER_TABLE,
                                   next_table_aligned)
 
@@ -76,9 +77,12 @@ def assert_identical(a: NumaSim, b: NumaSim, tag="") -> None:
     assert _vma_state(a) == _vma_state(b), f"{tag}: VMA layout diverged"
 
 
-def _build(policy, *, prefetch=0, tlb_filter=True, interference=()):
-    sim = NumaSim(TOPO, policy, prefetch_degree=prefetch, tlb_entries=64,
-                  tlb_filter=tlb_filter, interference_nodes=interference)
+def _build(policy, *, prefetch=0, tlb_filter=True, interference=(),
+           engine="batch", **cfg):
+    sim = make_sim(TOPO, SimConfig(
+        policy=policy, prefetch_degree=prefetch, tlb_entries=64,
+        tlb_filter=tlb_filter, interference_nodes=interference,
+        engine=engine, **cfg))
     tids = [sim.spawn_thread(n * TOPO.hw_threads_per_node)
             for n in range(TOPO.n_nodes)]
     return sim, tids
@@ -142,17 +146,17 @@ def materialize(choices, first_vpn: int):
 def run_differential(policy, choices, *, prefetch=0, tlb_filter=True,
                      interference=(), chunk=7, tag=""):
     sa, ta = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
-                    interference=interference)
+                    interference=interference, engine="batch")
     sb, tb = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
-                    interference=interference)
+                    interference=interference, engine="scalar")
     assert ta == tb
     ops = materialize(choices, sa._next_vpn)
     # apply in chunks, asserting lockstep at every sync point: this also
     # exercises batches that start from arbitrary mid-program state.
     for i in range(0, len(ops), chunk):
         part = ops[i:i + chunk]
-        ra = sa.apply_mm_ops(part, engine="batch")
-        rb = sb.apply_mm_ops(part, engine="scalar")
+        ra = sa.apply_mm_ops(part)
+        rb = sb.apply_mm_ops(part)
         assert [(v.vma_id, v.start_vpn, v.end_vpn) if v is not None else None
                 for v in ra] == \
                [(v.vma_id, v.start_vpn, v.end_vpn) if v is not None else None
@@ -289,8 +293,8 @@ def test_segfault_mid_batch_leaves_scalar_partial_state(policy):
     """A touch op hitting a hole mid-batch raises SegfaultError after
     applying exactly the partial state (including pending IPI-receive
     settlements) the scalar sequence would have left."""
-    sa, ta = _build(policy)
-    sb, tb = _build(policy)
+    sa, ta = _build(policy, engine="batch")
+    sb, tb = _build(policy, engine="scalar")
     va = sa.mmap(ta[0], 8)
     vb = sb.mmap(tb[0], 8)
     hole = va.end_vpn + 99_999
@@ -303,9 +307,9 @@ def test_segfault_mid_batch_leaves_scalar_partial_state(policy):
              ("touch", tb[1], [vb.start_vpn, hole]),
              ("munmap", tb[0], vb.start_vpn, 8)]
     with pytest.raises(SegfaultError):
-        sa.apply_mm_ops(ops_a, engine="batch")
+        sa.apply_mm_ops(ops_a)
     with pytest.raises(SegfaultError):
-        sb.apply_mm_ops(ops_b, engine="scalar")
+        sb.apply_mm_ops(ops_b)
     assert_identical(sa, sb, f"{policy.value}/segfault")
 
 
@@ -318,10 +322,11 @@ def test_workload_mm_phases_batch_matches_scalar(policy):
     spec = APPS["hashjoin"]
     sims = {}
     for eng in ("batch", "scalar"):
-        sim = NumaSim(TOPO, policy, prefetch_degree=9)
-        layout, _ = build_app(sim, spec, pages_per_gb=16, engine=eng)
-        mp = run_mprotect_phase(sim, layout, engine=eng)
-        td = run_teardown_phase(sim, layout, engine=eng)
+        sim = make_sim(TOPO, SimConfig(policy=policy, prefetch_degree=9,
+                                       engine=eng))
+        layout, _ = build_app(sim, spec, pages_per_gb=16)
+        mp = run_mprotect_phase(sim, layout)
+        td = run_teardown_phase(sim, layout)
         sims[eng] = (sim, mp, td)
     sim_b, mp_b, td_b = sims["batch"]
     sim_s, mp_s, td_s = sims["scalar"]
@@ -348,14 +353,14 @@ def test_mmap_batch_layout_matches_scalar():
 def test_numpy_scalar_write_mask_matches_batch():
     """A 0-d / numpy-bool write mask must broadcast over the whole vpn
     array in the scalar reference, exactly like the batch engine."""
-    sa, ta = _build(Policy.NUMAPTE)
-    sb, tb = _build(Policy.NUMAPTE)
+    sa, ta = _build(Policy.NUMAPTE, engine="batch")
+    sb, tb = _build(Policy.NUMAPTE, engine="scalar")
     va = sa.mmap(ta[0], 8)
     sb.mmap(tb[0], 8)
     vpns = list(range(va.start_vpn, va.end_vpn))
     for wm in (np.True_, np.asarray(True), np.asarray([True] * 8)):
-        sa.apply_mm_ops([("touch", ta[0], vpns, wm)], engine="batch")
-        sb.apply_mm_ops([("touch", tb[0], vpns, wm)], engine="scalar")
+        sa.apply_mm_ops([("touch", ta[0], vpns, wm)])
+        sb.apply_mm_ops([("touch", tb[0], vpns, wm)])
         assert_identical(sa, sb, f"wm={type(wm).__name__}")
     assert sa.counters.first_touches == 8
 
@@ -366,8 +371,8 @@ def test_zero_length_ops_match_scalar(policy, filt):
     """Zero-length mprotect/munmap at an unaligned start still touches the
     straddled leaf table in the scalar path (and so shoots down against
     its sharer mask) — the batch engine must reproduce that exactly."""
-    sa, ta = _build(policy, tlb_filter=filt)
-    sb, tb = _build(policy, tlb_filter=filt)
+    sa, ta = _build(policy, tlb_filter=filt, engine="batch")
+    sb, tb = _build(policy, tlb_filter=filt, engine="scalar")
     va = sa.mmap(ta[0], 8)
     sb.mmap(tb[0], 8)
     for sim, tids in ((sa, ta), (sb, tb)):
@@ -378,8 +383,8 @@ def test_zero_length_ops_match_scalar(policy, filt):
              ("munmap", ta[0], va.start_vpn, 0)]   # aligned: no table
     ops_b = [("munmap", tb[0], mid, 0), ("mprotect", tb[0], mid, 0, PERM_R),
              ("munmap", tb[0], va.start_vpn, 0)]
-    sa.apply_mm_ops(ops_a, engine="batch")
-    sb.apply_mm_ops(ops_b, engine="scalar")
+    sa.apply_mm_ops(ops_a)
+    sb.apply_mm_ops(ops_b)
     assert_identical(sa, sb, f"{policy.value}/zero-length")
 
 
@@ -388,4 +393,4 @@ def test_apply_mm_ops_rejects_unknown_ops():
     with pytest.raises(ValueError):
         sim.apply_mm_ops([("frobnicate", tids[0], 1)])
     with pytest.raises(ValueError):
-        sim.apply_mm_ops([("mmap", tids[0], 1)], engine="nope")
+        SimConfig(engine="nope")

@@ -32,8 +32,8 @@ import numpy as np
 import pytest
 
 from repro.core import (CoalescingContention, NullContention, NumaSim,
-                        PAPER_8SOCKET, Policy, QueueContention,
-                        supports_vector)
+                        PAPER_8SOCKET, Policy, QueueContention, SimConfig,
+                        make_sim, supports_vector)
 
 from test_mm_batch_differential import (POLICIES, _build, _random_choices,
                                         assert_identical, materialize)
@@ -65,20 +65,21 @@ def run_settle_differential(policy, choices, *, model_cls,
     settles through the vectorized engine (``auto`` resolves to it for
     the stock models), side B through the forced-sequential model loops.
     States — sim and model — must stay byte-identical at every sync."""
-    sa, _ = _build(policy, tlb_filter=tlb_filter)
-    sb, _ = _build(policy, tlb_filter=tlb_filter)
     ma, mb = model_cls(), model_cls()
     vector_ok = supports_vector(ma)
+    sa, _ = _build(policy, tlb_filter=tlb_filter, engine=engines[0],
+                   concurrency="overlap", contention=ma,
+                   settle="vector" if vector_ok else "auto")
+    sb, _ = _build(policy, tlb_filter=tlb_filter, engine=engines[1],
+                   concurrency="overlap", contention=mb,
+                   settle="sequential")
     ops = materialize(choices, sa._next_vpn)
     for i in range(0, len(ops), chunk):
         part = ops[i:i + chunk]
-        sa.apply_mm_ops(part, engine=engines[0], concurrency="overlap",
-                        contention=ma,
-                        settle="vector" if vector_ok else "auto")
+        sa.apply_mm_ops(part)
         assert sa.last_settle_engine == \
             ("vector" if vector_ok else "sequential")
-        sb.apply_mm_ops(part, engine=engines[1], concurrency="overlap",
-                        contention=mb, settle="sequential")
+        sb.apply_mm_ops(part)
         assert sb.last_settle_engine == "sequential"
         assert_identical(sa, sb, f"{tag}/chunk{i}")
         assert_model_state_identical(ma, mb, f"{tag}/chunk{i}")
@@ -152,15 +153,15 @@ def test_vector_settlement_custom_handler_ns():
         for seed in range(2):
             rng = np.random.default_rng(600_000 + seed)
             choices = _random_choices(rng, 14)
-            sa, _ = _build(Policy.LINUX)
-            sb, _ = _build(Policy.LINUX)
             ma = model_cls(handler_ns=123.0)
             mb = model_cls(handler_ns=123.0)
+            sa, _ = _build(Policy.LINUX, concurrency="overlap",
+                           contention=ma, settle="vector")
+            sb, _ = _build(Policy.LINUX, concurrency="overlap",
+                           contention=mb, settle="sequential")
             ops = materialize(choices, sa._next_vpn)
-            sa.apply_mm_ops(ops, concurrency="overlap", contention=ma,
-                            settle="vector")
-            sb.apply_mm_ops(ops, concurrency="overlap", contention=mb,
-                            settle="sequential")
+            sa.apply_mm_ops(ops)
+            sb.apply_mm_ops(ops)
             assert_identical(sa, sb, f"{model_cls.__name__}/handler123")
             assert_model_state_identical(ma, mb)
 
@@ -212,11 +213,11 @@ def test_numasim_settle_engine_param():
     """The sim-level knob: direct scalar syscalls settle through the
     selected engine, bit-identically; "vector" demands a stock model."""
     with pytest.raises(ValueError):
-        NumaSim(PAPER_8SOCKET, Policy.LINUX, settle_engine="warp")
+        SimConfig(settle="warp")
 
     def run(engine, model):
-        sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, contention=model,
-                      settle_engine=engine)
+        sim = make_sim(PAPER_8SOCKET, SimConfig(
+            policy=Policy.LINUX, contention=model, settle=engine))
         ts = []
         for n in range(4):
             t = sim.spawn_thread(n * sim.topo.hw_threads_per_node)
@@ -240,8 +241,8 @@ def test_numasim_settle_engine_param():
     class Custom(QueueContention):
         pass
 
-    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, contention=Custom(),
-                  settle_engine="vector")
+    sim = make_sim(PAPER_8SOCKET, SimConfig(
+        policy=Policy.LINUX, contention=Custom(), settle="vector"))
     a = sim.spawn_thread(0)
     b = sim.spawn_thread(sim.topo.hw_threads_per_node)
     for t in (a, b):
@@ -260,26 +261,31 @@ def test_numasim_settle_engine_param():
 # knob validation + fallback hazard
 # --------------------------------------------------------------------------
 def test_settle_knob_validation():
-    sim, tids = _build(Policy.NUMAPTE)
     with pytest.raises(ValueError):
-        sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="overlap",
-                         settle="warp")
-    # settle is an overlap-mode knob: passing it with sequential
-    # concurrency would be silently ignored — that's an error
-    with pytest.raises(ValueError, match="overlap"):
+        SimConfig(settle="warp")
+    # the per-batch settle override is an overlap-mode knob: passing it
+    # with sequential concurrency would be silently ignored — that's an
+    # error (legacy kwarg path, so the deprecation warning fires first)
+    sim, tids = _build(Policy.NUMAPTE)
+    with pytest.raises(ValueError, match="overlap"), \
+            pytest.warns(DeprecationWarning):
         sim.apply_mm_ops([("mmap", tids[0], 1)], settle="vector")
     # forcing the vectorized engine under a non-vectorizable model fails
+    sv, tv = _build(Policy.NUMAPTE, concurrency="overlap",
+                    contention=NullContention(), settle="vector")
     with pytest.raises(ValueError, match="vector"):
-        sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="overlap",
-                         contention=NullContention(), settle="vector")
+        sv.apply_mm_ops([("mmap", tv[0], 1)])
     # auto reports what actually ran
-    sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="overlap",
-                     contention=NullContention())
-    assert sim.last_settle_engine == "sequential"
-    sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="overlap")
-    assert sim.last_settle_engine == "vector"    # default: coalescing
-    sim.apply_mm_ops([("mmap", tids[0], 1)])
-    assert sim.last_settle_engine is None        # sequential semantics
+    s1, t1 = _build(Policy.NUMAPTE, concurrency="overlap",
+                    contention=NullContention())
+    s1.apply_mm_ops([("mmap", t1[0], 1)])
+    assert s1.last_settle_engine == "sequential"
+    s2, t2 = _build(Policy.NUMAPTE, concurrency="overlap")
+    s2.apply_mm_ops([("mmap", t2[0], 1)])
+    assert s2.last_settle_engine == "vector"     # default: coalescing
+    s3, t3 = _build(Policy.NUMAPTE)
+    s3.apply_mm_ops([("mmap", t3[0], 1)])
+    assert s3.last_settle_engine is None         # sequential semantics
 
 
 def test_mid_batch_abandon_flushes_exactly_and_reports_mixed(monkeypatch):
@@ -305,16 +311,16 @@ def test_mid_batch_abandon_flushes_exactly_and_reports_mixed(monkeypatch):
                                 flaky)
             rng = np.random.default_rng(700_000 + fail_at)
             choices = _random_choices(rng, 20)
-            sa, _ = _build(policy)
-            sb, _ = _build(policy)
             ma, mb = QueueContention(), QueueContention()
+            sa, _ = _build(policy, concurrency="overlap", contention=ma,
+                           settle="vector")
+            sb, _ = _build(policy, concurrency="overlap", contention=mb,
+                           settle="sequential")
             ops = materialize(choices, sa._next_vpn)
-            sa.apply_mm_ops(ops, concurrency="overlap", contention=ma,
-                            settle="vector")
+            sa.apply_mm_ops(ops)
             engine_a = sa.last_settle_engine
             monkeypatch.setattr(BatchSettlement, "settle_and_charge", orig)
-            sb.apply_mm_ops(ops, concurrency="overlap", contention=mb,
-                            settle="sequential")
+            sb.apply_mm_ops(ops)
             assert_identical(sa, sb, f"abandon@{fail_at}")
             assert_model_state_identical(ma, mb, f"abandon@{fail_at}")
             if calls["n"] >= fail_at:   # a contended round actually hit it
@@ -377,18 +383,18 @@ def test_fractional_costs_stay_identical_under_vector_settlement():
     sims = {}
     models = {}
     for settle in ("vector", "sequential"):
-        sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, cost=cost)
+        model = QueueContention(handler_ns=handler)
+        sim = make_sim(PAPER_8SOCKET, SimConfig(
+            policy=Policy.LINUX, cost=cost, concurrency="overlap",
+            contention=model, settle=settle))
         tids = []
         for n in range(4):
             t = sim.spawn_thread(n * sim.topo.hw_threads_per_node)
             v = sim.mmap(t, 6)
             sim.touch_batch(t, np.arange(v.start_vpn, v.end_vpn), True)
             tids.append((t, v))
-        model = QueueContention(handler_ns=handler)
         sim.apply_mm_ops([("munmap", t, v.start_vpn + i, 1)
-                          for i in range(6) for t, v in tids],
-                         concurrency="overlap", contention=model,
-                         settle=settle)
+                          for i in range(6) for t, v in tids])
         assert sim.last_settle_engine == settle
         sims[settle] = sim
         models[settle] = model

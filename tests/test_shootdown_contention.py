@@ -33,7 +33,8 @@ import pytest
 
 from repro.core import (CoalescingContention, CostModel, IPI_RECEIVE_NS,
                         NullContention, NumaSim, PAPER_8SOCKET, Policy,
-                        QueueContention, RoundSettlement)
+                        QueueContention, RoundSettlement, SimConfig,
+                        make_sim)
 from repro.core.pagetable import leaf_id
 
 from test_mm_batch_differential import (POLICIES, _build, _random_choices,
@@ -55,15 +56,18 @@ def run_overlap_differential(policy, choices, *, make_a, make_b,
                              prefetch=0, tlb_filter=True, chunk=7, tag=""):
     """Replay one interleaving on two sims in lockstep chunks.
 
-    ``make_a`` / ``make_b`` map a chunk of ops to apply_mm_ops kwargs for
-    each side; state must stay byte-identical at every sync point."""
-    sa, _ = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter)
-    sb, _ = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter)
+    ``make_a`` / ``make_b`` are ``SimConfig`` field overrides (engine /
+    concurrency / contention) for each side's sim; state must stay
+    byte-identical at every sync point."""
+    sa, _ = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
+                   **make_a)
+    sb, _ = _build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
+                   **make_b)
     ops = materialize(choices, sa._next_vpn)
     for i in range(0, len(ops), chunk):
         part = ops[i:i + chunk]
-        sa.apply_mm_ops(part, **make_a)
-        sb.apply_mm_ops(part, **make_b)
+        sa.apply_mm_ops(part)
+        sb.apply_mm_ops(part)
         assert_identical(sa, sb, f"{tag}/chunk{i}")
     sa.check_invariants()
     sb.check_invariants()
@@ -251,15 +255,17 @@ def test_default_overlap_model_is_coalescing():
     assert DEFAULT_OVERLAP_MODEL == "coalescing"
 
     def storm(contention):
-        sim, tids = _build(Policy.LINUX, tlb_filter=False)
+        # contention=None in the config means "no ambient model", so an
+        # overlap batch falls back to the default — the flip under test
+        sim, tids = _build(Policy.LINUX, tlb_filter=False,
+                           concurrency="overlap", contention=contention)
         vmas = sim.apply_mm_ops([("mmap", t, 4) for t in tids for _ in
                                  range(6)])
         sim.apply_mm_ops([("touch", tids[i % len(tids)],
                            list(range(v.start_vpn, v.end_vpn)), True)
                           for i, v in enumerate(vmas)])
         sim.apply_mm_ops([("munmap", tids[i % len(tids)], v.start_vpn, 4)
-                          for i, v in enumerate(vmas)],
-                         concurrency="overlap", contention=contention)
+                          for i, v in enumerate(vmas)])
         return sim
 
     default = storm(None)
@@ -278,7 +284,10 @@ def test_numapte_never_queues_at_filter_excluded_cpu():
     CPU whose node is outside every touched table's sharer mask must never
     appear in the contention model's busy horizons (and its threads must
     receive zero IPIs)."""
-    sim = NumaSim(PAPER_8SOCKET, Policy.NUMAPTE, tlb_filter=True)
+    model = QueueContention()
+    sim = make_sim(PAPER_8SOCKET, SimConfig(
+        policy=Policy.NUMAPTE, tlb_filter=True,
+        concurrency="overlap", contention=model))
     main = sim.spawn_thread(0)
     vma = sim.mmap(main, 64)
     sim.access_many(main, range(vma.start_vpn, vma.end_vpn), write=True)
@@ -299,10 +308,8 @@ def test_numapte_never_queues_at_filter_excluded_cpu():
     allowed_cpus = {cpu for cpu in sim.tlbs
                     if (mask >> sim.topo.node_of_cpu(cpu)) & 1}
 
-    model = QueueContention()
     sim.apply_mm_ops(
-        [("munmap", main, vma.start_vpn + i, 1) for i in range(16)],
-        concurrency="overlap", contention=model)
+        [("munmap", main, vma.start_vpn + i, 1) for i in range(16)])
     queued_cpus = set(model.busy_until)
     assert queued_cpus, "sharers must actually be interrupted"
     assert queued_cpus <= allowed_cpus - {0}, \
@@ -326,9 +333,9 @@ def test_total_ipis_invariant_between_modes(policy):
         choices = _random_choices(rng, 20)
         sims = {}
         for mode in ("sequential", "overlap"):
-            sim, _ = _build(policy)
+            sim, _ = _build(policy, concurrency=mode)
             ops = materialize(choices, sim._next_vpn)
-            sim.apply_mm_ops(ops, concurrency=mode)
+            sim.apply_mm_ops(ops)
             sims[mode] = sim
         assert (_ipi_counter_fields(sims["sequential"].counters)
                 == _ipi_counter_fields(sims["overlap"].counters)), \
@@ -349,9 +356,9 @@ if HAVE_HYPOTHESIS:
         policy = POLICIES[policy_i]
         sims = {}
         for mode in ("sequential", "overlap"):
-            sim, _ = _build(policy)
+            sim, _ = _build(policy, concurrency=mode)
             ops = materialize(choices, sim._next_vpn)
-            sim.apply_mm_ops(ops, concurrency=mode)
+            sim.apply_mm_ops(ops)
             sims[mode] = sim
         assert (_ipi_counter_fields(sims["sequential"].counters)
                 == _ipi_counter_fields(sims["overlap"].counters))
@@ -364,8 +371,9 @@ def _interleaved_munmap_sim(model, policy=Policy.LINUX, n_workers=3,
                             pages=8):
     """Two+ initiators munmap interleaved while a bystander thread on a
     far socket runs no ops — the pure-responder observer."""
-    sim = NumaSim(PAPER_8SOCKET, policy, tlb_filter=policy is Policy.NUMAPTE,
-                  contention=model)
+    sim = make_sim(PAPER_8SOCKET, SimConfig(
+        policy=policy, tlb_filter=policy is Policy.NUMAPTE,
+        contention=model))
     step = sim.topo.hw_threads_per_node
     workers = [sim.spawn_thread(n * step) for n in range(n_workers)]
     victim = sim.spawn_thread(6 * step)
@@ -430,7 +438,8 @@ def test_custom_handler_ns_consistent_across_engines():
     horizons advanced by the custom value)."""
     handler = 123.0
     model = QueueContention(handler_ns=handler)
-    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX, contention=model)
+    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=Policy.LINUX,
+                                            contention=model))
     main = sim.spawn_thread(0)
     spin_cpu = sim.topo.hw_threads_per_node      # node 1
     spinner = sim.spawn_thread(spin_cpu)
@@ -534,8 +543,8 @@ def test_sim_level_contention_drives_scalar_syscalls():
     """A sim constructed with a contention model settles its *direct*
     scalar syscalls as overlapping rounds (the pluggable-_shootdown path,
     no batch API involved)."""
-    sim = NumaSim(PAPER_8SOCKET, Policy.LINUX,
-                  contention=QueueContention())
+    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=Policy.LINUX,
+                                            contention=QueueContention()))
     a = sim.spawn_thread(0)
     b = sim.spawn_thread(sim.topo.hw_threads_per_node)
     spinners = [sim.spawn_thread(n * sim.topo.hw_threads_per_node + 4)
@@ -562,18 +571,20 @@ def test_sequential_mode_suspends_sim_contention():
     classic semantics even on a sim constructed with a contention model,
     and restores the model afterwards."""
     model = QueueContention()
-    sa = NumaSim(PAPER_8SOCKET, Policy.LINUX, contention=model)
+    sa = make_sim(PAPER_8SOCKET, SimConfig(policy=Policy.LINUX,
+                                           contention=model))
     sb = NumaSim(PAPER_8SOCKET, Policy.LINUX)
     for sim in (sa, sb):
         t0 = sim.spawn_thread(0)
         t1 = sim.spawn_thread(sim.topo.hw_threads_per_node)
         v0, v1 = sim.mmap(t0, 4), sim.mmap(t1, 4)
+        # config concurrency defaults to "sequential": the batch runs the
+        # classic semantics even though sa carries an ambient model
         sim.apply_mm_ops(
             [("touch", t0, list(range(v0.start_vpn, v0.end_vpn)), True),
              ("touch", t1, list(range(v1.start_vpn, v1.end_vpn)), True),
              ("munmap", t0, v0.start_vpn, 4),
-             ("munmap", t1, v1.start_vpn, 4)],
-            concurrency="sequential")
+             ("munmap", t1, v1.start_vpn, 4)])
     assert_identical(sa, sb, "sequential-suspends")
     assert sa.contention is model          # restored after the batch
     assert sa.counters.ipi_queue_delay_ns == 0.0
@@ -582,10 +593,12 @@ def test_sequential_mode_suspends_sim_contention():
 def test_apply_mm_ops_rejects_unknown_concurrency():
     sim, tids = _build(Policy.NUMAPTE)
     with pytest.raises(ValueError):
-        sim.apply_mm_ops([("mmap", tids[0], 1)], concurrency="parallel")
-    # a contention model with sequential mode would be silently ignored —
-    # that's an error, not a no-op
-    with pytest.raises(ValueError, match="overlap"):
+        SimConfig(concurrency="parallel")
+    # a per-batch contention model with sequential mode would be silently
+    # ignored — that's an error, not a no-op (legacy kwarg path, so the
+    # deprecation warning fires before the ValueError)
+    with pytest.raises(ValueError, match="overlap"), \
+            pytest.warns(DeprecationWarning):
         sim.apply_mm_ops([("mmap", tids[0], 1)],
                          contention=QueueContention())
 
