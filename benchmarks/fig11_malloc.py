@@ -1,9 +1,23 @@
 """Figs 11/12: stateless and stateful malloc benchmarks.
 
 Gamma-distributed allocation sizes (~3.3MB mean), three allocator models
-(mmap / glibc / tcmalloc), one worker per socket, varying socket counts.
+(mmap / glibc / tcmalloc), one worker + one same-socket reader per
+socket, varying socket counts.  The reader re-touches the head of every
+live allocation, so munmap-driven shootdowns have a same-socket TLB
+audience even under numaPTE's sharer filter — without it every round has
+zero targets and the flush-elision column would be measuring nothing.
+
 Paper claims: Mitosis costs 1.4-1.9x on malloc-heavy loops; numaPTE is at
-or better than Linux thanks to minimal page-table coherence.
+or better than Linux thanks to minimal page-table coherence.  The
+``numapte+elide`` column runs numaPTE with ``elide_flushes=True``
+(deferred shootdowns for the unmap paths, forced only on observable
+reuse), and each row carries the elision/IPI counters plus the glibc
+arena hit rate so the schema-v6 artifacts expose the reuse regime the
+allocator rewrite creates.
+
+Timer discipline: the stateful warmup (building the initial live list)
+runs *before* ``t0`` — it is setup, not part of the steady-state cycle
+the paper measures; timing it inflated stateful ``us_per_cycle``.
 """
 from __future__ import annotations
 
@@ -17,33 +31,72 @@ from .common import csv, policies
 
 def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
             stateful: bool, iters: int = 150,
-            engine: str = "batch") -> float:
+            engine: str = "batch", elide: bool = False,
+            readers: bool = True) -> dict:
     topo = NumaTopology(n_nodes=max(2, n_sockets), cores_per_node=18)
     sim = make_sim(topo, SimConfig(policy=policy, tlb_filter=filt,
-                                   engine=engine))
+                                   engine=engine, elide_flushes=elide))
     rng = np.random.default_rng(7)
     workers = []
     for node in range(n_sockets):
-        tid = sim.spawn_thread(node * topo.hw_threads_per_node)
-        workers.append((tid, MallocModel(sim, tid, flavor)))
+        base = node * topo.hw_threads_per_node
+        tid = sim.spawn_thread(base)
+        rd = sim.spawn_thread(base + 1) if readers else None
+        workers.append((tid, rd, MallocModel(sim, tid, flavor)))
+    c0 = sim.counters.snapshot()
     total = 0.0
-    for tid, mall in workers:
+    for tid, rd, mall in workers:
         sizes = gamma_sizes_pages(rng, iters)
+
+        def cycle_alloc(s):
+            sp = mall.alloc(int(s))
+            if rd is not None:   # consumer on the same socket reads the head
+                sim.touch(rd, sp.start_vpn)
+            return sp
+
+        live = []
+        if stateful:
+            # warmup: build the initial live set OUTSIDE the timed window
+            live = [cycle_alloc(s) for s in
+                    gamma_sizes_pages(rng, 32)]           # scaled-down 256
         t0 = sim.thread_time_ns(tid)
         if stateful:
-            live = [mall.alloc(int(s)) for s in
-                    gamma_sizes_pages(rng, 32)]           # scaled-down 256
             for s in sizes:
                 mall.free(live.pop(0))
-                live.append(mall.alloc(int(s)))
+                live.append(cycle_alloc(s))
             for sp in live:
                 mall.free(sp)
         else:
             for s in sizes:
-                sp = mall.alloc(int(s))
+                sp = cycle_alloc(s)
                 mall.free(sp)
         total += sim.thread_time_ns(tid) - t0
-    return total / (iters * len(workers))
+    d = sim.counters.diff(c0)
+    agg = {k: 0 for k in ("arena_allocs", "mmap_allocs", "munmaps",
+                          "madvises")}
+    for _, _, mall in workers:
+        for k in agg:
+            agg[k] += mall.stats[k]
+    n_allocs = agg["arena_allocs"] + agg["mmap_allocs"]
+    return {
+        "ns_per_cycle": total / (iters * len(workers)),
+        "ipis": d.ipis_local + d.ipis_remote,
+        "shootdown_rounds": d.shootdown_rounds,
+        "flushes_elided": d.flushes_elided,
+        "forced_flushes": d.forced_flushes,
+        "deferred_invalidations": d.deferred_invalidations,
+        "arena_hit_rate": (agg["arena_allocs"] / n_allocs
+                           if n_allocs else 0.0),
+        "munmaps": agg["munmaps"],
+        "madvises": agg["madvises"],
+    }
+
+
+def _columns(quick: bool):
+    cols = [(name, pol, filt, False) for name, pol, filt in policies()
+            if not (quick and name == "numapte-nofilter")]
+    cols.append(("numapte+elide", Policy.NUMAPTE, True, True))
+    return cols
 
 
 def main(quick: bool = False, scale: int = 1) -> list:
@@ -55,16 +108,23 @@ def main(quick: bool = False, scale: int = 1) -> list:
         for flavor in flavors:
             for ns_ in sockets:
                 base = run_one(Policy.LINUX, False, ns_, flavor, stateful,
-                               iters)
-                for name, pol, filt in policies():
-                    if quick and name == "numapte-nofilter":
-                        continue
-                    v = run_one(pol, filt, ns_, flavor, stateful, iters)
+                               iters)["ns_per_cycle"]
+                for name, pol, filt, elide in _columns(quick):
+                    r = run_one(pol, filt, ns_, flavor, stateful, iters,
+                                elide=elide)
                     rows.append({
                         "bench": "stateful" if stateful else "stateless",
                         "alloc": flavor, "sockets": ns_, "policy": name,
-                        "us_per_cycle": round(v / 1e3, 2),
-                        "vs_linux": round(v / base, 3)})
+                        "us_per_cycle": round(r["ns_per_cycle"] / 1e3, 2),
+                        "vs_linux": round(r["ns_per_cycle"] / base, 3),
+                        "ipis": r["ipis"],
+                        "shootdown_rounds": r["shootdown_rounds"],
+                        "flushes_elided": r["flushes_elided"],
+                        "forced_flushes": r["forced_flushes"],
+                        "deferred_invalidations":
+                            r["deferred_invalidations"],
+                        "arena_hit_rate": round(r["arena_hit_rate"], 3),
+                        "munmaps": r["munmaps"]})
     return csv("fig11_12_malloc", rows)
 
 

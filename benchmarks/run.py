@@ -7,13 +7,27 @@
 prints ``name,key=value,...`` CSV rows for every reproduced artifact and
 writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
 ``bench_out/``) so the perf trajectory is machine-readable and CI can
-archive it.  JSON schema (version 5):
+archive it.  JSON schema (version 6):
 
-    {"schema_version": 5, "name": str, "quick": bool, "scale": int,
+    {"schema_version": 6, "name": str, "quick": bool, "scale": int,
      "concurrency": str | null, "spinners": int | null,
      "tenants": int | null,
      "elapsed_s": float, "rows": [ {column: value, ...} ],
      "row_types": [str, ...], "error": str | null}
+
+Version 6 (same payload shape; the ``fig11_12_malloc`` rows changed):
+the malloc benches gain a ``numapte+elide`` policy column (numaPTE with
+``SimConfig(elide_flushes=True)`` — deferred shootdowns on the unmap
+paths, forced only on observable reuse) and per-row counters ``ipis``,
+``shootdown_rounds``, ``flushes_elided``, ``forced_flushes``,
+``deferred_invalidations``, ``arena_hit_rate`` and ``munmaps``.  The
+underlying model changed too: ``MallocModel`` is now a buddy/slab
+allocator with glibc's dynamic mmap threshold and heap-slab arena
+growth (its arena path is live — previously dead under the paper's
+Gamma sizes), tcmalloc decommits via the new ``madvise_dontneed``, each
+fig11 worker is paired with a same-socket reader thread so shootdowns
+have a TLB audience, and the stateful warmup moved out of the timed
+window (it was inflating stateful ``us_per_cycle``).
 
 Version 5 adds the multi-tenant ``colocation`` benchmark (the
 Process/ASID model: one tenant's munmap storm vs its co-located
@@ -90,7 +104,7 @@ BENCHES = {
     "roofline": roofline.main,
 }
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 #: where --emit-root writes the canonical BENCH_<name>.json files: the
 #: repository root, resolved from this package's location so the flag

@@ -78,6 +78,16 @@ def touch_batch(sim, tid: int, vpns, write_mask=None, *,
     arr = np.asarray(vpns, dtype=np.int64).ravel()
     n = int(arr.size)
     frames: Optional[List[int]] = [] if return_frames else None
+    if n and sim.elide_flushes and (
+            sim._free_frames
+            or any(p.lazy_pages for p in sim.processes.values())):
+        # Lazy-invalidation mode with reuse state pending: a touch can pop
+        # a pooled frame or force a deferred shootdown mid-stream (which
+        # charges *other* threads), neither of which the grouped fast
+        # paths can express.  Run the scalar reference loop — by
+        # construction byte-identical to it.  With no pooled frames and
+        # no marks the fast paths below are exact even under elision.
+        return _touch_scalar(sim, tid, arr, write_mask, frames)
     if n:
         ctx = _BatchContext(sim, tid)
         if n == 1 or bool(np.all(arr[1:] > arr[:-1])):
@@ -92,6 +102,25 @@ def touch_batch(sim, tid: int, vpns, write_mask=None, *,
     if return_frames:
         return np.asarray(frames, dtype=np.int64)
     return n
+
+
+def _touch_scalar(sim, tid: int, arr: np.ndarray, write_mask,
+                  frames: Optional[List[int]]):
+    """The literal scalar reference loop (elision fallback path)."""
+    if write_mask is None:
+        writes: Iterable = repeat(False, int(arr.size))
+    elif np.isscalar(write_mask) or getattr(write_mask, "ndim", 1) == 0:
+        writes = repeat(bool(write_mask), int(arr.size))
+    else:
+        writes = (bool(w) for w in np.asarray(write_mask).ravel())
+    touch = sim.touch
+    if frames is None:
+        for vpn, w in zip(arr.tolist(), writes):
+            touch(tid, vpn, write=w)
+        return int(arr.size)
+    for vpn, w in zip(arr.tolist(), writes):
+        frames.append(touch(tid, vpn, write=w))
+    return np.asarray(frames, dtype=np.int64)
 
 
 def access_stream(sim, chunks: Iterable[Sequence]) -> Dict[int, float]:

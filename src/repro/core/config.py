@@ -74,6 +74,16 @@ class SimConfig:
     Batching defaults (consumed by ``apply_mm_ops`` and the workload
     phases when the call site doesn't say otherwise): ``engine``,
     ``concurrency``.
+
+    ``elide_flushes`` turns on lazy TLB invalidation for the unmap paths
+    ("Skip TLB flushes for reused pages", arXiv 2409.10946): ``munmap``
+    and ``madvise_dontneed`` mark still-cached translations as stale per
+    process instead of issuing an IPI round, and the deferred flush is
+    forced — charged through the contention models like any other round
+    — only when a marked page is remotely touched, has its protections
+    tightened, or its frame is remapped to a *different* process (see
+    ``NumaSim._force_deferred_flush``).  ``False`` (the default) is
+    byte-identical to the classic engines.
     """
 
     policy: Union[Policy, str] = Policy.NUMAPTE
@@ -86,6 +96,7 @@ class SimConfig:
     settle: str = "auto"
     engine: str = "batch"
     concurrency: str = "sequential"
+    elide_flushes: bool = False
 
     def __post_init__(self):
         from .mm_batch import CONCURRENCY_MODES
@@ -109,6 +120,9 @@ class SimConfig:
         if self.concurrency not in CONCURRENCY_MODES:
             raise ValueError(f"unknown concurrency {self.concurrency!r}; "
                              f"pick from {CONCURRENCY_MODES}")
+        if not isinstance(self.elide_flushes, bool):
+            raise TypeError(f"elide_flushes must be a bool, "
+                            f"got {self.elide_flushes!r}")
         # tuple-ify so configs hash/compare by value even when built with
         # a list (frozen dataclass => go through object.__setattr__)
         if not isinstance(self.interference_nodes, tuple):

@@ -118,7 +118,7 @@ _IDX_MASK = PTES_PER_TABLE - 1
 #: beyond this magnitude float addition of integers can round; fall back.
 _MAX_EXACT = float(1 << 52)
 
-_KINDS = ("mmap", "touch", "mprotect", "munmap", "migrate")
+_KINDS = ("mmap", "touch", "mprotect", "munmap", "madvise", "migrate")
 _BY_START = operator.attrgetter("start_vpn")
 
 
@@ -138,6 +138,9 @@ def apply_mm_ops(sim, ops: Sequence[tuple], *, engine=_UNSET,
       access engine; ``write_mask`` may be a bool or per-access array)
     * ``("mprotect", tid, start_vpn, n_pages, perms)`` -> None
     * ``("munmap", tid, start_vpn, n_pages)`` -> None
+    * ``("madvise", tid, start_vpn, n_pages)`` -> None (MADV_DONTNEED:
+      zap + free the pages but keep the VMA and leaf tables, see
+      ``NumaSim.madvise_dontneed``)
     * ``("migrate", tid, new_cpu)`` -> None
 
     Returns the per-op results.  ``engine="scalar"`` dispatches every op to
@@ -324,6 +327,9 @@ def _apply_scalar(sim, ops: List[tuple]) -> list:
         elif kind == "munmap":
             sim.munmap(op[1], op[2], op[3])
             out.append(None)
+        elif kind == "madvise":
+            sim.madvise_dontneed(op[1], op[2], op[3])
+            out.append(None)
         else:  # migrate
             sim.migrate_thread(op[1], op[2])
             out.append(None)
@@ -413,7 +419,7 @@ class _MMEngine:
         (mm ops only remove entries), so its invalidations are skipped."""
         spans = []
         for op in ops:
-            if op[0] in ("mprotect", "munmap") and op[3] > 0:
+            if op[0] in ("mprotect", "munmap", "madvise") and op[3] > 0:
                 spans.append((op[2], op[2] + op[3]))
         if not spans:
             return set()
@@ -531,6 +537,39 @@ class _MMEngine:
         self.vec = None
         self.settle_used = "mixed"
 
+    def _sync_threads_out(self) -> None:
+        """Hand the live thread times back to the scalar core for an op
+        that may charge *arbitrary* threads directly (a forced deferred
+        flush lands handler/stretch charges on every stale CPU's
+        residents).  Settles all pending IPI dues first — the scalar
+        chronological order — then writes every working time (and any
+        vector IPI delta) onto the Thread objects.  ``_sync_threads_in``
+        resumes the engine from that state."""
+        self._settle_all_ipis()
+        vec = self.vec
+        threads = self.sim.threads
+        if vec is not None:
+            for tid, thr in threads.items():
+                thr.time_ns = float(vec.times[tid])
+                d = int(vec.ipis[tid])
+                if d:
+                    thr.ipis_received += d
+            vec.flush()
+            self._had_vec = True
+            self.vec = None
+        else:
+            self._had_vec = False
+            for tid, w in self.wt.items():
+                threads[tid].time_ns = w
+        self.wt.clear()
+
+    def _sync_threads_in(self) -> None:
+        """Resume engine bookkeeping after ``_sync_threads_out``: working
+        times re-seed lazily from the (now current) Thread objects; a
+        vectorized settlement re-snapshots them and the model horizons."""
+        if self._had_vec:
+            self.vec = BatchSettlement(self.sim, self.contention)
+
     def _finish(self) -> None:
         self._settle_all_ipis()
         threads = self.sim.threads
@@ -557,6 +596,9 @@ class _MMEngine:
                     out.append(None)
                 elif kind == "munmap":
                     self._op_munmap(op[1], op[2], op[3])
+                    out.append(None)
+                elif kind == "madvise":
+                    self._op_madvise(op[1], op[2], op[3])
                     out.append(None)
                 elif kind == "touch":
                     self._op_touch(op[1], op[2],
@@ -599,8 +641,20 @@ class _MMEngine:
 
     def _op_touch(self, tid: int, vpns, wm) -> None:
         sim = self.sim
-        self._settle_ipis(tid)
         thr = sim.threads[tid]
+        if sim.elide_flushes \
+                and any(p.lazy_pages for p in sim.processes.values()):
+            # a touch may force a deferred flush, which charges stale
+            # CPUs' resident threads directly — hand ALL times to the
+            # scalar core for the op's duration, not just the toucher's.
+            self._sync_threads_out()
+            try:
+                sim.touch_batch(tid, vpns, wm)
+            finally:
+                self._sync_threads_in()
+                self._relevant.add(thr.cpu)
+            return
+        self._settle_ipis(tid)
         thr.time_ns = self._wtime(tid)
         try:
             sim.touch_batch(tid, vpns, wm)
@@ -623,6 +677,18 @@ class _MMEngine:
 
     def _op_mprotect(self, tid: int, start: int, n: int, perms: int) -> None:
         sim = self.sim
+        proc = self.proc
+        if sim.elide_flushes and proc.lazy_pages:
+            end_ = start + n
+            if any(start <= v < end_ for v in proc.lazy_pages):
+                # perms change over lazily-invalidated pages: the deferred
+                # flush lands first (scalar order: before the syscall
+                # charge), charging stale CPUs' threads directly.
+                self._sync_threads_out()
+                try:
+                    sim._force_deferred_flush(tid, proc)
+                finally:
+                    self._sync_threads_in()
         self._settle_ipis(tid)
         t = self._wtime(tid) + sim.cost.syscall_fixed_ns
         t, touched = self._update_range(tid, t, start, n, perms)
@@ -661,16 +727,29 @@ class _MMEngine:
         t, touched = self._update_range(tid, t, start, n, None)
         pop = self.proc.oracle.pop
         freed = 0
-        if present is None:
-            for vpn in range(start, end):
-                if pop(vpn, None) is not None:
+        if sim.elide_flushes:
+            # pool-push order must be the scalar loop's ascending-vpn
+            # order (present is table/insertion ordered — sort it)
+            push = sim._free_frames.append
+            for vpn in (range(start, end) if present is None
+                        else sorted(present)):
+                e = pop(vpn, None)
+                if e is not None:
                     freed += 1
+                    push(e[0])
+            ctr.data_pages_freed += freed
+            t = self._elide(tid, t, start, end)
         else:
-            for vpn in present:
-                if pop(vpn, None) is not None:
-                    freed += 1
-        ctr.data_pages_freed += freed
-        t = self._shootdown(tid, t, start, end, touched)
+            if present is None:
+                for vpn in range(start, end):
+                    if pop(vpn, None) is not None:
+                        freed += 1
+            else:
+                for vpn in present:
+                    if pop(vpn, None) is not None:
+                        freed += 1
+            ctr.data_pages_freed += freed
+            t = self._shootdown(tid, t, start, end, touched)
         store = self.proc.store
         for ti in touched:
             table = store.get(ti)
@@ -681,6 +760,90 @@ class _MMEngine:
                 store.drop_table(ti)
         self._carve_vmas(start, end)
         self._set_time(tid, t)
+
+    def _op_madvise(self, tid: int, start: int, n: int) -> None:
+        """Batched ``NumaSim.madvise_dontneed``: munmap minus the VMA
+        carve and leaf-table teardown."""
+        sim = self.sim
+        ctr, c = sim.counters, sim.cost
+        self._settle_ipis(tid)
+        t = self._wtime(tid) + c.syscall_fixed_ns
+        end = start + n
+        if n > PTES_PER_TABLE:
+            t0 = start >> LEAF_SHIFT
+            t1 = (end - 1) >> LEAF_SHIFT
+            present = self._present_vpns(range(t0, t1 + 1), start, end)
+        else:
+            present = None
+        t, touched = self._update_range(tid, t, start, n, None)
+        pop = self.proc.oracle.pop
+        freed = 0
+        if sim.elide_flushes:
+            push = sim._free_frames.append
+            for vpn in (range(start, end) if present is None
+                        else sorted(present)):
+                e = pop(vpn, None)
+                if e is not None:
+                    freed += 1
+                    push(e[0])
+            ctr.data_pages_freed += freed
+            t = self._elide(tid, t, start, end)
+        else:
+            if present is None:
+                for vpn in range(start, end):
+                    if pop(vpn, None) is not None:
+                        freed += 1
+            else:
+                for vpn in present:
+                    if pop(vpn, None) is not None:
+                        freed += 1
+            ctr.data_pages_freed += freed
+            # tables are never dropped by the zap, so the scalar path's
+            # recomputed touched-table list equals _update_range's
+            t = self._shootdown(tid, t, start, end, touched)
+        self._set_time(tid, t)
+
+    def _elide(self, tid: int, t: float, start: int, end: int) -> float:
+        """Batched ``NumaSim._elide_shootdown``: no IPI round — the
+        initiator's local invlpg charge plus the stale-mark bookkeeping.
+        Only relevance-filtered partitions are scanned: a TLB outside
+        ``self._relevant`` holds nothing in any batched range (mm ops
+        only remove entries; touch ops add their cpu to the set), so its
+        scalar scan would have recorded nothing and its invalidate would
+        have been a no-op."""
+        sim = self.sim
+        ctr = sim.counters
+        proc = self.proc
+        me_cpu = sim.threads[tid].cpu
+        t += sim.cost.tlb_invalidate_self_ns
+        ptlbs = sim._asid_tlbs[proc.asid]
+        rel = self._relevant
+        if me_cpu in rel:
+            ptlbs[me_cpu].invalidate_range(start, end)
+        recorded = 0
+        lazy, stale_map = proc.lazy_pages, proc.lazy_stale
+        stale_frame_asid = sim._stale_frame_asid
+        for cpu in rel:
+            if cpu == me_cpu:
+                continue
+            tlb = ptlbs.get(cpu)
+            if tlb is None:
+                continue
+            held = tlb.entries_in_range(start, end)
+            if not held:
+                continue
+            stale = stale_map.setdefault(cpu, set())
+            entries = tlb.entries
+            for vpn in held:
+                if vpn not in stale:
+                    stale.add(vpn)
+                    recorded += 1
+                frame = entries[vpn][0]
+                lazy[vpn] = frame
+                stale_frame_asid[frame] = proc.asid
+        ctr.flushes_elided += 1
+        ctr.deferred_invalidations += recorded
+        return t
 
     # ----------------------------------------------------- range primitives
     def _present_vpns(self, table_ids, start: int, end: int) -> List[int]:

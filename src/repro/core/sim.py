@@ -35,6 +35,20 @@ Invariants maintained (property-tested in tests/test_core_invariants.py):
       shootdown that is removing it) that PTE.
   I3: translations always agree with a flat oracle map.
   I4: after munmap returns, no TLB in the system holds any unmapped vpn.
+
+Flush elision (``SimConfig(elide_flushes=True)``; "Skip TLB flushes for
+reused pages within mmap's", arXiv 2409.10946): ``munmap`` and
+``madvise_dontneed`` skip the IPI round and instead record, per process,
+which translations other CPUs still cache (``Process.lazy_pages`` /
+``lazy_stale``); freed frames enter a machine-wide reuse pool.  The
+deferred shootdown is forced — one precise round through the same
+contention/settlement machinery — the moment a marked page is touched,
+has its protections tightened, or its frame is handed to a *different*
+address space.  I4 is relaxed exactly this far: a TLB may hold an
+unmapped vpn iff it is a recorded lazy invalidation whose stale frame is
+not live in any other process — ``check_invariants`` proves a stale
+translation is never serveable across process boundaries.  With the knob
+off (default) every path above is byte-identical to the classic engines.
 """
 from __future__ import annotations
 
@@ -77,6 +91,9 @@ class Counters:
     ipi_queue_delay_ns: float = 0.0  # total receive-queue delay (contention)
     ipis_coalesced: int = 0      # IPIs merged into a pending handler
     responder_delay_ns: float = 0.0  # target-thread stretch beyond handler
+    flushes_elided: int = 0      # unmap shootdown rounds skipped lazily
+    deferred_invalidations: int = 0  # stale (cpu, vpn) entries recorded
+    forced_flushes: int = 0      # deferred flushes forced by reuse/touch
     pt_pages_alloc: int = 0
     pt_pages_freed: int = 0
     data_pages_alloc: int = 0
@@ -112,7 +129,7 @@ class Process:
     """
 
     __slots__ = ("asid", "name", "store", "vmas", "threads", "oracle",
-                 "next_vpn")
+                 "next_vpn", "lazy_pages", "lazy_stale")
 
     def __init__(self, asid: int, n_nodes: int, name: Optional[str] = None):
         self.asid = asid
@@ -122,6 +139,13 @@ class Process:
         self.threads: Dict[int, Thread] = {}
         self.oracle: Dict[int, Tuple[int, int]] = {}  # vpn -> (frame, perms)
         self.next_vpn = 1 << 20      # start allocations at 4GB
+        # lazy-invalidation state (elide_flushes): marked-stale unmapped
+        # vpns -> the frame their surviving TLB entries translate to, and
+        # per-CPU (possibly superset: natural evictions aren't tracked)
+        # sets of which partitions still cache them.  Both empty whenever
+        # no flush is pending; always empty with the knob off.
+        self.lazy_pages: Dict[int, int] = {}
+        self.lazy_stale: Dict[int, set] = {}
 
     def cpus(self) -> set:
         """The process's mm_cpumask (CPUs with a resident thread)."""
@@ -211,6 +235,16 @@ class NumaSim:
         self._next_frame = itertools.count()   # physical frames: machine-wide
         self._next_asid = itertools.count(1)
         self._frame_nodes: Dict[int, int] = {}         # frame -> data node
+        #: lazy TLB invalidation on the unmap paths (see module docstring);
+        #: off = classic eager shootdowns, byte-identical to before.
+        self.elide_flushes = config.elide_flushes
+        #: freed physical frames available for reuse (LIFO; populated only
+        #: under elide_flushes so the classic frame sequence is untouched)
+        self._free_frames: List[int] = []
+        #: freed frame -> asid whose TLBs may still cache a stale
+        #: translation to it; reusing such a frame in a *different*
+        #: address space forces that process's deferred flush first.
+        self._stale_frame_asid: Dict[int, int] = {}
         self._cpu_threads: Dict[int, List[Thread]] = {}
         self._interference = frozenset(interference_nodes)
         #: address spaces on this machine; ASID 0 is the default process
@@ -326,6 +360,12 @@ class NumaSim:
         """One memory access by thread `tid` to `vpn`. Returns the frame id."""
         thr = self.threads[tid]
         proc = self.processes[thr.asid]
+        if self.elide_flushes and proc.lazy_pages \
+                and vpn in proc.lazy_pages:
+            # a touch of a lazily-invalidated page: pay the deferred
+            # shootdown BEFORE the lookup so the stale entry can never
+            # be served (the refault below re-establishes the mapping).
+            self._force_deferred_flush(tid, proc)
         node = self.topo.node_of_cpu(thr.cpu)
         tlb = self._asid_tlbs[thr.asid][thr.cpu]
         hit = tlb.lookup(vpn)
@@ -384,7 +424,8 @@ class NumaSim:
                      contention=_UNSET,
                      settle=_UNSET) -> list:
         """Apply a sequence of ``("mmap"|"touch"|"mprotect"|"munmap"|
-        "migrate", tid, ...)`` ops in order (see ``repro.core.mm_batch``).
+        "madvise"|"migrate", tid, ...)`` ops in order (see
+        ``repro.core.mm_batch``).
         ``engine="batch"`` runs the vectorized mm engine, byte-identical to
         ``engine="scalar"`` (the per-op reference loop).
         ``concurrency="overlap"`` settles concurrently issued shootdowns as
@@ -564,7 +605,18 @@ class NumaSim:
         """First touch of a page: allocate the data frame on the toucher's
         node (Linux first-touch data policy) and install the PTE."""
         ctr, c = self.counters, self.cost
-        frame = next(self._next_frame)
+        if self.elide_flushes and self._free_frames:
+            frame = self._free_frames.pop()
+            owner_asid = self._stale_frame_asid.get(frame)
+            if owner_asid is not None \
+                    and owner_asid != self.threads[tid].asid:
+                # the frame is being remapped across address spaces while
+                # another process's TLBs may still translate to it: that
+                # process's deferred flush must land first (the one case
+                # lazy invalidation may never defer past).
+                self._force_deferred_flush(tid, self.processes[owner_asid])
+        else:
+            frame = next(self._next_frame)
         ctr.first_touches += 1
         ctr.data_pages_alloc += 1
         self._charge(tid, c.page_alloc_ns)
@@ -585,6 +637,13 @@ class NumaSim:
     def mprotect(self, tid: int, start_vpn: int, n_pages: int,
                  perms: int) -> None:
         proc = self.process_of(tid)
+        if self.elide_flushes and proc.lazy_pages:
+            end = start_vpn + n_pages
+            if any(start_vpn <= v < end for v in proc.lazy_pages):
+                # tightening (or any perms change over) lazily-invalidated
+                # pages: the stale entries carry the old perms, so the
+                # deferred flush must land before the syscall proceeds.
+                self._force_deferred_flush(tid, proc)
         self._charge(tid, self.cost.syscall_fixed_ns)
         touched_tables = self._update_range(
             tid, start_vpn, n_pages,
@@ -604,13 +663,19 @@ class NumaSim:
         self._charge(tid, c.syscall_fixed_ns)
         end_vpn = start_vpn + n_pages
         touched_tables = self._update_range(tid, start_vpn, n_pages, None)
-        # free data pages
+        elide = self.elide_flushes
+        # free data pages (under elision the frames enter the reuse pool)
         for vpn in range(start_vpn, end_vpn):
             entry = proc.oracle.pop(vpn, None)
             if entry is not None:
                 ctr.data_pages_freed += 1
-        # shootdown BEFORE page-table pages are freed (kernel ordering)
-        self._shootdown(tid, start_vpn, end_vpn, touched_tables)
+                if elide:
+                    self._free_frames.append(entry[0])
+        if elide:
+            self._elide_shootdown(tid, start_vpn, end_vpn)
+        else:
+            # shootdown BEFORE page-table pages are freed (kernel ordering)
+            self._shootdown(tid, start_vpn, end_vpn, touched_tables)
         # tear down empty leaf tables (and their replicas)
         for tbl_id in touched_tables:
             table = proc.store.get(tbl_id)
@@ -621,6 +686,139 @@ class NumaSim:
                 proc.store.drop_table(tbl_id)
         # shrink VMA list
         self._carve_vmas(proc, start_vpn, end_vpn)
+
+    def madvise_dontneed(self, tid: int, start_vpn: int,
+                         n_pages: int) -> None:
+        """MADV_DONTNEED over [start, start+n): zap the PTEs and free the
+        data pages but keep the VMA (the range stays mapped; the next
+        touch refaults) and the leaf-table pages (Linux keeps them too —
+        only the entries are cleared).  This is how the allocator models
+        decommit cached spans without giving up the address range; under
+        ``elide_flushes`` the shootdown is elided exactly like munmap's.
+        """
+        ctr, c = self.counters, self.cost
+        proc = self.process_of(tid)
+        self._charge(tid, c.syscall_fixed_ns)
+        end_vpn = start_vpn + n_pages
+        self._update_range(tid, start_vpn, n_pages, None)
+        elide = self.elide_flushes
+        for vpn in range(start_vpn, end_vpn):
+            entry = proc.oracle.pop(vpn, None)
+            if entry is not None:
+                ctr.data_pages_freed += 1
+                if elide:
+                    self._free_frames.append(entry[0])
+        if elide:
+            self._elide_shootdown(tid, start_vpn, end_vpn)
+        else:
+            # tables stay resident (their sharer masks too), so the
+            # touched-table list is recomputed from the same range formula
+            t0, t1 = leaf_id(start_vpn), leaf_id(end_vpn - 1)
+            touched = [ti for ti in range(t0, t1 + 1)
+                       if proc.store.get(ti) is not None]
+            self._shootdown(tid, start_vpn, end_vpn, touched)
+
+    # ----------------------------------------------------- flush elision
+    def _elide_shootdown(self, tid: int, start_vpn: int,
+                         end_vpn: int) -> None:
+        """The lazy-invalidation path of munmap / madvise_dontneed: no IPI
+        round.  The initiator still drops its own entries (the local
+        invlpg Linux always performs, charged as such); every translation
+        another CPU of this process still caches in the range is recorded
+        as lazily invalid, to be flushed by ``_force_deferred_flush`` when
+        something makes the staleness observable."""
+        ctr, c = self.counters, self.cost
+        me = self.threads[tid]
+        proc = self.processes[me.asid]
+        self._charge(tid, c.tlb_invalidate_self_ns)
+        ptlbs = self._asid_tlbs[me.asid]
+        ptlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
+        recorded = 0
+        lazy, stale_map = proc.lazy_pages, proc.lazy_stale
+        for cpu, tlb in ptlbs.items():
+            if cpu == me.cpu:
+                continue
+            held = tlb.entries_in_range(start_vpn, end_vpn)
+            if not held:
+                continue
+            stale = stale_map.setdefault(cpu, set())
+            entries = tlb.entries
+            for vpn in held:
+                if vpn not in stale:
+                    stale.add(vpn)
+                    recorded += 1
+                frame = entries[vpn][0]
+                lazy[vpn] = frame
+                self._stale_frame_asid[frame] = me.asid
+        ctr.flushes_elided += 1
+        ctr.deferred_invalidations += recorded
+
+    def _force_deferred_flush(self, tid: int, proc: Process) -> None:
+        """Pay ``proc``'s whole pending deferred shootdown now, charged to
+        ``tid``: one precise IPI round to exactly the CPUs recorded as
+        still caching marked translations, settled/charged through the
+        same contention machinery as an ordinary ``_shootdown`` round.
+        Batching is the elision win: any number of elided unmaps collapse
+        into this single round."""
+        ctr, c = self.counters, self.cost
+        me = self.threads[tid]
+        my_node = self.topo.node_of_cpu(me.cpu)
+        stale_map = proc.lazy_stale
+        ptlbs = self._asid_tlbs[proc.asid]
+        ctr.forced_flushes += 1
+        # the forcing CPU's own stale entries die by local invlpg, no IPI
+        mine = stale_map.pop(me.cpu, None)
+        if mine:
+            tlb = ptlbs.get(me.cpu)
+            if tlb is not None:
+                for vpn in mine:
+                    tlb.invalidate(vpn)
+        targets = set(stale_map)
+        if targets:
+            n_local = sum(1 for cpu in targets
+                          if self.topo.node_of_cpu(cpu) == my_node)
+            n_remote = len(targets) - n_local
+            ctr.shootdown_rounds += 1
+            ctr.ipis_local += n_local
+            ctr.ipis_remote += n_remote
+            base = (c.shootdown_cost_ns(n_local, n_remote)
+                    + c.tlb_invalidate_self_ns)
+            if self.contention is not None:
+                s = self._settle_contended(me, targets, c)
+                ctr.ipi_queue_delay_ns += s.queued_ns
+                ctr.overlapping_rounds += s.contended
+                ctr.ipis_coalesced += len(s.coalesced_cpus)
+                ctr.responder_delay_ns += s.responder_delay_ns
+                self._charge(tid, base)
+                if s.extra_wait_ns:
+                    self._charge(tid, s.extra_wait_ns)
+                for cpu in targets:
+                    tlb = ptlbs.get(cpu)
+                    if tlb is not None:
+                        for vpn in stale_map[cpu]:
+                            tlb.invalidate(vpn)
+                charge_responders(
+                    s, self.contention.handler_ns, targets,
+                    self._cpu_threads,
+                    lambda thr: thr.time_ns,
+                    lambda thr, v: setattr(thr, "time_ns", v))
+            else:
+                self._charge(tid, base)
+                for cpu in targets:
+                    tlb = ptlbs.get(cpu)
+                    if tlb is not None:
+                        for vpn in stale_map[cpu]:
+                            tlb.invalidate(vpn)
+                    for t in self._cpu_threads.get(cpu, ()):
+                        t.time_ns += IPI_RECEIVE_NS
+                        t.ipis_received += 1
+        elif mine:
+            self._charge(tid, c.tlb_invalidate_self_ns)
+        pop_frame = self._stale_frame_asid.pop
+        for frame in proc.lazy_pages.values():
+            pop_frame(frame, None)
+        proc.lazy_pages.clear()
+        stale_map.clear()
 
     def _carve_vmas(self, proc: Process, start: int, end: int) -> None:
         out: List[VMA] = []
@@ -808,7 +1006,26 @@ class NumaSim:
         oracle, which is also the cross-process isolation property — a
         partition tagged with ASID a can never satisfy I3/I4 from another
         process's mappings.
+
+        Under ``elide_flushes`` I4 is relaxed exactly as far as the
+        mechanism needs and no further: a TLB entry for an unmapped vpn is
+        legal iff it is a *recorded* lazy invalidation (the vpn is marked
+        in its process's ``lazy_pages`` with the very frame the entry
+        translates to, on a CPU listed in ``lazy_stale``) and the stale
+        frame is not currently mapped by any *other* process — so a stale
+        translation can never be served across process boundaries.
         """
+        lazy_any = any(p.lazy_pages for p in self.processes.values())
+        live_frames: Dict[int, int] = {}
+        if lazy_any:
+            for p in self.processes.values():
+                for frame, _perms in p.oracle.values():
+                    live_frames[frame] = p.asid
+            for p in self.processes.values():
+                for vpn in p.lazy_pages:
+                    assert vpn not in p.oracle, \
+                        f"marked vpn {vpn} is mapped (asid {p.asid}): the " \
+                        "deferred flush should have been forced on remap"
         for proc in self.processes.values():
             for table in proc.store.tables.values():
                 owner_copy = table.copies.get(table.owner, {})
@@ -829,6 +1046,24 @@ class NumaSim:
                     f"partition ({cpu}, {asid}) tagged {tlb.asid}"
                 node = self.topo.node_of_cpu(cpu)
                 for vpn in tlb.vpns():
+                    lazy_frame = proc.lazy_pages.get(vpn) if lazy_any \
+                        else None
+                    if lazy_frame is not None:
+                        # a sanctioned stale entry: recorded, frame-exact,
+                        # and its frame is not live in another process
+                        frame = tlb.lookup(vpn)[0]
+                        assert frame == lazy_frame, \
+                            f"stale entry vpn {vpn} on cpu {cpu} " \
+                            f"translates to {frame}, recorded {lazy_frame}"
+                        assert vpn in proc.lazy_stale.get(cpu, ()), \
+                            f"unrecorded stale entry vpn {vpn} on cpu " \
+                            f"{cpu} (asid {asid})"
+                        owner = live_frames.get(frame)
+                        assert owner is None or owner == asid, \
+                            f"cross-process stale translation: cpu {cpu} " \
+                            f"asid {asid} caches vpn {vpn} -> frame " \
+                            f"{frame}, now mapped by asid {owner}"
+                        continue
                     table = proc.store.get(leaf_id(vpn))
                     assert table is not None, \
                         f"I4: TLB holds unmapped vpn {vpn} (asid {asid})"

@@ -48,6 +48,17 @@ class TLB:
     def invalidate(self, vpn: int) -> bool:
         return self.entries.pop(vpn, None) is not None
 
+    def entries_in_range(self, start_vpn: int, end_vpn: int) -> list:
+        """The vpns currently cached in [start, end) — the non-destructive
+        counterpart of ``invalidate_range`` (same scan-threshold
+        heuristic), used by the lazy-invalidation bookkeeping to record
+        which translations a deferred shootdown left stale."""
+        n = end_vpn - start_vpn
+        if n < len(self.entries) // 4:
+            entries = self.entries
+            return [v for v in range(start_vpn, end_vpn) if v in entries]
+        return [v for v in self.entries if start_vpn <= v < end_vpn]
+
     def invalidate_range(self, start_vpn: int, end_vpn: int) -> int:
         n = end_vpn - start_vpn
         if n < len(self.entries) // 4:

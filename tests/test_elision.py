@@ -1,0 +1,449 @@
+"""TLB-flush elision (``SimConfig(elide_flushes=True)``) test suite.
+
+Three layers:
+
+* **Forced-flush triggers** — unit tests pinning the three events that
+  make deferred staleness observable and so must force the pending
+  flush first: a touch of a lazily-invalidated page, an mprotect over
+  marked pages, and a pooled frame being remapped into a *different*
+  address space.  Plus the batching win itself (N elided unmaps, one
+  forced round) and the default-off guarantees.
+* **Extended invariant checker** — after every elided unmap the stale
+  TLB entries are *sanctioned* (recorded per-cpu, frame-exact, frame
+  not live elsewhere) and ``check_invariants`` must accept them; any
+  unsanctioned staleness must still be rejected.
+* **Differential suite** — the batched mm-op engine vs the scalar
+  syscalls on two-tenant sims, over seeded random interleavings of
+  mmap / touch / mprotect / munmap / **madvise** / migrate, with
+  ``check_invariants`` after every chunk and byte-identical final state
+  (counters, exact thread times, TLB partitions incl. insertion order,
+  per-process oracles/tables/VMAs, and the whole elision state:
+  lazy marks, the frame pool, the stale-frame owner map).  Runs with
+  ``elide_flushes`` both off (the compatibility gate: madvise + the
+  allocator paths change nothing eagerly-flushed) and on (the 100+
+  seeded-interleaving acceptance gate), under sequential and overlap
+  concurrency.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (MallocModel, NumaSim, NumaTopology, Policy,
+                        SimConfig, make_sim)
+from repro.core.pagetable import (PERM_R, PERM_RW, PTES_PER_TABLE,
+                                  next_table_aligned)
+
+TOPO = NumaTopology(n_nodes=2, cores_per_node=4, threads_per_core=1)
+
+
+def _build(engine="scalar", elide=True, policy=Policy.NUMAPTE, filt=True,
+           concurrency="sequential"):
+    """Two tenants, two threads each; tenant B shares cpu 0 with tenant A
+    (distinct ASID partitions on one core) and adds a remote cpu."""
+    sim = make_sim(TOPO, SimConfig(
+        policy=policy, tlb_filter=filt, engine=engine,
+        elide_flushes=elide, tlb_entries=64, concurrency=concurrency))
+    tenant = sim.spawn_process("tenant")
+    tids = [sim.spawn_thread(0), sim.spawn_thread(4),
+            sim.spawn_thread(0, tenant), sim.spawn_thread(5, tenant)]
+    return sim, tids
+
+
+def _total_ipis(sim):
+    return sim.counters.ipis_local + sim.counters.ipis_remote
+
+
+# --------------------------------------------------------------------------
+# forced-flush triggers
+# --------------------------------------------------------------------------
+def test_remote_touch_of_marked_page_forces_flush():
+    """madvise_dontneed is elided; the *other* cpu's touch of a marked
+    page pays the deferred round before the stale entry could be served,
+    then refaults cleanly."""
+    sim, (t0, t1, _, _) = _build()
+    vma = sim.mmap(t0, 8)
+    sim.access_many(t0, range(vma.start_vpn, vma.end_vpn), write=True)
+    sim.access_many(t1, range(vma.start_vpn, vma.end_vpn))   # t1 caches too
+    sim.madvise_dontneed(t0, vma.start_vpn, 8)
+    assert sim.counters.flushes_elided == 1
+    assert sim.counters.forced_flushes == 0
+    assert _total_ipis(sim) == 0                 # no IPI round happened
+    proc = sim.process_of(t0)
+    assert proc.lazy_pages and proc.lazy_stale == {
+        sim.threads[t1].cpu: set(range(vma.start_vpn, vma.end_vpn))}
+    ipis_before = sim.threads[t1].ipis_received
+    sim.touch(t1, vma.start_vpn)                 # observable staleness
+    assert sim.counters.forced_flushes == 1
+    assert not proc.lazy_pages and not proc.lazy_stale
+    # t1 forced its *own* stale entries: local invlpg, still no IPIs
+    assert sim.threads[t1].ipis_received == ipis_before
+    assert _total_ipis(sim) == 0
+    sim.check_invariants()
+
+
+def test_forced_flush_sends_one_round_to_exactly_the_stale_cpus():
+    """When the force comes from a cpu *without* marks, the pending
+    flush is one precise IPI round to exactly the recorded cpus."""
+    sim, (t0, t1, _, _) = _build()
+    vma = sim.mmap(t0, 4)
+    sim.access_many(t0, range(vma.start_vpn, vma.end_vpn), write=True)
+    sim.access_many(t1, range(vma.start_vpn, vma.end_vpn))
+    # two elided unmaps, one eventual round: the batching win
+    sim.madvise_dontneed(t0, vma.start_vpn, 2)
+    sim.madvise_dontneed(t0, vma.start_vpn + 2, 2)
+    assert sim.counters.flushes_elided == 2
+    assert sim.counters.deferred_invalidations == 4
+    rounds0 = sim.counters.shootdown_rounds
+    sim.touch(t0, vma.start_vpn)     # t0 already dropped its own entries,
+    # but t1's cpu is marked: one remote-cpu round, charged to t0
+    assert sim.counters.forced_flushes == 1
+    assert sim.counters.shootdown_rounds == rounds0 + 1
+    assert _total_ipis(sim) == 1
+    assert sim.threads[t1].ipis_received == 1
+    tlb1 = sim.tlb_partition(sim.threads[t1].cpu, sim.threads[t1].asid)
+    assert not tlb1.entries_in_range(vma.start_vpn, vma.end_vpn)
+    sim.check_invariants()
+
+
+def test_mprotect_over_marked_range_forces_flush():
+    sim, (t0, t1, _, _) = _build()
+    vma = sim.mmap(t0, 8)
+    sim.access_many(t0, range(vma.start_vpn, vma.end_vpn), write=True)
+    sim.access_many(t1, range(vma.start_vpn, vma.end_vpn))
+    sim.madvise_dontneed(t0, vma.start_vpn, 4)
+    assert sim.counters.forced_flushes == 0
+    # mprotect over an UNmarked subrange: no force needed
+    sim.mprotect(t0, vma.start_vpn + 4, 4, PERM_R)
+    assert sim.counters.forced_flushes == 0
+    # tightening over the marked pages: the stale entries carry the old
+    # perms, so the deferred flush must land first
+    sim.mprotect(t0, vma.start_vpn, 4, PERM_R)
+    assert sim.counters.forced_flushes == 1
+    assert not sim.process_of(t0).lazy_pages
+    sim.check_invariants()
+
+
+def test_cross_process_frame_reuse_forces_owners_flush():
+    """A pooled frame being remapped into a different address space is
+    the one case lazy invalidation may never defer past: tenant A's TLBs
+    could still translate to a frame that now belongs to tenant B."""
+    sim, (a0, a1, b0, _) = _build()
+    vma = sim.mmap(a0, 4)
+    sim.access_many(a0, range(vma.start_vpn, vma.end_vpn), write=True)
+    sim.access_many(a1, range(vma.start_vpn, vma.end_vpn))
+    sim.munmap(a0, vma.start_vpn, 4)             # frames -> reuse pool
+    assert len(sim._free_frames) == 4
+    proc_a = sim.process_of(a0)
+    assert proc_a.lazy_pages                      # a1's cpu still marked
+    forced0 = sim.counters.forced_flushes
+    vmb = sim.mmap(b0, 1)
+    frame = sim.touch(b0, vmb.start_vpn, write=True)
+    # the pool is LIFO: tenant B got one of A's old frames, and A's
+    # pending flush was forced (charged through a real IPI round to a1)
+    assert sim.counters.forced_flushes == forced0 + 1
+    assert not proc_a.lazy_pages and not proc_a.lazy_stale
+    assert sim.threads[a1].ipis_received == 1
+    assert frame not in sim._free_frames
+    sim.check_invariants()
+
+
+def test_same_process_frame_reuse_needs_no_force():
+    """Reuse within one address space is safe to defer: the stale
+    entries still translate frame-exactly, so only pool bookkeeping
+    happens until the staleness becomes observable."""
+    sim, (t0, _, _, _) = _build()
+    vma = sim.mmap(t0, 4)
+    sim.access_many(t0, range(vma.start_vpn, vma.end_vpn), write=True)
+    sim.munmap(t0, vma.start_vpn, 4)
+    assert len(sim._free_frames) == 4
+    v2 = sim.mmap(t0, 2)
+    sim.touch(t0, v2.start_vpn, write=True)
+    sim.touch(t0, v2.start_vpn + 1, write=True)
+    assert sim.counters.forced_flushes == 0
+    assert len(sim._free_frames) == 2
+    sim.check_invariants()
+
+
+def test_elide_off_is_default_and_inert():
+    sim, (t0, t1, _, _) = _build(elide=False)
+    assert sim.elide_flushes is False
+    assert SimConfig().elide_flushes is False
+    vma = sim.mmap(t0, 8)
+    sim.access_many(t0, range(vma.start_vpn, vma.end_vpn), write=True)
+    sim.access_many(t1, range(vma.start_vpn, vma.end_vpn))
+    sim.madvise_dontneed(t0, vma.start_vpn, 4)
+    sim.munmap(t0, vma.start_vpn + 4, 4)
+    assert sim.counters.flushes_elided == 0
+    assert sim.counters.deferred_invalidations == 0
+    assert sim.counters.forced_flushes == 0
+    assert not sim._free_frames and not sim._stale_frame_asid
+    assert _total_ipis(sim) == 2                 # both rounds were eager
+    sim.check_invariants()
+
+
+def test_madvise_keeps_vma_and_leaf_tables():
+    """MADV_DONTNEED zaps PTEs and frees the data pages but the range
+    stays mapped (next touch refaults) and the leaf tables stay
+    resident — on both the eager and the elided path."""
+    for elide in (False, True):
+        sim, (t0, _, _, _) = _build(elide=elide)
+        vma = sim.mmap(t0, PTES_PER_TABLE)
+        sim.access_many(t0, range(vma.start_vpn, vma.end_vpn), write=True)
+        tables0 = len(sim.process_of(t0).store.tables)
+        freed0 = sim.counters.data_pages_freed
+        sim.madvise_dontneed(t0, vma.start_vpn, PTES_PER_TABLE)
+        assert sim.counters.data_pages_freed == freed0 + PTES_PER_TABLE
+        assert len(sim.process_of(t0).store.tables) == tables0
+        assert sim.find_vma(vma.start_vpn) is vma
+        assert sim.touch(t0, vma.start_vpn) is not None   # refaults
+        sim.check_invariants()
+
+
+def test_tcmalloc_cold_reuse_forces_flush_through_allocator():
+    """End-to-end through MallocModel: a decommitted (madvise'd) span
+    whose staleness was recorded on a reader's cpu forces the deferred
+    flush when the recycled VA is touched again."""
+    sim, (t0, t1, _, _) = _build()
+    mall = MallocModel(sim, t0, "tcmalloc", cache_cap_pages=8)
+    sp = mall.alloc(32)
+    sim.touch(t1, sp.start_vpn)                  # reader caches the head
+    mall.free(sp)                                # cap 8 < 32: decommit
+    assert mall.stats["madvises"] >= 1
+    assert sim.counters.flushes_elided >= 1
+    sp2 = mall.alloc(32)                         # recycled cold VA
+    assert mall.stats["cold_hits"] == 1
+    assert sp2.start_vpn == sp.start_vpn
+    assert sim.counters.forced_flushes == 1      # the touch forced it
+    sim.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# extended invariant checker
+# --------------------------------------------------------------------------
+def test_checker_sanctions_recorded_stale_entries_only():
+    sim, (t0, t1, _, _) = _build()
+    vma = sim.mmap(t0, 4)
+    sim.access_many(t0, range(vma.start_vpn, vma.end_vpn), write=True)
+    sim.access_many(t1, range(vma.start_vpn, vma.end_vpn))
+    sim.munmap(t0, vma.start_vpn, 4)
+    cpu1 = sim.threads[t1].cpu
+    tlb1 = sim.tlb_partition(cpu1, sim.threads[t1].asid)
+    # the stale entries are physically present yet sanctioned
+    assert tlb1.entries_in_range(vma.start_vpn, vma.end_vpn)
+    sim.check_invariants()
+    # un-record one mark without invalidating the TLB: now the same
+    # entry is *unsanctioned* staleness and the checker must reject it
+    proc = sim.process_of(t0)
+    proc.lazy_stale[cpu1].discard(vma.start_vpn)
+    del proc.lazy_pages[vma.start_vpn]
+    with pytest.raises(AssertionError):
+        sim.check_invariants()
+
+
+def test_checker_rejects_stale_entry_whose_frame_went_cross_process():
+    """A sanctioned entry stops being sanctioned the moment its frame is
+    live in another address space — the exact condition the cross-asid
+    force in ``_alloc_page`` exists to prevent."""
+    sim, (a0, a1, b0, _) = _build()
+    vma = sim.mmap(a0, 1)
+    sim.touch(a0, vma.start_vpn, write=True)
+    sim.access_many(a1, [vma.start_vpn])
+    sim.munmap(a0, vma.start_vpn, 1)
+    sim.check_invariants()                       # deferred, sanctioned
+    # hand the pooled frame to tenant B behind the force's back
+    frame = sim._free_frames[-1]
+    sim._stale_frame_asid.pop(frame, None)
+    vmb = sim.mmap(b0, 1)
+    sim.touch(b0, vmb.start_vpn, write=True)
+    assert sim.process_of(b0).oracle[vmb.start_vpn][0] == frame
+    with pytest.raises(AssertionError):
+        sim.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# differential suite: batch engine vs scalar, two tenants, madvise ops
+# --------------------------------------------------------------------------
+N_THREADS = 4
+
+
+def _norm_stale(stale_map):
+    return {cpu: frozenset(s) for cpu, s in stale_map.items() if s}
+
+
+def _table_state(proc):
+    return {ti: (t.owner, t.sharers,
+                 {m: {i: (p.frame, p.frame_node, p.perms)
+                      for i, p in cp.items()}
+                  for m, cp in t.copies.items()})
+            for ti, t in proc.store.tables.items()}
+
+
+def assert_identical(a: NumaSim, b: NumaSim, tag="") -> None:
+    assert a.counters == b.counters, f"{tag}: counters diverged"
+    for tid in a.threads:
+        assert a.threads[tid].time_ns == b.threads[tid].time_ns, \
+            f"{tag}: thread {tid} time {a.threads[tid].time_ns!r} " \
+            f"!= {b.threads[tid].time_ns!r}"
+        assert a.threads[tid].ipis_received == \
+            b.threads[tid].ipis_received, f"{tag}: tid {tid} ipis"
+        assert a.threads[tid].cpu == b.threads[tid].cpu
+    assert a._free_frames == b._free_frames, f"{tag}: frame pool diverged"
+    assert a._stale_frame_asid == b._stale_frame_asid, f"{tag}: owners"
+    for asid, pa in a.processes.items():
+        pb = b.processes[asid]
+        assert pa.oracle == pb.oracle, f"{tag}: oracle[{asid}]"
+        assert pa.lazy_pages == pb.lazy_pages, f"{tag}: lazy[{asid}]"
+        assert _norm_stale(pa.lazy_stale) == _norm_stale(pb.lazy_stale), \
+            f"{tag}: stale[{asid}]"
+        assert _table_state(pa) == _table_state(pb), f"{tag}: tables"
+        assert sorted((v.vma_id, v.start_vpn, v.end_vpn, v.owner, v.perms)
+                      for v in pa.vmas) == \
+            sorted((v.vma_id, v.start_vpn, v.end_vpn, v.owner, v.perms)
+                   for v in pb.vmas), f"{tag}: VMAs[{asid}]"
+    for asid in set(a._asid_tlbs) | set(b._asid_tlbs):
+        pa, pb = a._asid_tlbs.get(asid, {}), b._asid_tlbs.get(asid, {})
+        for cpu in set(pa) | set(pb):
+            ea = list(pa[cpu].entries.items()) if cpu in pa else []
+            eb = list(pb[cpu].entries.items()) if cpu in pb else []
+            assert ea == eb, \
+                f"{tag}: TLB state/order diverged on asid {asid} cpu {cpu}"
+
+
+def materialize(sim: NumaSim, tids, choices):
+    """Like the mm-differential materializer, with a 6th op kind —
+    madvise — and a shadow allocator *per tenant* (each process has its
+    own VA space; the overlap between them is what stresses the shared
+    frame pool's cross-asid force)."""
+    asid_of = {t: sim.threads[t].asid for t in tids}
+    nxt = {asid: sim.processes[asid].next_vpn
+           for asid in set(asid_of.values())}
+    live = {asid: [] for asid in nxt}
+    ops = []
+    for kind, t, a, b, c in choices:
+        tid = tids[t % len(tids)]
+        asid = asid_of[tid]
+        lv = live[asid]
+        kind %= 6
+        if kind not in (0, 5) and not lv:
+            kind = 0
+        if kind == 0:                                   # mmap
+            n = 1 + a % 700
+            start = nxt[asid]
+            nxt[asid] = next_table_aligned(start + n)
+            lv.append((start, n))
+            ops.append(("mmap", tid, n))
+        elif kind == 1:                                 # touch
+            start, n = lv[a % len(lv)]
+            rng = np.random.default_rng(b)
+            k = 1 + c % 120
+            ops.append(("touch", tid,
+                        start + rng.integers(0, n, size=k), bool(b & 1)))
+        elif kind == 2:                                 # mprotect
+            start, n = lv[a % len(lv)]
+            off = b % n
+            ln = 1 + c % (n - off + PTES_PER_TABLE)
+            ops.append(("mprotect", tid, start + off, ln,
+                        PERM_R if b & 2 else PERM_RW))
+        elif kind == 3:                                 # munmap
+            idx = a % len(lv)
+            start, n = lv[idx]
+            off = b % n
+            ln = 1 + c % (n - off)
+            ops.append(("munmap", tid, start + off, ln))
+            lv[idx:idx + 1] = [p for p in
+                               ((start, off),
+                                (start + off + ln, n - off - ln))
+                               if p[1] > 0]
+        elif kind == 4:                                 # madvise: VA stays
+            start, n = lv[a % len(lv)]
+            off = b % n
+            ln = 1 + c % (n - off)
+            ops.append(("madvise", tid, start + off, ln))
+        else:                                           # migrate
+            ops.append(("migrate", tid, a % sim.topo.total_hw_threads))
+    return ops
+
+
+def _tenant_runs(sim, ops):
+    """Split an op list into maximal consecutive same-process runs — one
+    batch is one address space's syscalls, so a mixed chunk becomes
+    several batches in program order."""
+    runs, cur, cur_asid = [], [], None
+    for op in ops:
+        asid = sim.threads[op[1]].asid
+        if cur and asid != cur_asid:
+            runs.append(cur)
+            cur = []
+        cur_asid = asid
+        cur.append(op)
+    if cur:
+        runs.append(cur)
+    return runs
+
+
+def run_differential(policy, choices, *, elide, filt=True,
+                     concurrency="sequential", chunk=7, tag=""):
+    sa, ta = _build("batch", elide, policy, filt, concurrency)
+    sb, tb = _build("scalar", elide, policy, filt, concurrency)
+    assert ta == tb
+    ops = materialize(sa, ta, choices)
+    for i in range(0, len(ops), chunk):
+        ra, rb = [], []
+        for run in _tenant_runs(sa, ops[i:i + chunk]):
+            ra += sa.apply_mm_ops(run)
+            rb += sb.apply_mm_ops(run)
+        assert [(v.vma_id, v.start_vpn) if v is not None else None
+                for v in ra] == \
+               [(v.vma_id, v.start_vpn) if v is not None else None
+                for v in rb], f"{tag}: op results diverged at chunk {i}"
+        assert_identical(sa, sb, f"{tag}/chunk{i}")
+        # the extended checker runs at every sync point: sanctioned
+        # staleness passes, anything else would throw here
+        sa.check_invariants()
+        sb.check_invariants()
+
+
+def _random_choices(rng, n):
+    return [tuple(int(x) for x in rng.integers(0, 1 << 30, size=5))
+            for _ in range(n)]
+
+
+def _run_seeds(policy, elide, seeds, base):
+    for seed in seeds:
+        rng = np.random.default_rng(base + seed)
+        choices = _random_choices(rng, int(rng.integers(6, 30)))
+        run_differential(
+            policy, choices, elide=elide,
+            filt=(seed % 2 == 0),
+            concurrency=("overlap" if seed % 3 == 2 else "sequential"),
+            chunk=int(rng.integers(1, 10)),
+            tag=f"{policy.value}/elide{elide}/seed{seed}")
+
+
+@pytest.mark.parametrize("policy", [Policy.NUMAPTE, Policy.LINUX])
+@pytest.mark.parametrize("elide", [False, True])
+def test_differential_smoke(policy, elide):
+    """Fast always-on slice of the seeded differential (8 seeds per
+    policy/elide cell, incl. overlap-concurrency seeds)."""
+    _run_seeds(policy, elide, range(8), base=40_000)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", [Policy.NUMAPTE, Policy.LINUX,
+                                    Policy.MITOSIS])
+def test_elide_interleavings_byte_identical(policy):
+    """The acceptance gate: 40 seeded two-tenant interleavings per
+    policy (120 total) with elide_flushes=True, batch vs scalar in
+    lockstep with per-chunk invariant checks."""
+    _run_seeds(policy, True, range(40), base=50_000)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", [Policy.NUMAPTE, Policy.LINUX,
+                                    Policy.MITOSIS])
+def test_eager_interleavings_with_madvise_byte_identical(policy):
+    """elide_flushes=False compatibility: the same generator (madvise
+    included) stays byte-identical across engines — the elision code
+    being present changes nothing when the knob is off."""
+    _run_seeds(policy, False, range(25), base=60_000)

@@ -1,0 +1,234 @@
+"""MallocModel regression tests: the buddy/slab span machinery, glibc's
+dynamic mmap threshold (the dead-arena-path fix), and the tcmalloc
+decommit/cold-reuse cycle.
+
+The headline regression is ``test_glibc_arena_hit_rate``: before the
+dynamic threshold + heap-slab growth, every ~3.3MB Gamma allocation sat
+above the static 128KB threshold, so the glibc flavor *never* used its
+arena — it was the mmap flavor with extra bookkeeping.  Now the first
+free of an mmapped block ratchets the threshold past the Gamma mean and
+the arena absorbs the steady state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (MallocModel, NumaTopology, Policy, SimConfig,
+                        make_sim)
+from repro.core.malloc import (GLIBC_HEAP_PAGES, MMAP_THRESHOLD_MAX_PAGES,
+                               MMAP_THRESHOLD_PAGES, SLAB_MAGAZINE_CAP,
+                               _BuddyCache, gamma_sizes_pages)
+
+TOPO = NumaTopology(2, 4, 1)
+
+
+def _sim(elide=False):
+    sim = make_sim(TOPO, SimConfig(policy=Policy.NUMAPTE,
+                                   elide_flushes=elide))
+    return sim, sim.spawn_thread(0)
+
+
+# --------------------------------------------------------------------------
+# _BuddyCache unit tests
+# --------------------------------------------------------------------------
+def test_buddy_insert_coalesces_both_neighbours():
+    c = _BuddyCache()
+    c.insert(100, 10)
+    c.insert(130, 10)
+    assert len(c) == 2
+    c.insert(110, 20)            # bridges both: one 40-page span
+    assert len(c) == 1
+    assert c.cached_pages == 40
+    assert c.take(40) == 100
+    assert len(c) == 0 and c.cached_pages == 0
+
+
+def test_buddy_take_carves_front_and_relists_remainder():
+    c = _BuddyCache()
+    c.insert(100, 32)
+    assert c.take(5) == 100
+    assert c.cached_pages == 27
+    assert len(c) == 1
+    # the remainder is immediately reusable and re-coalesces on free
+    assert c.take(27) == 105
+    c.insert(100, 5)
+    c.insert(105, 27)
+    assert len(c) == 1 and c.cached_pages == 32
+
+
+def test_buddy_take_falls_back_to_higher_order_bucket():
+    c = _BuddyCache()
+    c.insert(100, 3)             # order 2: too small for n=4
+    c.insert(200, 64)            # order 7
+    assert c.take(4) == 200      # skips the same-order miss, carves 64
+    assert c._spans == {100: 3, 204: 60}
+
+
+def test_buddy_pop_lowest_is_trim_order():
+    c = _BuddyCache()
+    for start in (300, 100, 200):
+        c.insert(start, 8)
+    assert c.pop_lowest() == (100, 8)
+    assert c.pop_lowest() == (200, 8)
+    assert c.pop_highest() == (300, 8)
+    assert c.pop_lowest() is None
+
+
+# --------------------------------------------------------------------------
+# glibc: dynamic mmap threshold + arena (the fixed dead path)
+# --------------------------------------------------------------------------
+def test_glibc_threshold_ratchets_on_mmapped_free():
+    sim, tid = _sim()
+    mall = MallocModel(sim, tid, "glibc")
+    assert mall.mmap_threshold == MMAP_THRESHOLD_PAGES
+    sp = mall.alloc(800, touch=False)            # >= threshold: mmapped
+    assert sp.mmapped and mall.stats["mmap_allocs"] == 1
+    mall.free(sp)
+    assert mall.mmap_threshold == 801            # block size + header
+    assert mall.trim_threshold == 1602
+    # same size now goes to the arena: a heap-slab grow, then carves
+    sp2 = mall.alloc(800, touch=False)
+    sp3 = mall.alloc(800, touch=False)
+    assert not sp2.mmapped and not sp3.mmapped
+    assert sp3.start_vpn == sp2.start_vpn + 800   # carved from the slab
+    assert mall.stats["cache_hits"] >= 1
+    # the ratchet is capped at DEFAULT_MMAP_THRESHOLD_MAX
+    big = mall.alloc(2 * MMAP_THRESHOLD_MAX_PAGES, touch=False)
+    assert big.mmapped
+    mall.free(big)
+    assert mall.mmap_threshold == MMAP_THRESHOLD_MAX_PAGES
+
+
+def test_glibc_grows_arena_in_heap_slabs():
+    """Sub-threshold misses mmap a whole heap slab and carve from it, so
+    one grow syscall serves many subsequent allocations."""
+    sim, tid = _sim()
+    mall = MallocModel(sim, tid, "glibc")
+    first = mall.alloc(16, touch=False)
+    assert mall.stats["mmap_allocs"] == 1
+    assert mall.cached_pages == GLIBC_HEAP_PAGES - 16
+    for i in range(20):
+        sp = mall.alloc(16, touch=False)
+        assert sp.start_vpn == first.start_vpn + 16 * (i + 1)
+    assert mall.stats["mmap_allocs"] == 1        # all served by the slab
+    assert mall.stats["cache_hits"] == 20
+
+
+def test_glibc_arena_hit_rate(the_min=0.5):
+    """The headline regression gate: under the paper's Gamma sizes a
+    stateful alloc/free loop must serve > 50% of allocations from the
+    arena (it was 0% on the dead static-threshold path)."""
+    sim, tid = _sim()
+    mall = MallocModel(sim, tid, "glibc")
+    rng = np.random.default_rng(7)
+    live = [mall.alloc(int(s), touch=False)
+            for s in gamma_sizes_pages(rng, 32)]
+    for s in gamma_sizes_pages(rng, 150):
+        mall.free(live.pop(0))
+        live.append(mall.alloc(int(s), touch=False))
+    for sp in live:
+        mall.free(sp)
+    st = mall.stats
+    hit = st["arena_allocs"] / (st["arena_allocs"] + st["mmap_allocs"])
+    assert hit > the_min, st
+    assert mall.mmap_threshold > MMAP_THRESHOLD_PAGES   # ratchet engaged
+    # and the arena is actually trimmed back to the OS, not hoarded
+    assert st["munmaps"] > 0
+    assert mall.cached_pages <= mall.trim_threshold
+
+
+# --------------------------------------------------------------------------
+# coalescing / fragmentation regression
+# --------------------------------------------------------------------------
+def test_cached_span_count_stays_bounded():
+    """Random alloc/free churn must not fragment the cache into an
+    ever-growing span list: coalescing + order buckets keep the
+    committed cache at a handful of spans throughout."""
+    sim, tid = _sim()
+    mall = MallocModel(sim, tid, "glibc")
+    rng = np.random.default_rng(11)
+    live = []
+    worst = 0
+    for i in range(400):
+        if live and (len(live) > 24 or rng.integers(2)):
+            mall.free(live.pop(int(rng.integers(len(live)))))
+        else:
+            live.append(mall.alloc(int(1 + rng.integers(600)), touch=False))
+        worst = max(worst, mall.cached_span_count)
+    assert worst <= 64, worst
+
+
+def test_magazines_serve_small_spans_lifo():
+    sim, tid = _sim()
+    mall = MallocModel(sim, tid, "tcmalloc")
+    a = mall.alloc(4, touch=False)
+    b = mall.alloc(4, touch=False)
+    mall.free(a)
+    mall.free(b)
+    # LIFO: the most recently freed span comes back first, no syscalls
+    assert mall.alloc(4, touch=False).start_vpn == b.start_vpn
+    assert mall.alloc(4, touch=False).start_vpn == a.start_vpn
+    assert mall.stats["magazine_hits"] == 2
+    assert mall.stats["munmaps"] == 0 and mall.stats["madvises"] == 0
+
+
+def test_magazine_overflow_spills_to_buddy_cache():
+    sim, tid = _sim()
+    mall = MallocModel(sim, tid, "tcmalloc")
+    spans = [mall.alloc(2, touch=False)
+             for _ in range(SLAB_MAGAZINE_CAP + 1)]
+    for sp in spans:
+        mall.free(sp)
+    assert len(mall._magazines[2]) == SLAB_MAGAZINE_CAP // 2
+    # the spilled (coldest) half moved to the buddy cache; the spans
+    # came from distinct table-aligned mmaps so they stay separate
+    assert mall.cached_pages == 2 * (SLAB_MAGAZINE_CAP // 2 + 1)
+    assert mall.cached_span_count == SLAB_MAGAZINE_CAP // 2 + 1
+    # and they serve subsequent same-size allocations as cache hits
+    assert mall.alloc(2, touch=False) is not None
+    assert mall.stats["magazine_hits"] == 1
+
+
+# --------------------------------------------------------------------------
+# tcmalloc: decommit (madvise) instead of munmap, cold reuse
+# --------------------------------------------------------------------------
+def test_tcmalloc_decommits_beyond_cap_and_recycles_cold_va():
+    sim, tid = _sim()
+    mall = MallocModel(sim, tid, "tcmalloc", cache_cap_pages=16)
+    sp = mall.alloc(64)
+    mall.free(sp)
+    assert mall.stats["madvises"] == 1           # decommit, not munmap
+    assert mall.stats["munmaps"] == 0
+    assert sim.find_vma(sp.start_vpn) is not None   # VA retained
+    sp2 = mall.alloc(64)
+    assert sp2.start_vpn == sp.start_vpn         # cold VA recycled
+    assert mall.stats["cold_hits"] == 1
+    assert mall.stats["mmap_allocs"] == 1        # never re-mmapped
+    sim.check_invariants()
+
+
+def test_mmap_flavor_has_no_cache():
+    sim, tid = _sim()
+    mall = MallocModel(sim, tid, "mmap")
+    sp = mall.alloc(100, touch=False)
+    mall.free(sp)
+    assert mall.stats == {"arena_allocs": 0, "mmap_allocs": 1,
+                          "magazine_hits": 0, "cache_hits": 0,
+                          "cold_hits": 0, "munmaps": 1, "madvises": 0}
+    assert mall.cached_span_count == 0
+
+
+def test_allocator_is_deterministic():
+    def run():
+        sim, tid = _sim()
+        mall = MallocModel(sim, tid, "glibc")
+        rng = np.random.default_rng(3)
+        live = []
+        for s in gamma_sizes_pages(rng, 80):
+            live.append(mall.alloc(int(s)))
+            if len(live) > 8:
+                mall.free(live.pop(0))
+        return dict(mall.stats), sim.counters.snapshot(), \
+            sim.thread_time_ns(tid)
+
+    assert run() == run()

@@ -324,6 +324,45 @@ def test_colocation_numapte_contains_cross_tenant_storm():
     assert linux_storm["responder_delay_ns"] > 0
 
 
+def test_fig11_glibc_fewer_munmap_shootdowns_than_mmap():
+    """The malloc case study's premise: the allocators differ in how
+    much unmap traffic they generate.  With the dynamic-threshold arena
+    live (it was dead behind the static 128KB threshold), glibc must
+    issue strictly fewer munmaps — and strictly fewer munmap-driven
+    shootdown rounds — than the mmap-everything flavor under the same
+    Gamma-size stateful loop, because the arena absorbs the steady
+    state (> 50% of allocations served without a syscall)."""
+    from benchmarks.fig11_malloc import run_one
+
+    mm = run_one(Policy.NUMAPTE, True, 2, "mmap", True, iters=60)
+    gl = run_one(Policy.NUMAPTE, True, 2, "glibc", True, iters=60)
+    assert 0 < gl["munmaps"] < mm["munmaps"]
+    # no mprotect/madvise in either flavor: every round is munmap-driven
+    assert gl["shootdown_rounds"] < mm["shootdown_rounds"]
+    assert gl["madvises"] == mm["madvises"] == 0
+    assert gl["arena_hit_rate"] > 0.4
+    assert mm["arena_hit_rate"] == 0.0
+
+
+def test_fig11_elide_strictly_fewer_ipis_than_eager_numapte():
+    """Flush-elision acceptance gate on the stateful fig11 workload:
+    with a same-socket reader giving every munmap round a TLB audience,
+    ``numapte+elide`` elides real flushes and issues strictly fewer
+    IPIs than eager numaPTE — on both syscall-heavy flavors (tcmalloc
+    barely unmaps at the default cap, so its gate would be 0 == 0)."""
+    from benchmarks.fig11_malloc import run_one
+
+    for flavor in ("mmap", "glibc"):
+        eager = run_one(Policy.NUMAPTE, True, 2, flavor, True, iters=60)
+        elide = run_one(Policy.NUMAPTE, True, 2, flavor, True, iters=60,
+                        elide=True)
+        assert eager["ipis"] > 0, flavor
+        assert elide["ipis"] < eager["ipis"], flavor
+        assert elide["flushes_elided"] > 0, flavor
+        # elision defers/batches rounds, it never invents new ones
+        assert elide["shootdown_rounds"] <= eager["shootdown_rounds"]
+
+
 def test_fig8_execution_parity_with_mitosis():
     """numaPTE matches Mitosis's execution phase despite laziness."""
     spec = APPS["btree"]
