@@ -7,13 +7,27 @@
 prints ``name,key=value,...`` CSV rows for every reproduced artifact and
 writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
 ``bench_out/``) so the perf trajectory is machine-readable and CI can
-archive it.  JSON schema (version 6):
+archive it.  JSON schema (version 7):
 
-    {"schema_version": 6, "name": str, "quick": bool, "scale": int,
+    {"schema_version": 7, "name": str, "quick": bool, "scale": int,
      "concurrency": str | null, "spinners": int | null,
-     "tenants": int | null,
+     "tenants": int | null, "arrival_rate": float | null,
      "elapsed_s": float, "rows": [ {column: value, ...} ],
      "row_types": [str, ...], "error": str | null}
+
+Version 7 adds the trace-driven closed-loop serving benchmark
+(``serving_closed_loop``): Poisson arrivals feed a PagedKVManager-shaped
+KV-block churn through ``apply_mm_ops`` of a multi-tenant NumaSim under
+the default overlap ``CoalescingContention`` model, and
+``row_type="serving_latency"`` rows carry per-policy (``linux`` /
+``mitosis`` / ``numapte`` / ``numapte+elide``) p50/p99/mean latency,
+goodput vs offered load across an arrival-rate sweep, shootdown/elision
+counters, the cross-tenant interrupt leak, and the saturated
+``runtime_vs_linux`` calibration against the paper's +12%/+36% claims.
+Its knob: ``arrival_rate`` records the base arrival rate in requests
+per modeled second (``--arrival-rate``; null = the benchmark's
+nominal-capacity default, and null in artifacts of benchmarks without
+the knob).
 
 Version 6 (same payload shape; the ``fig11_12_malloc`` rows changed):
 the malloc benches gain a ``numapte+elide`` policy column (numaPTE with
@@ -84,7 +98,8 @@ from typing import Dict, Iterable, Optional
 from . import (colocation, fig01_mprotect, fig02_local_remote,
                fig03_placement, fig06_prefetch, fig07_migration, fig08_apps,
                fig09_mm_ops, fig10_munmap, fig11_malloc, fig13_webserver,
-               fig14_memcached, mm_concurrent, roofline, serving_coherence)
+               fig14_memcached, mm_concurrent, roofline,
+               serving_closed_loop, serving_coherence)
 
 BENCHES = {
     "colocation": colocation.main,
@@ -100,11 +115,12 @@ BENCHES = {
     "fig13_webserver": fig13_webserver.main,
     "fig14_memcached": fig14_memcached.main,
     "mm_concurrent": mm_concurrent.main,
+    "serving_closed_loop": serving_closed_loop.main,
     "serving_coherence": serving_coherence.main,
     "roofline": roofline.main,
 }
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 #: where --emit-root writes the canonical BENCH_<name>.json files: the
 #: repository root, resolved from this package's location so the flag
@@ -146,6 +162,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
                    concurrency: str = "both",
                    spinners: Optional[int] = None,
                    tenants: Optional[int] = None,
+                   arrival_rate: Optional[float] = None,
                    emit_root: bool = False) -> Dict[str, str]:
     """Run benchmarks, print their CSV, and write BENCH_<name>.json files.
 
@@ -178,6 +195,11 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             tenants_used = tenants
             if tenants is not None:
                 kwargs["tenants"] = tenants
+        arrival_rate_used = None
+        if "arrival_rate" in params:
+            arrival_rate_used = arrival_rate
+            if arrival_rate is not None:
+                kwargs["arrival_rate"] = arrival_rate
         print(f"# --- {name} ---", file=sys.stderr)
         t0 = time.time()
         rows, error = None, None
@@ -197,6 +219,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             "concurrency": concurrency if "concurrency" in params else None,
             "spinners": spinners_used,
             "tenants": tenants_used,
+            "arrival_rate": arrival_rate_used,
             "elapsed_s": round(elapsed, 3),
             "rows": rows or [],
             "row_types": sorted({row.get("row_type", "data")
@@ -271,6 +294,18 @@ def main() -> None:
                          "colocation benchmark (default: the benchmark's "
                          "own 3-quick/7-full; 'tenants' is null in "
                          "artifacts of benchmarks without the knob)")
+    def positive_rate(v: str) -> float:
+        r = float(v)
+        if r <= 0:
+            raise argparse.ArgumentTypeError("--arrival-rate must be > 0")
+        return r
+
+    ap.add_argument("--arrival-rate", type=positive_rate, default=None,
+                    help="base arrival rate in requests per modeled "
+                         "second for the closed-loop serving benchmark's "
+                         "offered-load sweep (default: its nominal-"
+                         "capacity estimate; 'arrival_rate' is null in "
+                         "artifacts of benchmarks without the knob)")
     ap.add_argument("--emit-root", action="store_true",
                     help="also write canonical BENCH_<name>.json files at "
                          "the repository root (the committed perf "
@@ -280,7 +315,8 @@ def main() -> None:
     run_benchmarks([args.only] if args.only else None, quick=args.quick,
                    scale=args.scale, outdir=args.outdir, strict=args.strict,
                    concurrency=args.concurrency, spinners=args.spinners,
-                   tenants=args.tenants, emit_root=args.emit_root)
+                   tenants=args.tenants, arrival_rate=args.arrival_rate,
+                   emit_root=args.emit_root)
 
 
 if __name__ == "__main__":

@@ -15,16 +15,21 @@ from repro.pagedpt import BlockTableSpec, eager_sync_bytes, numapte_fetch_bytes
 from .common import csv
 
 
+N_PODS = 4
+
+
 def main(quick: bool = False) -> list:
     rows = []
     for mode in ("local", "eager", "numapte"):
         r = serve("qwen3_14b", n_requests=8 if quick else 24,
                   prompt_len=32, gen_len=8 if quick else 16, batch=4,
-                  n_pods=4, mode=mode, verbose=False)
+                  n_pods=N_PODS, mode=mode, verbose=False)
         rows.append({k: (round(v, 1) if isinstance(v, float) else v)
                      for k, v in r.items()})
-    spec = BlockTableSpec(n_pods=2, n_tables=512)
-    rows.append({"mode": "per-step-collective-bytes",
+    # the budget-model row runs the same pod count as the serve rows above
+    # (and carries it), so the eager/numapte ratio is comparable to them
+    spec = BlockTableSpec(n_pods=N_PODS, n_tables=512)
+    rows.append({"mode": "per-step-collective-bytes", "n_pods": N_PODS,
                  "eager": eager_sync_bytes(spec),
                  "numapte": numapte_fetch_bytes(spec),
                  "ratio": round(eager_sync_bytes(spec)

@@ -39,19 +39,23 @@ def update_gather_plain(k_slabs: jax.Array, v_slabs: jax.Array,
         slot = positions % bt
         blk = jnp.clip(positions // bt, 0, phys_blocks.shape[1] - 1)
         frame = jnp.take_along_axis(phys_blocks, blk[:, None], axis=1)[:, 0]
-        frame = jnp.where(frame >= 0, frame, 0)
+        valid = frame >= 0
+        frame = jnp.where(valid, frame, 0)
         # per-row dynamic_update_slice instead of a batched scatter: XLA
         # expands small scatters into whole-buffer gather+select rewrites,
         # which would bill (and on CPU, actually move) the entire cache
-        # for a one-token write.
+        # for a one-token write.  Rows whose current block is unmapped
+        # (-1 tables: inactive/padding rows) write the slab's own bytes
+        # back, so they can never corrupt frame 0.
         def write(slabs, args):
-            f, s, val = args
+            f, s, val, ok = args
+            val = jnp.where(ok, val.astype(slabs.dtype), slabs[f, s])
             return jax.lax.dynamic_update_slice(
-                slabs, val[None, None].astype(slabs.dtype),
+                slabs, val[None, None],
                 (f, s, jnp.zeros((), f.dtype), jnp.zeros((), f.dtype))), None
 
-        k_slabs, _ = jax.lax.scan(write, k_slabs, (frame, slot, k_new))
-        v_slabs, _ = jax.lax.scan(write, v_slabs, (frame, slot, v_new))
+        k_slabs, _ = jax.lax.scan(write, k_slabs, (frame, slot, k_new, valid))
+        v_slabs, _ = jax.lax.scan(write, v_slabs, (frame, slot, v_new, valid))
         gather = jnp.where(phys_blocks >= 0, phys_blocks, 0)
         return k_slabs, v_slabs, k_slabs[gather], v_slabs[gather]
 
@@ -114,19 +118,25 @@ def gather_readonly(k_stack: jax.Array, v_stack: jax.Array,
         return f(k_stack, v_stack, phys_blocks, layer_idx)
 
 
-def _commit_plain(k_stack, v_stack, k_new, v_new, frame, slot):
-    """k_stack [L,F,bt,K,hd]; k_new [L,B,K,hd]; per-token DUS writes."""
+def _commit_plain(k_stack, v_stack, k_new, v_new, frame, slot, valid=None):
+    """k_stack [L,F,bt,K,hd]; k_new [L,B,K,hd]; per-token DUS writes.
+    ``valid`` [B] masks inactive (padding) rows into write-backs of the
+    slab's own bytes, so unmapped rows never touch frame 0."""
     L, B = k_new.shape[:2]
+    if valid is None:
+        valid = jnp.ones((B,), bool)
 
     def write(stacks, args):
         ks, vs = stacks
         li, b, kv_, vv_ = args
         idx = (li, frame[b], slot[b], jnp.zeros((), li.dtype),
                jnp.zeros((), li.dtype))
-        ks = jax.lax.dynamic_update_slice(
-            ks, kv_[None, None, None].astype(ks.dtype), idx)
-        vs = jax.lax.dynamic_update_slice(
-            vs, vv_[None, None, None].astype(vs.dtype), idx)
+        kv_ = jnp.where(valid[b], kv_.astype(ks.dtype),
+                        ks[li, frame[b], slot[b]])
+        vv_ = jnp.where(valid[b], vv_.astype(vs.dtype),
+                        vs[li, frame[b], slot[b]])
+        ks = jax.lax.dynamic_update_slice(ks, kv_[None, None, None], idx)
+        vs = jax.lax.dynamic_update_slice(vs, vv_[None, None, None], idx)
         return (ks, vs), None
 
     li = jnp.repeat(jnp.arange(L), B)
@@ -151,10 +161,12 @@ def commit_token_writes(k_stack: jax.Array, v_stack: jax.Array,
     slot = positions % bt
     blk = jnp.clip(positions // bt, 0, phys_blocks.shape[1] - 1)
     frame = jnp.take_along_axis(phys_blocks, blk[:, None], axis=1)[:, 0]
-    frame = jnp.where(frame >= 0, frame, 0)
+    valid = frame >= 0
+    frame = jnp.where(valid, frame, 0)
     pooled = k_stack.ndim == 6
     if not pooled:
-        return _commit_plain(k_stack, v_stack, k_new, v_new, frame, slot)
+        return _commit_plain(k_stack, v_stack, k_new, v_new, frame, slot,
+                             valid)
 
     mesh = _mesh()
     rules = current_rules()
@@ -165,7 +177,7 @@ def commit_token_writes(k_stack: jax.Array, v_stack: jax.Array,
         gframe = frame + pool_of * F
         ks = k_stack.reshape((L, P_ * F) + k_stack.shape[3:])
         vs = v_stack.reshape((L, P_ * F) + v_stack.shape[3:])
-        ks, vs = _commit_plain(ks, vs, k_new, v_new, gframe, slot)
+        ks, vs = _commit_plain(ks, vs, k_new, v_new, gframe, slot, valid)
         return ks.reshape(k_stack.shape), vs.reshape(v_stack.shape)
 
     hd_ax = rules.lookup("head_dim")
@@ -173,17 +185,17 @@ def commit_token_writes(k_stack: jax.Array, v_stack: jax.Array,
     stack_spec = P(None, data_ax, None, None, kv_ax, hd_ax)
     new_spec = P(None, data_ax, kv_ax, hd_ax)
 
-    def local(ks, vs, kn, vn, fr, sl):
+    def local(ks, vs, kn, vn, fr, sl, ok):
         ks2 = ks[:, 0]
         vs2 = vs[:, 0]
-        ks2, vs2 = _commit_plain(ks2, vs2, kn, vn, fr, sl)
+        ks2, vs2 = _commit_plain(ks2, vs2, kn, vn, fr, sl, ok)
         return ks2[:, None], vs2[:, None]
 
     f = shard_map(local, mesh=mesh,
                   in_specs=(stack_spec, stack_spec, new_spec, new_spec,
-                            P(data_ax), P(data_ax)),
+                            P(data_ax), P(data_ax), P(data_ax)),
                   out_specs=(stack_spec, stack_spec), check_vma=False)
-    return f(k_stack, v_stack, k_new, v_new, frame, slot)
+    return f(k_stack, v_stack, k_new, v_new, frame, slot, valid)
 
 
 def update_gather_pooled(k_slabs: jax.Array, v_slabs: jax.Array,
@@ -361,17 +373,21 @@ def scatter_prefill_plain(k_slabs: jax.Array, v_slabs: jax.Array,
                           k: jax.Array, v: jax.Array,
                           phys_blocks: jax.Array, positions: jax.Array,
                           block_tokens: int) -> Tuple[jax.Array, jax.Array]:
-    """Scatter a full prompt's KV into slabs.  k [B,S,K,hd]; positions [B,S]."""
+    """Scatter a full prompt's KV into slabs.  k [B,S,K,hd]; positions
+    [B,S].  Tokens whose block is unmapped (-1: inactive/padding rows) are
+    redirected out of bounds, which JAX scatter drops — never frame 0."""
     B, S = positions.shape
     bt = block_tokens
     blk = jnp.clip(positions // bt, 0, phys_blocks.shape[1] - 1)
-    frame = jnp.take_along_axis(jnp.where(phys_blocks >= 0, phys_blocks, 0),
-                                blk, axis=1)
+    frame = jnp.take_along_axis(phys_blocks, blk, axis=1)
+    frame = jnp.where(frame >= 0, frame, k_slabs.shape[0])
     slot = positions % bt
     k_slabs = k_slabs.at[frame.reshape(-1), slot.reshape(-1)].set(
-        k.reshape((B * S,) + k.shape[2:]).astype(k_slabs.dtype))
+        k.reshape((B * S,) + k.shape[2:]).astype(k_slabs.dtype),
+        mode="drop")
     v_slabs = v_slabs.at[frame.reshape(-1), slot.reshape(-1)].set(
-        v.reshape((B * S,) + v.shape[2:]).astype(v_slabs.dtype))
+        v.reshape((B * S,) + v.shape[2:]).astype(v_slabs.dtype),
+        mode="drop")
     return k_slabs, v_slabs
 
 

@@ -47,6 +47,9 @@ class PagedKVManager:
         self.max_blocks = max_blocks_per_seq
         self.n_frames = n_frames
         self._seq_pod: Dict[int, int] = {}
+        #: the scheduler's pod: it walks every row's tail block to commit
+        #: appended tokens (see ``physical_tables``)
+        self.driver_pod = 0
         self.stats = ServingStats()
 
     # ------------------------------------------------------------- lifecycle
@@ -70,30 +73,53 @@ class PagedKVManager:
 
     # ------------------------------------------------------------ tables
     def logical_tables(self, seq_ids: List[int]) -> np.ndarray:
-        """[len(seq_ids), max_blocks] logical block ids, -1 padded."""
+        """[len(seq_ids), max_blocks] logical block ids, -1 padded.  A
+        negative seq id is an inactive batch row (wave padding): its table
+        stays all -1 so the device masks it out of update and gather."""
         out = np.full((len(seq_ids), self.max_blocks), -1, np.int32)
         for r, sid in enumerate(seq_ids):
+            if sid < 0:
+                continue
             blocks = self.host.seqs[sid].logical_blocks
             out[r, :len(blocks)] = blocks[:self.max_blocks]
         return out
 
-    def physical_tables(self, seq_ids: List[int], pod: int = 0,
+    def physical_tables(self, seq_ids: List[int],
+                        pod: Optional[int] = None,
                         record: bool = True) -> np.ndarray:
-        """Translate to physical frame ids via the pod's replica (the page
-        walk).  Misses trigger the numaPTE on-demand fetch protocol."""
+        """Translate to physical frame ids (the page walk).
+
+        ``pod=None`` (the serving default) walks each row through its
+        *home* pod — the attention shard that owns the sequence's pool, so
+        the common-case walk is replica-local — and additionally records
+        the driver pod's walk of the row's tail block (the scheduler
+        commits the appended token through its own replica).  The driver
+        walks are what generate real cross-pod fetch/prefetch traffic
+        under NUMAPTE once sequences are homed off pod 0.  An explicit
+        ``pod`` keeps the legacy single-pod walk.  Misses trigger the
+        numaPTE on-demand fetch protocol; negative seq ids (padding rows)
+        are skipped entirely."""
         logical = self.logical_tables(seq_ids)
         epb = self.spec.entries_per_table
         out = np.full_like(logical, -1)
-        for r in range(logical.shape[0]):
+        for r, sid in enumerate(seq_ids):
+            if sid < 0:
+                continue
+            walk_pod = self._seq_pod[sid] if pod is None else pod
+            tail_lb = -1
             for c in range(logical.shape[1]):
                 lb = int(logical[r, c])
                 if lb < 0:
                     continue
                 if record:
-                    self.host.record_access(pod, lb)
+                    self.host.record_access(walk_pod, lb)
                 tid, slot = divmod(lb, epb)
                 raw = int(self.host.canonical[tid, slot])
                 out[r, c] = raw & ((1 << 28) - 1) if raw >= 0 else -1
+                tail_lb = lb
+            if (pod is None and record and tail_lb >= 0
+                    and walk_pod != self.driver_pod):
+                self.host.record_access(self.driver_pod, tail_lb)
         return out
 
     # ------------------------------------------------------------ accounting

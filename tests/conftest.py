@@ -78,6 +78,10 @@ _REQUIREMENTS = [
     ("test_models.py", "test_decode_matches_forward", ("shard_map",)),
     ("test_models.py", "test_whisper_decode_matches_forward", ("shard_map",)),
     ("test_runtime.py", "test_serving_modes_agree_and_filter", ("shard_map",)),
+    ("test_serve_driver.py", "test_serve_partial_final_wave_and_pod_fetches",
+     ("shard_map",)),
+    ("test_serve_driver.py", "test_serve_warms_jit_before_timer",
+     ("shard_map",)),
     ("test_system.py", "test_end_to_end_serving_generates_same_tokens_"
                        "under_all_policies", ("shard_map",)),
     ("test_distributed.py", "test_small_mesh_train_and_serve_steps",

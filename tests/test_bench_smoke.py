@@ -32,6 +32,7 @@ def test_bench_json_schema(tmp_path):
         assert d["concurrency"] is None
         assert d["spinners"] is None
         assert d["tenants"] is None
+        assert d["arrival_rate"] is None
         assert d["row_types"] == ["data"]
         assert d["error"] is None
         assert d["elapsed_s"] >= 0
@@ -136,6 +137,61 @@ def test_colocation_artifact(tmp_path):
     d = _load(written["colocation"])
     assert d["tenants"] is None
     assert all(r["tenants"] == 3 for r in d["rows"])   # quick default
+
+
+def test_serving_closed_loop_artifact(tmp_path):
+    """Schema v7: the closed-loop serving benchmark — four policies per
+    offered load, latency quantiles monotone nondecreasing in the offered
+    load (1% tolerance for batching-alignment jitter), goodput never
+    above offered, saturated rows carrying ``runtime_vs_linux``, the
+    vectorized settlement provenance on every row, and the
+    ``--arrival-rate`` knob recorded in the payload when passed."""
+    from benchmarks.serving_closed_loop import LOAD_FACTORS_QUICK
+
+    written = run_benchmarks(["serving_closed_loop"], quick=True,
+                             outdir=str(tmp_path), strict=True)
+    d = _load(written["serving_closed_loop"])
+    assert d["schema_version"] == SCHEMA_VERSION
+    assert d["arrival_rate"] is None
+    assert d["row_types"] == ["serving_latency"]
+    assert d["error"] is None
+    json.dumps(d)
+
+    policies = ("linux", "mitosis", "numapte", "numapte+elide")
+    by = {}
+    for r in d["rows"]:
+        assert r["row_type"] == "serving_latency"
+        assert r["settle_engine"] == "vector"
+        assert r["goodput_rps"] <= r["offered_rps"]
+        assert 0 < r["p50_us"] <= r["p99_us"]
+        by[(r["policy"], r["load_factor"])] = r
+    assert set(by) == {(p, f) for p in policies for f in LOAD_FACTORS_QUICK}
+    # latency quantiles rise with offered load (closed-loop queueing)
+    for p in policies:
+        for q in ("p50_us", "p99_us"):
+            curve = [by[(p, f)][q] for f in LOAD_FACTORS_QUICK]
+            assert all(b >= 0.99 * a for a, b in zip(curve, curve[1:])), \
+                (p, q, curve)
+    # runtime_vs_linux only on the saturating top-load rows
+    top = LOAD_FACTORS_QUICK[-1]
+    for (p, f), r in by.items():
+        assert ("runtime_vs_linux" in r) == (f == top), (p, f)
+    assert by[("linux", top)]["runtime_vs_linux"] == 1.0
+    # elision strictly halves the eager munmap IPI traffic here
+    for f in LOAD_FACTORS_QUICK:
+        assert by[("numapte+elide", f)]["ipis"] <= by[("numapte", f)]["ipis"]
+        assert by[("numapte+elide", f)]["flushes_elided"] > 0
+
+    # the --arrival-rate knob overrides the nominal-capacity base rate
+    # and is recorded in the payload
+    written = run_benchmarks(["serving_closed_loop"], quick=True,
+                             outdir=str(tmp_path / "knob"), strict=True,
+                             arrival_rate=50_000.0)
+    d = _load(written["serving_closed_loop"])
+    assert d["arrival_rate"] == 50_000.0
+    first = min(LOAD_FACTORS_QUICK)
+    assert any(r["load_factor"] == first
+               and r["offered_rps"] == 50_000.0 * first for r in d["rows"])
 
 
 def test_fig13_numapte_beats_linux(tmp_path):

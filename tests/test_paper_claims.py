@@ -363,6 +363,51 @@ def test_fig11_elide_strictly_fewer_ipis_than_eager_numapte():
         assert elide["shootdown_rounds"] <= eager["shootdown_rounds"]
 
 
+def test_closed_loop_serving_tail_latency_and_runtime_band():
+    """PR-8 acceptance gate — the closed-loop serving form of the paper's
+    +12% (Webserver) / +36% (Memcached) runtime claims.  At the
+    saturating offered load (1.25x nominal capacity), on one shared
+    Poisson trace:
+
+      * Linux's p99 request latency is >= 1.12x numaPTE's — the decode
+        barrier converts Linux's process-wide IPI rounds and responder
+        stretch straight into tail latency;
+      * Mitosis is no better than numaPTE at the tail (it pays eager
+        replication's mutation fan-out on every table update);
+      * the saturated-makespan improvement linux/numapte lands inside
+        the band the paper's two end-to-end claims span: [1.12, 1.36];
+      * ``numapte+elide`` issues at most eager numaPTE's IPIs while
+        eliding real flushes — deferral never invents traffic;
+      * the co-located tenant's interrupt leak is smallest under the
+        sharer-filtered policies (the multi-tenant isolation story)."""
+    from repro.serving import (SERVING_POLICIES, nominal_capacity_rps,
+                               poisson_trace, run_closed_loop)
+
+    n = 96
+    rate = nominal_capacity_rps() * 1.25
+    trace = poisson_trace(n, rate, seed=0)
+    res = {p: run_closed_loop(p, arrival_rate_rps=rate, n_requests=n,
+                              trace=trace) for p in SERVING_POLICIES}
+    for r in res.values():
+        assert r["completed"] == n
+        assert r["settle_engine"] == "vector"
+    assert res["linux"]["p99_us"] >= 1.12 * res["numapte"]["p99_us"]
+    assert res["mitosis"]["p99_us"] >= res["numapte"]["p99_us"]
+    ratio = res["linux"]["makespan_ms"] / res["numapte"]["makespan_ms"]
+    assert 1.12 <= ratio <= 1.36, ratio
+    elide, eager = res["numapte+elide"], res["numapte"]
+    assert elide["ipis"] <= eager["ipis"]
+    assert elide["flushes_elided"] > 0
+    assert elide["shootdown_rounds"] <= eager["shootdown_rounds"]
+    # the filter contains the cross-tenant leak; Linux's fan-out doesn't
+    assert res["linux"]["victim_interrupt_us"] > \
+        2 * res["numapte"]["victim_interrupt_us"]
+    # numaPTE's responders are never stretched: the filter keeps every
+    # other socket's CPUs out of the receive queues on both sides
+    assert res["numapte"]["responder_delay_us"] == 0.0
+    assert res["linux"]["responder_delay_us"] > 0
+
+
 def test_fig8_execution_parity_with_mitosis():
     """numaPTE matches Mitosis's execution phase despite laziness."""
     spec = APPS["btree"]
