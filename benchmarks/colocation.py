@@ -32,10 +32,12 @@ from .common import csv, policies
 
 
 def run_one(policy: Policy, filt: bool, tenants: int, iters: int,
-            pages: int, rounds: int, storm: bool) -> dict:
+            pages: int, rounds: int, storm: bool,
+            engine: str = "trace") -> dict:
     """One colocated run; ``storm=False`` is the quiet reference (same
     layout and setup, only the measured munmap storm is skipped)."""
     sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
+                                            engine=engine,
                                             concurrency="overlap"))
     step = sim.topo.hw_threads_per_node
     if not 1 <= tenants <= sim.topo.n_nodes - 1:
@@ -108,9 +110,11 @@ def run_one(policy: Policy, filt: bool, tenants: int, iters: int,
     }
 
 
-def main(quick: bool = False, scale: int = 1, tenants: int = None) -> list:
+def main(quick: bool = False, scale: int = 1, tenants: int = None,
+         engine: str = "trace") -> list:
     """``tenants`` victim tenants (default 3 quick / 7 full — one per
-    non-storm socket); ``scale`` multiplies the storm's munmap count."""
+    non-storm socket); ``scale`` multiplies the storm's munmap count;
+    ``engine`` picks the mm-op engine the storm batches compile on."""
     if tenants is None:
         tenants = 3 if quick else 7
     iters = (150 if quick else 400) * scale
@@ -118,9 +122,9 @@ def main(quick: bool = False, scale: int = 1, tenants: int = None) -> list:
     rows = []
     for name, policy, filt in policies():
         quiet = run_one(policy, filt, tenants, iters, pages, rounds,
-                        storm=False)
+                        storm=False, engine=engine)
         stormy = run_one(policy, filt, tenants, iters, pages, rounds,
-                        storm=True)
+                        storm=True, engine=engine)
         leak = stormy["victim_total_ns"] - quiet["victim_total_ns"]
         rows.append({
             "row_type": "colocation",

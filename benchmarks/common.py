@@ -75,22 +75,53 @@ def concurrency_modes(concurrency: str = "both") -> List[str]:
     raise ValueError(f"unknown concurrency {concurrency!r}")
 
 
+#: engines the walltime rows sweep, fastest first (the compiled trace
+#: engine, the per-op batch engine, and the scalar reference loops)
+WALLTIME_ENGINES = ("trace", "batch", "scalar")
+
+
 def engine_walltime_rows(run_fn: Callable[[str, int], object],
-                         scales: List[int]) -> List[Dict]:
+                         scales: List[int],
+                         engines=WALLTIME_ENGINES) -> List[Dict]:
     """``row_type="engine_walltime"`` rows: host wall seconds of the same
-    workload on the batched mm-op engine vs the scalar reference, swept
-    over ``--scale`` factors (the engine-speed story the JSON carries
-    across PRs).  ``run_fn(engine, scale_factor)`` runs one workload."""
+    workload per mm-op engine — the compiled trace engine and the batch
+    engine vs the scalar reference — swept over ``--scale`` factors (the
+    engine-speed story the JSON carries across PRs).
+
+    ``run_fn(engine, scale_factor)`` runs one workload; if it returns a
+    dict carrying ``"mm_engine"`` (``sim.last_mm_engine``), that
+    provenance is recorded per row so a speedup can never silently come
+    from the wrong engine, and if the dict carries ``"wall_s"`` that
+    self-measured wall is used instead of timing the whole call — so a
+    workload with heavy engine-independent setup (e.g. spawning the
+    280-spinner load) can report the measured phase alone.  Each engine
+    gets one untimed warmup run (caches, allocator, any jit tracing) and
+    the row keeps the best of 3 timed runs, so the committed walltime
+    trajectory stops jittering across CI runs."""
     rows: List[Dict] = []
     for s in scales:
-        walls = {}
-        for eng in ("batch", "scalar"):
-            t0 = time.perf_counter()
-            run_fn(eng, s)
-            walls[eng] = time.perf_counter() - t0
-        rows.append({"row_type": "engine_walltime", "scale_factor": s,
-                     "wall_batch_s": round(walls["batch"], 4),
-                     "wall_scalar_s": round(walls["scalar"], 4),
-                     "batch_speedup": round(
-                         walls["scalar"] / max(walls["batch"], 1e-9), 2)})
+        walls: Dict[str, float] = {}
+        prov: Dict[str, str] = {}
+        for eng in engines:
+            res = run_fn(eng, s)                   # warmup, untimed
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                res = run_fn(eng, s)
+                wall = (res["wall_s"]
+                        if isinstance(res, dict) and "wall_s" in res
+                        else time.perf_counter() - t0)
+                best = min(best, wall)
+            walls[eng] = best
+            prov[eng] = (res.get("mm_engine", eng)
+                         if isinstance(res, dict) else eng)
+        row: Dict = {"row_type": "engine_walltime", "scale_factor": s,
+                     "mm_engine": prov}
+        for eng in engines:
+            row[f"wall_{eng}_s"] = round(walls[eng], 4)
+        for eng in engines:
+            if eng != "scalar" and "scalar" in walls:
+                row[f"{eng}_speedup"] = round(
+                    walls["scalar"] / max(walls[eng], 1e-9), 2)
+        rows.append(row)
     return rows

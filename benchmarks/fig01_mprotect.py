@@ -4,10 +4,11 @@ Paper claims reproduced: Linux degrades up to ~40x at full spin;
 Mitosis adds ~25% at zero spinners (replica coherence); numaPTE with the
 TLB-shootdown filter stays ~flat.  Values normalized to Linux/0-spinners.
 
-Runs on the batched mm-op engine (``NumaSim.mprotect_batch``) by default —
-byte-identical counters/times to the scalar loop (differentially tested) —
-so ``--scale`` can push the iteration count toward paper scale; pass
-``engine="scalar"`` for the per-op reference path.
+Runs on the compiled trace engine (``repro.core.trace`` windowed array
+execution) by default — byte-identical counters/times to the batch engine
+and the scalar loop (differentially tested) — so ``--scale`` can push the
+iteration count toward paper scale; pass ``engine="batch"`` for the
+per-op batched path or ``engine="scalar"`` for the per-op reference.
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ from .common import csv, make_spinners, mprotect_loop, policies
 
 
 def run_one(policy: Policy, tlb_filter: bool, spin: int,
-            iters: int = 200, engine: str = "batch") -> dict:
+            iters: int = 200, engine: str = "trace") -> dict:
     sim = make_sim(PAPER_8SOCKET,
                    SimConfig(policy=policy, prefetch_degree=0,
                              tlb_filter=tlb_filter, engine=engine))
@@ -33,14 +34,14 @@ def run_one(policy: Policy, tlb_filter: bool, spin: int,
             "ipis_remote": c.ipis_remote, "ipis_filtered": c.ipis_filtered}
 
 
-def main(quick: bool = False, scale: int = 1) -> list:
+def main(quick: bool = False, scale: int = 1, engine: str = "trace") -> list:
     iters = 200 * scale
     spins = [0, 4, 18, 35] if quick else [0, 1, 2, 4, 9, 18, 27, 35]
-    base = run_one(Policy.LINUX, False, 0, iters)["ns_per_op"]
+    base = run_one(Policy.LINUX, False, 0, iters, engine)["ns_per_op"]
     rows = []
     for name, policy, filt in policies():
         for spin in spins:
-            r = run_one(policy, filt, spin, iters)
+            r = run_one(policy, filt, spin, iters, engine)
             rows.append({"policy": name, "spin_per_socket": spin,
                          "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
                          **r})

@@ -6,8 +6,9 @@ range), while numaPTE avoids it entirely; at 512KB Mitosis *slows down*
 vs Linux while numaPTE speeds up (Fig 2b).
 
 The mmap/munmap workload is phased (mmap all, touch all, munmap all) and
-runs on the batched mm-op engine by default — byte-identical to the scalar
-reference (``engine="scalar"``) — so ``--scale`` raises the iteration
+runs on the compiled trace engine by default (``--engine`` selects; the
+batch engine and the scalar reference ``engine="scalar"`` are
+byte-identical alternatives) — so ``--scale`` raises the iteration
 count without leaving the per-op cost regime the figure measures.
 """
 from __future__ import annotations
@@ -21,9 +22,12 @@ from .common import csv, engine_walltime_rows, policies
 
 
 def run_one(policy: Policy, filt: bool, op: str, n_pages: int,
-            iters: int = 50, engine: str = "batch") -> float:
+            iters: int = 50, engine: str = "trace",
+            prov: dict = None) -> float:
     sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
                                             engine=engine))
+    if prov is not None:           # filled before return, see _walltime_run
+        prov["sim"] = sim
     main = sim.spawn_thread(0)
     if op == "mprotect":
         vma = sim.mmap(main, n_pages)
@@ -64,24 +68,35 @@ def run_one(policy: Policy, filt: bool, op: str, n_pages: int,
     return (t_mmap if op == "mmap" else t_munmap) / iters
 
 
-def main(quick: bool = False, scale: int = 1) -> list:
+def _walltime_run(engine: str, scale: int) -> dict:
+    """One walltime-row workload run; returns the ``mm_engine``
+    provenance the sim recorded (``sim.last_mm_engine``)."""
+    prov: dict = {}
+    run_one(Policy.LINUX, False, "munmap", 32, iters=25 * scale,
+            engine=engine, prov=prov)
+    # the scalar reference runs pure per-op loops (no batch dispatch), so
+    # the sim may have recorded no engine — that IS the scalar path
+    return {"mm_engine": prov["sim"].last_mm_engine or engine}
+
+
+def main(quick: bool = False, scale: int = 1, engine: str = "trace") -> list:
     iters = 50 * scale
     sizes = {"4KB": 1, "128KB": 32, "512KB": 128} if quick else \
         {"4KB": 1, "64KB": 16, "128KB": 32, "512KB": 128, "2MB": 512}
     rows = []
     for op in ("mmap", "munmap", "mprotect"):
         for label, n in sizes.items():
-            base = run_one(Policy.LINUX, False, op, n, iters)
+            base = run_one(Policy.LINUX, False, op, n, iters, engine=engine)
             for name, pol, filt in policies():
-                ns = run_one(pol, filt, op, n, iters)
+                ns = run_one(pol, filt, op, n, iters, engine=engine)
                 rows.append({"op": op, "range": label, "policy": name,
                              "ns": round(ns), "vs_linux": round(ns / base, 3)})
     # engine wall-time comparison: the same phased mmap/touch/munmap
-    # workload on the batched engine vs the scalar reference, scale-swept
+    # workload on the compiled trace / batch engines vs the scalar
+    # reference, scale-swept (quick keeps only the requested scale so the
+    # CI --scale 16 smoke emits exactly its regime's row)
     rows += engine_walltime_rows(
-        lambda eng, s: run_one(Policy.LINUX, False, "munmap", 32,
-                               iters=25 * s, engine=eng),
-        [1] if quick else [1, 2, max(scale, 4)])
+        _walltime_run, [scale] if quick else [1, 2, max(scale, 4)])
     return csv("fig09_mm_ops", rows)
 
 

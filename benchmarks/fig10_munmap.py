@@ -3,13 +3,16 @@ full spin (23% at zero); numaPTE+filter lands at ~2.6x (local-socket IPIs
 only) and matches Linux at zero spinners.
 
 The workload is phased — mmap all ranges, first-touch them, then munmap
-them back-to-back (the measured phase) — identically under both engines;
-``engine="batch"`` runs each phase through the batched mm-op engine
-(``mmap_batch`` / ``touch_batch`` / ``munmap_batch``), which is
-byte-identical in counters and modeled time, so ``--scale`` can raise the
-munmap count toward paper scale.
+them back-to-back (the measured phase) — identically under every engine;
+the default ``engine="trace"`` compiles each phase into windowed array
+execution (``repro.core.trace``), ``engine="batch"`` runs the per-op
+batched engine, and both are byte-identical in counters and modeled time
+to the scalar reference, so ``--scale`` can raise the munmap count
+toward paper scale.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -20,7 +23,7 @@ from .common import csv, engine_walltime_rows, make_spinners, policies
 
 
 def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150,
-            engine: str = "batch") -> dict:
+            engine: str = "trace") -> dict:
     sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
                                             engine=engine))
     main = sim.spawn_thread(0)
@@ -30,6 +33,7 @@ def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150,
         for v in vmas:
             sim.touch(main, v.start_vpn, write=True)
         t0 = sim.thread_time_ns(main)
+        wall = time.perf_counter()
         for v in vmas:
             sim.munmap(main, v.start_vpn, 1)
     else:
@@ -37,32 +41,38 @@ def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150,
         starts = np.asarray([v.start_vpn for v in vmas], dtype=np.int64)
         sim.touch_batch(main, starts, True)
         t0 = sim.thread_time_ns(main)
+        wall = time.perf_counter()
         sim.munmap_batch(main, starts, 1)
+    wall = time.perf_counter() - wall
     total = sim.thread_time_ns(main) - t0
     sim.check_invariants()
     c = sim.counters
     return {"ns_per_op": round(total / iters, 1),
-            "ipis_filtered": c.ipis_filtered}
+            "ipis_filtered": c.ipis_filtered,
+            "mm_engine": sim.last_mm_engine or engine,
+            "wall_s": round(wall, 4)}
 
 
-def main(quick: bool = False, scale: int = 1) -> list:
+def main(quick: bool = False, scale: int = 1, engine: str = "trace") -> list:
     iters = 150 * scale
     spins = [0, 18, 35] if quick else [0, 1, 2, 4, 9, 18, 27, 35]
-    base = run_one(Policy.LINUX, False, 0, iters)["ns_per_op"]
+    base = run_one(Policy.LINUX, False, 0, iters, engine)["ns_per_op"]
     rows = []
     for name, policy, filt in policies():
         for spin in spins:
-            r = run_one(policy, filt, spin, iters)
+            r = run_one(policy, filt, spin, iters, engine)
             rows.append({"policy": name, "spin_per_socket": spin,
                          "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
                          **r})
-    # engine wall-time comparison (ROADMAP open item): the same full-spin
-    # munmap storm on the batched engine vs the scalar reference, swept
-    # over --scale so the speedup trajectory is diffable across PRs
+    # engine wall-time comparison (ROADMAP open item): the full-spin
+    # munmap storm — the paper's 280-spinner regime (35/socket) — on the
+    # compiled trace / batch engines vs the scalar reference, swept over
+    # --scale so the speedup trajectory is diffable across PRs (quick
+    # keeps only the requested scale: the CI --scale 16 smoke's row)
     rows += engine_walltime_rows(
-        lambda eng, s: run_one(Policy.LINUX, False, 18, iters=40 * s,
+        lambda eng, s: run_one(Policy.LINUX, False, 35, iters=40 * s,
                                engine=eng),
-        [1] if quick else [1, 2, max(scale, 4)])
+        [scale] if quick else [1, 2, max(scale, 4)])
     return csv("fig10_munmap", rows)
 
 

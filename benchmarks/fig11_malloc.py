@@ -99,7 +99,7 @@ def _columns(quick: bool):
     return cols
 
 
-def main(quick: bool = False, scale: int = 1) -> list:
+def main(quick: bool = False, scale: int = 1, engine: str = "trace") -> list:
     iters = 150 * scale
     rows = []
     sockets = [2, 8] if quick else [1, 2, 4, 8]
@@ -108,10 +108,10 @@ def main(quick: bool = False, scale: int = 1) -> list:
         for flavor in flavors:
             for ns_ in sockets:
                 base = run_one(Policy.LINUX, False, ns_, flavor, stateful,
-                               iters)["ns_per_cycle"]
+                               iters, engine=engine)["ns_per_cycle"]
                 for name, pol, filt, elide in _columns(quick):
                     r = run_one(pol, filt, ns_, flavor, stateful, iters,
-                                elide=elide)
+                                engine=engine, elide=elide)
                     rows.append({
                         "bench": "stateful" if stateful else "stateless",
                         "alloc": flavor, "sockets": ns_, "policy": name,

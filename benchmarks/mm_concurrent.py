@@ -335,7 +335,8 @@ def run_absolute_ramp(*, spinner_loads=ABS_SPINNER_LOADS,
     return rows
 
 
-def settlement_walltime_rows(*, iters: int = 40) -> list:
+def settlement_walltime_rows(*, iters: int = 40,
+                             engine: str = "batch") -> list:
     """``row_type="engine_walltime"`` rows for the settlement engine
     itself: host wall seconds of the top-of-ramp munmap storm (Linux,
     8 initiators, 280 resident spinners — the heaviest fan-out) with
@@ -345,7 +346,8 @@ def settlement_walltime_rows(*, iters: int = 40) -> list:
     walls, ops = {}, {}
     for eng in ("vector", "sequential"):
         r = run_storm(Policy.LINUX, False, ABS_WORKERS, iters=iters,
-                      spin=max(ABS_SPINNER_LOADS), settle=eng)
+                      spin=max(ABS_SPINNER_LOADS), engine=engine,
+                      settle=eng)
         walls[eng] = r["wall_s"]
         ops[eng] = {k: v for k, v in r.items()
                     if k not in ("wall_s", "settle_engine")}
@@ -363,14 +365,16 @@ def settlement_walltime_rows(*, iters: int = 40) -> list:
 
 def main(quick: bool = False, scale: int = 1,
          concurrency: str = "both",
-         spinners: int = RAMP_SPINNERS_DEFAULT) -> list:
+         spinners: int = RAMP_SPINNERS_DEFAULT,
+         engine: str = "trace") -> list:
     n_ops = (600 if quick else 2500) * scale
     rows = []
     # mixed-ops: the PR-2 scenario, swept over shootdown-settlement modes
     for mode in concurrency_modes(concurrency):
         base = None
         for name, policy, filt in policies():
-            r = run_one(policy, filt, n_ops, concurrency=mode)
+            r = run_one(policy, filt, n_ops, engine=engine,
+                        concurrency=mode)
             if name == "linux":
                 base = r["modeled_ms"]
             rows.append({"scenario": "mixed-ops", "concurrency": mode,
@@ -386,7 +390,7 @@ def main(quick: bool = False, scale: int = 1,
             base = None
             for w in threads:
                 r = run_storm(policy, filt, w, iters=storm_iters,
-                              concurrency=mode)
+                              engine=engine, concurrency=mode)
                 if base is None:
                     base = r["ns_per_op"]
                 rows.append({"scenario": "munmap-storm", "concurrency": mode,
@@ -400,12 +404,13 @@ def main(quick: bool = False, scale: int = 1,
     if "overlap" in concurrency_modes(concurrency):
         rows += run_ramp(spinners,
                          workers=((1, 4, 16) if quick else RAMP_WORKERS),
-                         iters=(40 if quick else 60) * scale)
+                         iters=(40 if quick else 60) * scale, engine=engine)
         rows += run_absolute_ramp(
             spinner_loads=(ABS_SPINNER_LOADS_QUICK if quick
                            else ABS_SPINNER_LOADS),
-            iters=(30 if quick else 60) * scale)
-        rows += settlement_walltime_rows(iters=(30 if quick else 60) * scale)
+            iters=(30 if quick else 60) * scale, engine=engine)
+        rows += settlement_walltime_rows(iters=(30 if quick else 60) * scale,
+                                         engine=engine)
     # app churn: loading + exec + mprotect pass + teardown of the btree app
     spec = APPS["btree"]
     accesses = (2000 if quick else 8000) * scale

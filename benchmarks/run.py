@@ -1,19 +1,33 @@
 """Benchmark harness: one function per paper table/figure.
 
-``python -m benchmarks.run [--quick] [--only NAME] [--scale N]
+``python -m benchmarks.run [--quick] [--only NAME[,NAME...]] [--scale N]
                            [--outdir DIR] [--strict] [--spinners N]
-                           [--emit-root]``
+                           [--engine ENGINE] [--emit-root]``
 
 prints ``name,key=value,...`` CSV rows for every reproduced artifact and
 writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
 ``bench_out/``) so the perf trajectory is machine-readable and CI can
-archive it.  JSON schema (version 7):
+archive it.  JSON schema (version 8):
 
-    {"schema_version": 7, "name": str, "quick": bool, "scale": int,
+    {"schema_version": 8, "name": str, "quick": bool, "scale": int,
      "concurrency": str | null, "spinners": int | null,
      "tenants": int | null, "arrival_rate": float | null,
+     "engine": str | null,
      "elapsed_s": float, "rows": [ {column: value, ...} ],
      "row_types": [str, ...], "error": str | null}
+
+Version 8 adds the compiled trace engine (``repro.core.trace``: whole
+op-traces lowered into dense numpy tables, partitioned into conflict-free
+windows and settled per window through the vectorized settlement engine)
+and its knob: ``engine`` records which mm-op engine the benchmark ran on
+(``--engine {trace,batch,scalar}``; benchmarks with the knob default to
+``trace`` — byte-identical modeled results to ``batch``/``scalar``, so
+only walltimes move — and ``engine`` is null in artifacts of benchmarks
+without it).  The mm-heavy benchmarks' ``engine_walltime`` rows grow
+``wall_trace_s`` / ``trace_speedup`` columns plus a per-row ``mm_engine``
+provenance dict (one warmup + best-of-3 per engine de-noises them), and
+``--only`` accepts a comma-separated benchmark list so the CI trace
+smoke can target the mm-heavy pair.
 
 Version 7 adds the trace-driven closed-loop serving benchmark
 (``serving_closed_loop``): Poisson arrivals feed a PagedKVManager-shaped
@@ -120,7 +134,7 @@ BENCHES = {
     "roofline": roofline.main,
 }
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 
 #: where --emit-root writes the canonical BENCH_<name>.json files: the
 #: repository root, resolved from this package's location so the flag
@@ -163,6 +177,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
                    spinners: Optional[int] = None,
                    tenants: Optional[int] = None,
                    arrival_rate: Optional[float] = None,
+                   engine: Optional[str] = None,
                    emit_root: bool = False) -> Dict[str, str]:
     """Run benchmarks, print their CSV, and write BENCH_<name>.json files.
 
@@ -200,8 +215,14 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             arrival_rate_used = arrival_rate
             if arrival_rate is not None:
                 kwargs["arrival_rate"] = arrival_rate
+        engine_used = None
+        if "engine" in params:
+            engine_used = (engine if engine is not None
+                           else params["engine"].default)
+            if engine is not None:
+                kwargs["engine"] = engine
         print(f"# --- {name} ---", file=sys.stderr)
-        t0 = time.time()
+        t0 = time.perf_counter()
         rows, error = None, None
         try:
             rows = fn(**kwargs)
@@ -210,7 +231,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
                 raise
             error = f"{type(exc).__name__}: {exc}"
             print(f"# {name} FAILED: {error}", file=sys.stderr)
-        elapsed = time.time() - t0
+        elapsed = time.perf_counter() - t0
         payload = {
             "schema_version": SCHEMA_VERSION,
             "name": name,
@@ -220,6 +241,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             "spinners": spinners_used,
             "tenants": tenants_used,
             "arrival_rate": arrival_rate_used,
+            "engine": engine_used,
             "elapsed_s": round(elapsed, 3),
             "rows": rows or [],
             "row_types": sorted({row.get("row_type", "data")
@@ -249,7 +271,20 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", choices=list(BENCHES))
+
+    def bench_names(v: str) -> list:
+        names = [n for n in v.split(",") if n]
+        unknown = [n for n in names if n not in BENCHES]
+        if unknown:
+            raise argparse.ArgumentTypeError(
+                f"unknown benchmark(s) {unknown}; pick from "
+                f"{sorted(BENCHES)}")
+        return names
+
+    ap.add_argument("--only", type=bench_names, default=None,
+                    metavar="NAME[,NAME...]",
+                    help="run only these benchmarks (comma-separated; "
+                         f"choices: {', '.join(sorted(BENCHES))})")
     def positive_int(v: str) -> int:
         n = int(v)
         if n < 1:
@@ -306,17 +341,27 @@ def main() -> None:
                          "offered-load sweep (default: its nominal-"
                          "capacity estimate; 'arrival_rate' is null in "
                          "artifacts of benchmarks without the knob)")
+    from repro.core import ENGINES
+    ap.add_argument("--engine", default=None, choices=list(ENGINES),
+                    help="mm-op engine for the benchmarks with the knob "
+                         "(trace = compiled windowed replay, batch = "
+                         "per-op batched engine, scalar = reference "
+                         "loops; byte-identical modeled results, only "
+                         "walltimes differ).  Default: each benchmark's "
+                         "own default (trace for the mm-heavy ones); "
+                         "'engine' is null in artifacts of benchmarks "
+                         "without the knob")
     ap.add_argument("--emit-root", action="store_true",
                     help="also write canonical BENCH_<name>.json files at "
                          "the repository root (the committed perf "
                          "trajectory; resolved from the package location, "
                          "CWD-independent)")
     args = ap.parse_args()
-    run_benchmarks([args.only] if args.only else None, quick=args.quick,
+    run_benchmarks(args.only, quick=args.quick,
                    scale=args.scale, outdir=args.outdir, strict=args.strict,
                    concurrency=args.concurrency, spinners=args.spinners,
                    tenants=args.tenants, arrival_rate=args.arrival_rate,
-                   emit_root=args.emit_root)
+                   engine=args.engine, emit_root=args.emit_root)
 
 
 if __name__ == "__main__":

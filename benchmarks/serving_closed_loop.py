@@ -32,10 +32,13 @@ LOAD_FACTORS_FULL = (0.25, 0.5, 0.75, 1.0, 1.25)
 
 
 def main(quick: bool = False, scale: int = 1,
-         arrival_rate: Optional[float] = None) -> list:
+         arrival_rate: Optional[float] = None,
+         engine: str = "trace") -> list:
     """``arrival_rate`` (requests per modeled second) overrides the
     nominal-capacity base rate the load factors multiply; ``scale``
-    multiplies the request count."""
+    multiplies the request count; ``engine`` picks the mm-op engine the
+    per-step KV-churn batches compile on (recorded per row as
+    ``mm_engine``)."""
     n_requests = (96 if quick else 240) * scale
     base_rps = arrival_rate if arrival_rate is not None \
         else nominal_capacity_rps()
@@ -49,7 +52,8 @@ def main(quick: bool = False, scale: int = 1,
         at_rate = {}
         for policy in SERVING_POLICIES:
             r = run_closed_loop(policy, arrival_rate_rps=rate,
-                                n_requests=n_requests, seed=0, trace=trace)
+                                n_requests=n_requests, seed=0, trace=trace,
+                                engine=engine)
             at_rate[policy] = r
             rows.append({
                 "row_type": "serving_latency", "policy": policy,
@@ -71,6 +75,7 @@ def main(quick: bool = False, scale: int = 1,
                 "forced_flushes": r["forced_flushes"],
                 "victim_interrupt_us": round(r["victim_interrupt_us"], 3),
                 "settle_engine": r["settle_engine"],
+                "mm_engine": r["mm_engine"],
             })
         if factor == factors[-1]:
             # saturated-makespan improvement over Linux: the runtime form

@@ -10,7 +10,7 @@ Two cooperating implementations live here:
     (block tables with per-pod replicas and sharer masks) and is consumed by
     the serving runtime and the Pallas paged-attention kernel.
 """
-from .batch import access_stream, touch_batch
+from .batch import access_stream, group_by_leaf, touch_batch
 from .config import ENGINES, POLICIES, SimConfig, make_sim
 from .costmodel import CostModel
 from .malloc import MallocModel, gamma_sizes_pages
@@ -26,6 +26,7 @@ from .shootdown_batch import (SETTLE_MODES, BatchSettlement, settle_round,
                               supports_vector)
 from .sim import Counters, NumaSim, Process, SegfaultError, Thread
 from .tlb import TLB
+from .trace import TraceTable, compile_trace, ops_conflict, partition_windows
 from .topology import (PAPER_4SOCKET, PAPER_8SOCKET, TPU_2POD, NumaTopology,
                        socket_pair)
 from .workloads import (APPS, AppSpec, build_app, run_app, run_exec_phase,
@@ -39,7 +40,8 @@ __all__ = [
     "IPI_RECEIVE_NS", "LeafTable", "MallocModel", "NullContention",
     "QueueContention", "RoundSettlement", "SETTLE_MODES",
     "make_contention", "settle_round", "supports_vector",
-    "access_stream", "touch_batch",
+    "TraceTable", "access_stream", "compile_trace", "group_by_leaf",
+    "ops_conflict", "partition_windows", "touch_batch",
     "apply_mm_ops", "mmap_batch", "mprotect_batch", "munmap_batch",
     "NumaSim", "NumaTopology", "PAPER_4SOCKET", "PAPER_8SOCKET",
     "PERM_R", "PERM_RW", "PERM_W", "PERM_X", "PTES_PER_TABLE",

@@ -51,10 +51,11 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..kernels.fifo_miss import fifo_miss
 from .pagetable import (LEAF_SHIFT, PTE, PTES_PER_TABLE, Policy,
                         find_vma_sorted)
 
-__all__ = ["touch_batch", "access_stream"]
+__all__ = ["touch_batch", "access_stream", "group_by_leaf"]
 
 _IDX_MASK = PTES_PER_TABLE - 1
 #: beyond this magnitude float addition of integers can round; fall back.
@@ -93,8 +94,7 @@ def touch_batch(sim, tid: int, vpns, write_mask=None, *,
         if n == 1 or bool(np.all(arr[1:] > arr[:-1])):
             # strictly increasing: per-(thread, leaf-table) groups, with the
             # closed-form bulk path for fresh tables.
-            cuts = np.flatnonzero(np.diff(arr >> LEAF_SHIFT)) + 1
-            for group in np.split(arr, cuts):
+            for group in group_by_leaf(arr):
                 if not _bulk_first_touch(ctx, group, frames):
                     _general(ctx, group, frames)
         else:
@@ -102,6 +102,18 @@ def touch_batch(sim, tid: int, vpns, write_mask=None, *,
     if return_frames:
         return np.asarray(frames, dtype=np.int64)
     return n
+
+
+def group_by_leaf(arr: np.ndarray) -> List[np.ndarray]:
+    """Split a strictly-increasing vpn array into per-leaf-table runs.
+
+    This is the engine's grouping primitive (one group per consecutive
+    run of accesses that land on the same leaf table), exposed publicly
+    so the trace compiler (``repro.core.trace``) lowers touch payloads
+    through the exact same grouping the access engine replays them
+    with."""
+    cuts = np.flatnonzero(np.diff(arr >> LEAF_SHIFT)) + 1
+    return np.split(arr, cuts)
 
 
 def _touch_scalar(sim, tid: int, arr: np.ndarray, write_mask,
@@ -630,22 +642,12 @@ def _general_vec(ctx: _BatchContext, arr: np.ndarray) -> bool:
     ld = int(np.count_nonzero((dn_arr == node)[inv]))
     data_total = float(charge_tab[dn_arr][inv].sum())
 
-    # ---- pass 1: FIFO TLB simulation -> ordered miss list ----
-    fillno: Dict[int, int] = {}
-    for p, v in enumerate(entries):
-        fillno[v] = p
-    nfill = len(entries)
-    len0 = nfill
-    miss: List[int] = []
-    miss_append = miss.append
-    fg = fillno.get
-    NEG = -1 << 40
-    for vpn in arr.tolist():
-        if fg(vpn, NEG) < nfill - cap:
-            fillno[vpn] = nfill
-            nfill += 1
-            miss_append(vpn)
+    # ---- pass 1: FIFO TLB simulation -> ordered miss list (the scan
+    # kernel; REPRO_FIFO_MISS_BACKEND=jit runs it as one lax.scan) ----
+    len0 = len(entries)
+    miss: List[int] = arr[fifo_miss(arr, entries, cap)].tolist()
     n_miss = len(miss)
+    nfill = len0 + n_miss
 
     # ---- vectorized walk hits + shared protocol over absent misses ----
     t = 0.0

@@ -47,10 +47,11 @@ POLICIES = {
     "numapte": Policy.NUMAPTE,
 }
 
-#: mm-op execution engines: the vectorized batch engine and the scalar
-#: per-op reference loop (byte-identical; the differential suites are
-#: the proof)
-ENGINES = ("batch", "scalar")
+#: mm-op execution engines: the vectorized batch engine, the
+#: whole-trace compiled windowed executor (``repro.core.trace``) and the
+#: scalar per-op reference loop (all byte-identical; the differential
+#: suites are the proof)
+ENGINES = ("batch", "trace", "scalar")
 
 
 # sentinel distinguishing "kwarg omitted" from any legal explicit value,

@@ -228,7 +228,7 @@ def _apply_resolved(sim, ops, engine: str, concurrency: str,
         raise ValueError(
             f"apply_mm_ops: ops span multiple processes (asids {sorted(asids)}); "
             "issue one batch per address space")
-    if engine not in ("scalar", "batch"):
+    if engine not in ("scalar", "batch", "trace"):
         raise ValueError(f"unknown engine {engine!r}")
     if concurrency not in CONCURRENCY_MODES:
         raise ValueError(f"unknown concurrency {concurrency!r}")
@@ -244,11 +244,16 @@ def _apply_resolved(sim, ops, engine: str, concurrency: str,
     sim.contention = model
     if resolved is not None:
         sim.settle_engine = resolved
+    sim.last_mm_engine = engine
     try:
         if engine == "scalar":
             sim.last_settle_engine = resolved
             return _apply_scalar(sim, ops)
-        mm = _MMEngine(sim, ops, settle=resolved)
+        if engine == "trace":
+            from .trace import _TraceEngine
+            mm: _MMEngine = _TraceEngine(sim, ops, settle=resolved)
+        else:
+            mm = _MMEngine(sim, ops, settle=resolved)
         try:
             return mm.run()
         finally:
@@ -586,30 +591,33 @@ class _MMEngine:
             threads[tid].time_ns = w
 
     # ------------------------------------------------------------- run loop
+    def _dispatch_op(self, op: tuple):
+        """Run one op through its per-op handler (shared with the trace
+        engine's fallback path for ops outside a fast window)."""
+        kind = op[0]
+        if kind == "mprotect":
+            self._op_mprotect(op[1], op[2], op[3], op[4])
+            return None
+        if kind == "munmap":
+            self._op_munmap(op[1], op[2], op[3])
+            return None
+        if kind == "madvise":
+            self._op_madvise(op[1], op[2], op[3])
+            return None
+        if kind == "touch":
+            self._op_touch(op[1], op[2], op[3] if len(op) > 3 else None)
+            return None
+        if kind == "mmap":
+            return self._op_mmap(op[1], op[2],
+                                 op[3] if len(op) > 3 else PERM_RW)
+        self._op_migrate(op[1], op[2])  # migrate
+        return None
+
     def run(self) -> list:
         out: list = []
         try:
             for op in self.ops:
-                kind = op[0]
-                if kind == "mprotect":
-                    self._op_mprotect(op[1], op[2], op[3], op[4])
-                    out.append(None)
-                elif kind == "munmap":
-                    self._op_munmap(op[1], op[2], op[3])
-                    out.append(None)
-                elif kind == "madvise":
-                    self._op_madvise(op[1], op[2], op[3])
-                    out.append(None)
-                elif kind == "touch":
-                    self._op_touch(op[1], op[2],
-                                   op[3] if len(op) > 3 else None)
-                    out.append(None)
-                elif kind == "mmap":
-                    out.append(self._op_mmap(
-                        op[1], op[2], op[3] if len(op) > 3 else PERM_RW))
-                else:  # migrate
-                    self._op_migrate(op[1], op[2])
-                    out.append(None)
+                out.append(self._dispatch_op(op))
         finally:
             # on a mid-batch SegfaultError this leaves exactly the partial
             # state the scalar loop would have left (dues settled, times
@@ -870,11 +878,16 @@ class _MMEngine:
         return out
 
     def _update_range(self, tid: int, t: float, start: int, n: int,
-                      perms: Optional[int]) -> Tuple[float, List[int]]:
+                      perms: Optional[int],
+                      sink: Optional[List[float]] = None
+                      ) -> Tuple[float, List[int]]:
         """Batched `NumaSim._update_range`: apply perms (None = clear) to
         every present PTE in range, canonical copy + per-policy replicas.
         Charges and counters land exactly as the scalar path's per-replica
-        ``cost * wrote`` adds."""
+        ``cost * wrote`` adds.  With ``sink`` the per-replica charge
+        addends are appended there (in charge order) instead of added to
+        ``t`` — the trace engine's overlap window records them for an
+        exact deferred replay."""
         sim = self.sim
         ctr, c = sim.counters, sim.cost
         node = sim.thread_node(tid)
@@ -936,10 +949,14 @@ class _MMEngine:
                 if wrote:
                     if copy_node == node:
                         ctr.replica_writes_local += wrote
-                        t += WL * wrote
+                        v = WL * wrote
                     else:
                         ctr.replica_writes_remote += wrote
-                        t += WR * wrote
+                        v = WR * wrote
+                    if sink is None:
+                        t += v
+                    else:
+                        sink.append(v)
         return t, touched
 
     def _shootdown(self, tid: int, t: float, start: int, end: int,

@@ -343,6 +343,95 @@ class BatchSettlement:
                     self.ipis[thr.tid] += 1
         return worst, queued, queued > 0.0, n_coal, resp
 
+    def settle_window(self, t_starts: np.ndarray, my_cpu: int,
+                      tarr: np.ndarray, larr: np.ndarray,
+                      n_local: int, n_remote: int, cost) -> bool:
+        """Settle a whole *window* of W same-initiator, same-target-mask
+        rounds in one engine call (the trace engine's windowed path).
+
+        ``t_starts`` are the W round-start times the caller computed
+        assuming every round settles clean (zero queue delay, zero
+        stretch, no coalescing merge, no mid-shootdown ack extension).
+        This method *verifies* that assumption against the live horizons
+        — per element, the exact IEEE comparisons the W sequential
+        ``settle_and_charge`` calls would perform — and only if every
+        round provably settles clean does it apply the whole window's
+        state updates at once:
+
+          * ``busy[targets]`` ends at the last round's ``arrival +
+            handler`` (each clean round overwrites the previous one's);
+          * ``inflight[my_cpu]`` ends at the last round's ack window;
+          * the clock advances to ``t_starts[-1]``;
+          * every resident target thread is charged W handler occupancies
+            (one vectorized multiply under the integer-exactness guard,
+            else W sequential vector adds — bit-equal either way) and W
+            IPI deliveries.
+
+        Returns ``True`` on success (every round's initiator-side view is
+        all-zero: no extra wait, no queueing, no coalescing, no responder
+        delay) or ``False`` if any guard fails — the caller then replays
+        the window round-by-round through ``settle_and_charge``.
+        """
+        W = len(t_starts)
+        if W < 2 or not tarr.size:
+            return False
+        t_starts = np.asarray(t_starts, dtype=np.float64)
+        if not np.isfinite(t_starts).all():
+            return False
+        # clock guard: every round must leave t_start unraised (t_k >= the
+        # evolving clock, which under cleanness is just the previous t_k).
+        if t_starts[0] < self.clock or bool((np.diff(t_starts) < 0).any()):
+            return False
+        disp = np.where(larr, cost.ipi_dispatch_local_ns,
+                        cost.ipi_dispatch_remote_ns)
+        # (W, n) arrivals: element [k, i] is the one IEEE add round k
+        # performs for target i.
+        arrival = t_starts[:, None] + disp[None, :]
+        # queue guard: round 0 against the live horizons; round k>0
+        # against round k-1's busy_new = arrival + handler (my_cpu is
+        # never a target, so nothing else touches these horizons).
+        if bool((self.busy[tarr] > arrival[0]).any()):
+            return False
+        if bool(((arrival[:-1] + self.handler) > arrival[1:]).any()):
+            return False
+        # mid-shootdown guard: no target's in-flight ack window may
+        # extend (fin > arrival in any round); clean rounds never update
+        # inflight[targets], so the live values cover all W rounds.
+        if bool((self.inflight[tarr][None, :] > arrival).any()):
+            return False
+        # ---- every round is provably clean: apply the window at once.
+        last = arrival[-1] + self.handler
+        self.busy[tarr] = last
+        self.busy_touched[tarr] = True
+        self.inflight[my_cpu] = (float(t_starts[-1])
+                                 + cost.shootdown_cost_ns(n_local, n_remote))
+        self.inflight_touched[my_cpu] = True
+        self.clock = float(t_starts[-1])
+        tids = self.cpu2tid[tarr]
+        one = tids >= 0
+        pt = tids[one]
+        handler = self.handler
+        multi = bool((tids == -2).any())
+        mtids = []
+        if multi:
+            for pos in np.flatnonzero(tids == -2).tolist():
+                mtids.extend(thr.tid for thr in self._multi[int(tarr[pos])])
+        allt = np.concatenate([pt, np.asarray(mtids, np.int64)]) \
+            if mtids else pt
+        if allt.size:
+            times = self.times
+            cur = times[allt]
+            total = W * handler
+            if (handler.is_integer()
+                    and not bool(np.any(cur != np.floor(cur)))
+                    and float(cur.max()) + total < _MAX_EXACT):
+                times[allt] = cur + total
+            else:
+                for _ in range(W):   # exact sequential fallback, per round
+                    times[allt] += handler
+            self.ipis[allt] += W
+        return True
+
     def flush(self) -> None:
         """Write the array state back to the model's dicts (exactly the
         keys the scalar loops would have inserted) and its clock.  The

@@ -214,6 +214,10 @@ class NumaSim:
         #: which settlement engine the last apply_mm_ops batch used
         #: ("vector" / "sequential" / "mixed"; None = sequential mode).
         self.last_settle_engine: Optional[str] = None
+        #: which mm-op execution engine the last apply_mm_ops batch used
+        #: ("scalar" / "batch" / "trace"; None before the first batch) —
+        #: the per-row provenance field benchmark rows record.
+        self.last_mm_engine: Optional[str] = None
         self.policy = policy
         self.prefetch_degree = config.prefetch_degree
         self.tlb_filter = tlb_filter

@@ -153,7 +153,7 @@ def build_app(sim: NumaSim, spec: AppSpec, *,
             tid = threads[region.home_node]
         else:  # 'node0' loads even shared data
             tid = threads[0]
-        if engine == "batch":
+        if engine != "scalar":   # batch/trace: touches ride the array engine
             sim.touch_batch(tid, np.arange(
                 region.start_vpn, region.start_vpn + region.n_pages,
                 touch_stride, dtype=np.int64), write_mask=True)
@@ -232,7 +232,7 @@ def run_exec_phase(sim: NumaSim, layout: AppLayout, *,
         offs = rng.random(accesses_per_thread)
         writes = rng.random(accesses_per_thread) >= spec.read_frac
         vpns = None
-        if engine == "batch":
+        if engine != "scalar":   # batch/trace: touches ride the array engine
             vpns = _exec_stream_vpns(kinds, kind_draw, offs, node, n_nodes,
                                      priv, pair, shared)
         if vpns is not None:

@@ -102,6 +102,8 @@ def available_capabilities() -> dict:
         "shard_map": HAS_NATIVE_SHARD_MAP,
         "set_mesh": (HAS_NATIVE_SET_MESH
                      or hasattr(jax.sharding.Mesh, "__enter__")),
+        # plain jax.jit/lax.scan — what the fifo_miss "jit" backend needs
+        "jit": hasattr(jax, "jit") and hasattr(jax, "lax"),
     }
     if not caps["shard_map"]:
         try:

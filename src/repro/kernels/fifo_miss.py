@@ -1,0 +1,126 @@
+"""FIFO TLB miss extraction over a whole access stream.
+
+The batched access engine's pass 1 (``repro.core.batch._general_vec``)
+replays the FIFO fill discipline over the stream to extract the ordered
+miss list: an entry filled at fill-number ``f`` is live while
+``f >= fills_so_far - capacity``, so classification needs only the last
+fill number per vpn and a running fill count.  That recurrence is the
+miss-protocol inner loop the ROADMAP's "raw speed" item wanted ported to
+``jax.jit``: it is a pure scan — no protocol state, no float time — so it
+compiles to one ``lax.scan`` over densely-remapped vpn ids.
+
+Two backends, selected per call or via ``REPRO_FIFO_MISS_BACKEND``
+(mirroring the ``pte_gather`` ops idiom):
+
+* ``"numpy"`` (default, always available) — the reference dict loop,
+  byte-for-byte the engine's original pass 1;
+* ``"jit"`` — densify vpns with ``np.unique`` (initial TLB keys + the
+  stream share one id space), seed the fill vector from the TLB's
+  current fill order, then one ``lax.scan`` carrying
+  ``(fill_vector, n_fills)`` and emitting the per-access miss flag.
+  Integer-only, so the jitted result is *identical* (not just close) to
+  the numpy loop — asserted by the differential test in
+  ``tests/test_trace_differential.py``.
+
+``jax`` is imported lazily: the numpy backend (and therefore
+``repro.core``) never requires it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable, Optional
+
+import numpy as np
+
+__all__ = ["BACKENDS", "default_backend", "fifo_miss"]
+
+BACKENDS = ("numpy", "jit")
+
+#: sentinel fill number that always classifies as a miss (the dict path
+#: can afford a huge constant; the jit path derives a dtype-safe one).
+_NEG = -1 << 40
+
+
+def default_backend() -> str:
+    """Backend used when the call doesn't pick one: the
+    ``REPRO_FIFO_MISS_BACKEND`` env var, else ``"numpy"``."""
+    return os.environ.get("REPRO_FIFO_MISS_BACKEND", "numpy")
+
+
+def fifo_miss(arr: np.ndarray, initial: Iterable[int], capacity: int, *,
+              backend: Optional[str] = None) -> np.ndarray:
+    """Classify every access of ``arr`` against a FIFO TLB.
+
+    ``initial`` is the TLB's current contents in fill (insertion) order;
+    ``capacity`` its entry count.  Returns a bool array over ``arr``:
+    True where the access misses (and therefore fills).  A vpn can miss
+    more than once — each fill restarts its lifetime — which is exactly
+    what the fill-number recurrence captures.
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"pick from {BACKENDS}")
+    arr = np.asarray(arr, dtype=np.int64).ravel()
+    if backend == "jit":
+        return _fifo_miss_jit(arr, initial, int(capacity))
+    return _fifo_miss_numpy(arr, initial, int(capacity))
+
+
+def _fifo_miss_numpy(arr: np.ndarray, initial: Iterable[int],
+                     capacity: int) -> np.ndarray:
+    """The engine's original pass-1 dict loop, emitting a mask."""
+    fillno = {}
+    for p, v in enumerate(initial):
+        fillno[v] = p
+    nfill = len(fillno)
+    out = np.zeros(arr.size, dtype=bool)
+    fg = fillno.get
+    for k, vpn in enumerate(arr.tolist()):
+        if fg(vpn, _NEG) < nfill - capacity:
+            fillno[vpn] = nfill
+            nfill += 1
+            out[k] = True
+    return out
+
+
+def _fifo_miss_jit(arr: np.ndarray, initial: Iterable[int],
+                   capacity: int) -> np.ndarray:
+    init = np.fromiter(initial, dtype=np.int64)
+    n0 = init.size
+    keys = np.concatenate([init, arr]) if n0 else arr
+    uniq, inv = np.unique(keys, return_inverse=True)
+    inv = np.asarray(inv, dtype=np.int32).ravel()
+    # live-entry seed: the TLB's vpns hold fill numbers 0..n0-1; every
+    # other id starts at a sentinel that always classifies as a miss
+    # (nfill - capacity >= -capacity > -(capacity + 1), int32-safe even
+    # on non-x64 jax builds).
+    fill0 = np.full(uniq.size, -(capacity + 1), dtype=np.int32)
+    fill0[inv[:n0]] = np.arange(n0, dtype=np.int32)
+    mask = _jit_scan(capacity)(fill0, np.int32(n0), inv[n0:])
+    return np.asarray(mask, dtype=bool)
+
+
+_JIT_CACHE: dict = {}
+
+
+def _jit_scan(capacity: int):
+    fn = _JIT_CACHE.get(capacity)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        def scan(fill0, nfill0, ids):
+            def step(carry, i):
+                fill, nfill = carry
+                m = fill[i] < nfill - capacity
+                fill = fill.at[i].set(jnp.where(m, nfill, fill[i]))
+                return (fill, nfill + m.astype(nfill.dtype)), m
+
+            (_, _), mask = jax.lax.scan(step, (fill0, nfill0), ids)
+            return mask
+
+        fn = jax.jit(scan)
+        _JIT_CACHE[capacity] = fn
+    return fn

@@ -155,7 +155,8 @@ def run_closed_loop(policy: str, *, arrival_rate_rps: float,
                     slots_per_worker: int = 4,
                     step_ns: float = STEP_COMPUTE_NS,
                     topology=PAPER_8SOCKET,
-                    trace: Optional[List[Request]] = None) -> dict:
+                    trace: Optional[List[Request]] = None,
+                    engine: str = "trace") -> dict:
     """Run one policy at one offered load; return latency + counter rows.
 
     One decode worker per socket plus one housekeeping thread per socket
@@ -170,6 +171,7 @@ def run_closed_loop(policy: str, *, arrival_rate_rps: float,
                          f"pick from {sorted(SERVING_POLICIES)}")
     sim = make_sim(topology, SimConfig(concurrency="overlap",
                                        contention="coalescing",
+                                       engine=engine,
                                        **SERVING_POLICIES[policy]))
     step_cpus = sim.topo.hw_threads_per_node
     workers = [sim.spawn_thread(node * step_cpus)
@@ -259,4 +261,5 @@ def run_closed_loop(policy: str, *, arrival_rate_rps: float,
         "victim_interrupt_us": sum(sim.thread_time_ns(t)
                                    for t in tenant_tids) / 1e3,
         "settle_engine": getattr(sim, "last_settle_engine", None),
+        "mm_engine": getattr(sim, "last_mm_engine", None),
     }

@@ -61,9 +61,10 @@ def _probe_capabilities():
             from repro.jaxcompat import available_capabilities
             caps.update(available_capabilities())
         except Exception:
-            caps["shard_map"] = caps["set_mesh"] = False
+            caps["shard_map"] = caps["set_mesh"] = caps["jit"] = False
     else:
         caps["pallas"] = caps["shard_map"] = caps["set_mesh"] = False
+        caps["jit"] = False
     return caps
 
 
@@ -89,6 +90,8 @@ _REQUIREMENTS = [
     ("test_distributed.py", "test_dryrun_cell_small_mesh", ("set_mesh",)),
     ("test_distributed.py", "test_multi_pod_serve_cell", ("set_mesh",)),
     ("test_elastic.py", "test_elastic_remesh_restore", ("set_mesh",)),
+    ("test_trace_differential.py", "test_fifo_miss_jit_matches_numpy",
+     ("jit",)),
 ]
 
 

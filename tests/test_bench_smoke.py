@@ -33,6 +33,10 @@ def test_bench_json_schema(tmp_path):
         assert d["spinners"] is None
         assert d["tenants"] is None
         assert d["arrival_rate"] is None
+        # schema v8: the mm-op engine the benchmark ran on (null for
+        # benchmarks without the knob; the signature default otherwise)
+        assert d["engine"] == ("batch" if name == "fig07_migration"
+                               else None)
         assert d["row_types"] == ["data"]
         assert d["error"] is None
         assert d["elapsed_s"] >= 0
@@ -228,6 +232,8 @@ def test_mm_bench_json_artifacts(tmp_path):
         assert d["schema_version"] == SCHEMA_VERSION
         assert d["name"] == name
         assert d["error"] is None
+        # schema v8: all mm-heavy benchmarks default to the trace engine
+        assert d["engine"] == "trace", name
         assert isinstance(d["rows"], list) and d["rows"], name
         json.dumps(d)   # plain JSON types only
 
@@ -256,16 +262,21 @@ def test_mm_bench_json_artifacts(tmp_path):
     assert at_max["linux"]["slowdown_vs_linux0"] > \
         at_max["numapte"]["slowdown_vs_linux0"]
 
-    # fig09/fig10: the scale-swept engine wall-time comparison rows
+    # fig09/fig10: the scale-swept engine wall-time comparison rows —
+    # trace + batch vs the scalar reference, with per-engine provenance
+    # (a speedup can never silently come from the wrong engine)
     for name in ("fig09_mm_ops", "fig10_munmap"):
         d = _load(written[name])
         assert "engine_walltime" in d["row_types"], name
         wt = [r for r in d["rows"] if r.get("row_type") == "engine_walltime"]
         assert wt, name
         for r in wt:
-            assert r["wall_batch_s"] > 0 and r["wall_scalar_s"] > 0
-            assert r["batch_speedup"] > 0
+            assert r["wall_trace_s"] > 0 and r["wall_batch_s"] > 0 \
+                and r["wall_scalar_s"] > 0
+            assert r["trace_speedup"] > 0 and r["batch_speedup"] > 0
             assert r["scale_factor"] >= 1
+            assert r["mm_engine"] == {"trace": "trace", "batch": "batch",
+                                      "scalar": "scalar"}
 
     # mm_concurrent: every scenario under both settlement modes
     d = _load(written["mm_concurrent"])
@@ -370,6 +381,29 @@ def test_mm_bench_json_artifacts(tmp_path):
         assert r["wall_vector_s"] > 0 and r["wall_sequential_s"] > 0
         assert r["vector_speedup"] > 0
     assert "engine_walltime" in d["row_types"]
+
+
+def test_trace_engine_rows_equal_batch_rows():
+    """Satellite: the compiled trace engine must be row-equal to the
+    batch engine on the mm-heavy figures — every modeled data row
+    identical (the engine_walltime host measurements are excluded, host
+    wall fields stripped and the ``mm_engine`` provenance popped, since
+    those are *supposed* to differ)."""
+    from benchmarks import fig09_mm_ops, fig10_munmap
+
+    for mod in (fig09_mm_ops, fig10_munmap):
+        per_engine = []
+        for eng in ("trace", "batch"):
+            cleaned = []
+            for r in mod.main(quick=True, engine=eng):
+                if r.get("row_type") == "engine_walltime":
+                    continue
+                r = {k: v for k, v in r.items() if not k.startswith("wall")}
+                r.pop("mm_engine", None)
+                cleaned.append(r)
+            assert cleaned, mod.__name__
+            per_engine.append(cleaned)
+        assert per_engine[0] == per_engine[1], mod.__name__
 
 
 def test_mm_concurrent_rows_deterministic(tmp_path):

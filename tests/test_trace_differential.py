@@ -1,0 +1,215 @@
+"""Differential tests: the compiled trace engine vs the batch engine.
+
+``engine="trace"`` (``repro.core.trace``: whole op-traces lowered into
+dense numpy tables, partitioned into conflict-free windows and settled
+per window) must leave the simulator in a byte-identical state to
+``engine="batch"`` — every ``Counters`` field, float-exact thread times
+and ``ipis_received``, TLB contents *and insertion order*, page-table
+replicas and sharer masks, the translation oracle, the VMA layout, the
+lazy/elision bookkeeping, and mid-batch segfault partial state.  Since
+the batch engine is itself differentially pinned to the scalar syscalls
+(``test_mm_batch_differential``), transitivity pins all three engines.
+
+The acceptance sweep replays >= 150 seeded interleavings across
+{eager, elide_flushes} x {single-process, multi-tenant} x
+{sequential, overlap} (the overlap seeds route contended rounds through
+``BatchSettlement`` — including ``settle_window`` — under the default
+coalescing model).  Multi-tenant seeds interleave a second process's own
+mm churn between the main process's chunks, so per-ASID compiled tables,
+sharer masks and cross-tenant IPIs are all exercised.  A fast slice of
+the same matrix runs in tier-1; the full sweep is ``slow`` like its
+batch-vs-scalar sibling.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import test_mm_batch_differential as ref
+from repro.core import ENGINES, Policy, SegfaultError, SimConfig
+from repro.core.pagetable import PERM_R
+
+POLICIES = ref.POLICIES
+SEEDS_PER_POLICY = 52          # 3 policies x 52 = 156 interleavings
+
+
+def _spawn_tenant(sim, n_threads=2):
+    proc = sim.spawn_process("tenant")
+    return [sim.spawn_thread(1 + n * ref.TOPO.hw_threads_per_node,
+                             process=proc)
+            for n in range(n_threads)]
+
+
+def _tenant_churn(sim, tid, n_pages):
+    """One alternating per-ASID batch: the tenant maps, touches,
+    mprotects and unmaps its own area between the main process's
+    chunks.  Returns nothing — divergence shows up in assert_identical."""
+    vma = sim.apply_mm_ops([("mmap", tid, n_pages)])[0]
+    sim.apply_mm_ops([
+        ("touch", tid, [vma.start_vpn], True),
+        ("mprotect", tid, vma.start_vpn, n_pages, PERM_R),
+        ("munmap", tid, vma.start_vpn, n_pages)])
+
+
+def run_trace_differential(policy, choices, *, chunk=7, tlb_filter=True,
+                           prefetch=0, elide=False, overlap=False,
+                           tenant=False, tag=""):
+    """Trace vs batch in chunked lockstep over one materialized program
+    (the same shadow-allocator materializer as the batch-vs-scalar
+    suite), asserting byte-identical state and engine provenance at
+    every sync point."""
+    cfg = dict(elide_flushes=elide)
+    if overlap:
+        cfg.update(concurrency="overlap", contention="coalescing")
+    sa, ta = ref._build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
+                        engine="trace", **cfg)
+    sb, tb = ref._build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
+                        engine="batch", **cfg)
+    assert ta == tb
+    tena, tenb = ([], [])
+    if tenant:
+        tena, tenb = _spawn_tenant(sa), _spawn_tenant(sb)
+        assert tena == tenb
+    ops = ref.materialize(choices, sa._next_vpn)
+    rng = np.random.default_rng(7919 * (len(ops) + 1) + chunk)
+    for i in range(0, len(ops), chunk):
+        part = ops[i:i + chunk]
+        ra = sa.apply_mm_ops(part)
+        rb = sb.apply_mm_ops(part)
+        assert sa.last_mm_engine == "trace", tag     # per-row provenance
+        assert sb.last_mm_engine == "batch", tag
+        assert [(v.vma_id, v.start_vpn, v.end_vpn) if v is not None
+                else None for v in ra] == \
+               [(v.vma_id, v.start_vpn, v.end_vpn) if v is not None
+                else None for v in rb], f"{tag}: op results @ chunk {i}"
+        ref.assert_identical(sa, sb, f"{tag}/chunk{i}")
+        if tenant:
+            tid = tena[(i // max(chunk, 1)) % len(tena)]
+            n_pages = 1 + int(rng.integers(1, 64))
+            _tenant_churn(sa, tid, n_pages)
+            _tenant_churn(sb, tid, n_pages)
+            ref.assert_identical(sa, sb, f"{tag}/tenant{i}")
+    sa.check_invariants()
+    sb.check_invariants()
+
+
+def _seed_flags(seed):
+    """Deterministic coverage spread: every combination of elide/overlap/
+    tenant recurs throughout the sweep."""
+    return dict(elide=seed % 2 == 1,
+                overlap=seed % 3 == 0,
+                tenant=(seed // 2) % 2 == 1,
+                tlb_filter=seed % 4 != 2,
+                prefetch=9 if seed % 5 == 4 else 0)
+
+
+# --------------------------------------------------------------------------
+# acceptance sweep (slow, like its batch-vs-scalar sibling)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+def test_trace_random_interleavings_byte_identical(policy):
+    """52 seeded interleavings per policy (156 total), trace vs batch in
+    lockstep, sweeping elide/overlap/multi-tenant/filter/prefetch."""
+    for seed in range(SEEDS_PER_POLICY):
+        rng = np.random.default_rng(60_000 + seed)
+        choices = ref._random_choices(rng, int(rng.integers(6, 36)))
+        run_trace_differential(
+            policy, choices, chunk=int(rng.integers(1, 12)),
+            tag=f"{policy.value}/seed{seed}", **_seed_flags(seed))
+
+
+# --------------------------------------------------------------------------
+# fast tier-1 slice of the same matrix
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", [Policy.LINUX, Policy.NUMAPTE])
+@pytest.mark.parametrize("seed", [0, 1, 3, 6])
+def test_trace_differential_fast_slice(policy, seed):
+    """Four seeds per policy covering every elide/overlap/tenant corner
+    (seed 0: overlap; 1: elide+tenant; 3: elide+tenant, no filter at
+    seed 6's recurrence; 6: overlap+tenant) — the always-on guard."""
+    rng = np.random.default_rng(60_000 + seed)
+    choices = ref._random_choices(rng, int(rng.integers(6, 36)))
+    run_trace_differential(policy, choices, chunk=int(rng.integers(1, 12)),
+                           tag=f"fast/{policy.value}/seed{seed}",
+                           **_seed_flags(seed))
+
+
+# --------------------------------------------------------------------------
+# targeted differentials (fast; always on)
+# --------------------------------------------------------------------------
+def test_trace_engine_registered_and_validated():
+    """SimConfig registry: "trace" is a first-class engine, bogus names
+    are rejected, and provenance is recorded per apply."""
+    assert "trace" in ENGINES
+    with pytest.raises(ValueError):
+        SimConfig(engine="warp")
+    sim, tids = ref._build(Policy.NUMAPTE, engine="trace")
+    sim.apply_mm_ops([("mmap", tids[0], 4)])
+    assert sim.last_mm_engine == "trace"
+    assert sim.config.engine == "trace"
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_trace_segfault_mid_batch_matches_batch(policy):
+    """A touch op hitting a hole mid-trace raises SegfaultError after
+    applying exactly the partial state the batch engine leaves."""
+    sa, ta = ref._build(policy, engine="trace")
+    sb, tb = ref._build(policy, engine="batch")
+    va = sa.mmap(ta[0], 8)
+    vb = sb.mmap(tb[0], 8)
+    assert (va.start_vpn, va.end_vpn) == (vb.start_vpn, vb.end_vpn)
+    hole = va.end_vpn + 99_999
+    ops = [("touch", ta[0], list(range(va.start_vpn, va.end_vpn)), True),
+           ("mprotect", ta[1], va.start_vpn, 8, PERM_R),
+           ("touch", ta[1], [va.start_vpn, hole]),
+           ("munmap", ta[0], va.start_vpn, 8)]
+    with pytest.raises(SegfaultError):
+        sa.apply_mm_ops(ops)
+    with pytest.raises(SegfaultError):
+        sb.apply_mm_ops(ops)
+    ref.assert_identical(sa, sb, f"{policy.value}/trace-segfault")
+
+
+def test_trace_elide_lazy_state_matches_batch():
+    """Elision bookkeeping (lazy stale entries, deferred counters, the
+    forced flush on reuse) is part of the byte-identical contract."""
+    cfg = dict(elide_flushes=True)
+    sa, ta = ref._build(Policy.NUMAPTE, engine="trace", **cfg)
+    sb, tb = ref._build(Policy.NUMAPTE, engine="batch", **cfg)
+    for sim, t in ((sa, ta), (sb, tb)):
+        v1 = sim.apply_mm_ops([("mmap", t[0], 8)])[0]
+        v2 = sim.apply_mm_ops([("mmap", t[1], 8)])[0]
+        sim.apply_mm_ops([
+            ("touch", t[0], list(range(v1.start_vpn, v1.end_vpn)), True),
+            ("touch", t[1], [v2.start_vpn], True)])
+        # elided unmaps (deferred shootdowns), then a remote touch that
+        # reuses a freed frame and forces the deferred flush
+        sim.apply_mm_ops([("munmap", t[0], v1.start_vpn, 8),
+                          ("madvise", t[1], v2.start_vpn, 1)])
+        sim.apply_mm_ops([("mmap", t[2], 8)])
+        v3 = sim.vmas[-1]
+        sim.apply_mm_ops([("touch", t[2],
+                           list(range(v3.start_vpn, v3.end_vpn)), True)])
+    assert sa.counters.flushes_elided > 0
+    ref.assert_identical(sa, sb, "elide-lazy-state")
+
+
+def test_fifo_miss_jit_matches_numpy():
+    """The jax.jit port of the FIFO miss-protocol kernel is bit-identical
+    to the numpy reference across random streams, capacities and warm
+    initial states (capability-gated in conftest: skips where even the
+    compat layer has no jax.jit)."""
+    from repro.kernels.fifo_miss import fifo_miss
+
+    rng = np.random.default_rng(2024)
+    for trial in range(25):
+        cap = int(rng.integers(1, 64))
+        n0 = int(rng.integers(0, cap + 1))
+        init = rng.permutation(500)[:n0].astype(np.int64).tolist()
+        arr = rng.integers(0, 1 + int(rng.integers(1, 120)),
+                           size=int(rng.integers(0, 300))).astype(np.int64)
+        got_np = fifo_miss(arr, init, cap, backend="numpy")
+        got_jit = fifo_miss(arr, init, cap, backend="jit")
+        np.testing.assert_array_equal(got_np, got_jit,
+                                      err_msg=f"trial {trial} cap={cap}")

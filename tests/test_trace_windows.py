@@ -1,0 +1,296 @@
+"""Window-partition properties + metamorphic settlement for the trace
+engine (``repro.core.trace``).
+
+Two layers:
+
+* **Partition properties** (sim-free, structural): every partition
+  :func:`partition_windows` emits covers the program contiguously in
+  order, and no pair of ops that :func:`ops_conflict` declares dependent
+  ever shares a multi-op window — barriers (``mmap`` / ``touch`` /
+  ``migrate``) are singletons, different initiating threads never share,
+  under ``elide_flushes`` the unmap kinds are singletons, and
+  leaf-table spans inside a window are pairwise disjoint.
+  ``ops_conflict`` is the single invariant; the checker replays it
+  pairwise against every emitted window.
+
+* **Metamorphic settlement**: the windows only license fast paths, so
+  *any* valid partition must settle byte-identically.  We replay the
+  same op program under the engine's computed partition, the
+  all-singletons partition, and seeded random contiguous refinements of
+  the computed partition (a refinement of a conflict-free partition is
+  conflict-free), each against a fresh ``engine="batch"`` reference sim,
+  asserting ``test_mm_batch_differential.assert_identical`` — in
+  sequential, ``elide_flushes`` and overlap/coalescing configurations.
+
+A ``hypothesis`` variant of the structural property runs when the extra
+is installed (same gating as the batch-vs-scalar suite); the seeded
+sweeps are always on.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import test_mm_batch_differential as ref
+from repro.core import Policy
+from repro.core.pagetable import LEAF_SHIFT, PERM_R, PERM_RW
+from repro.core.trace import (DYNAMIC_FAN, KIND_CODES, _RANGE_CODES,
+                              _TraceEngine, compile_trace, ops_conflict,
+                              partition_windows)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+LEAF_PAGES = 1 << LEAF_SHIFT
+BARRIERS = frozenset((KIND_CODES["mmap"], KIND_CODES["touch"],
+                      KIND_CODES["migrate"]))
+UNMAP_KINDS = frozenset((KIND_CODES["munmap"], KIND_CODES["madvise"]))
+
+
+# --------------------------------------------------------------------------
+# structural layer: sim-free programs + the partition checker
+# --------------------------------------------------------------------------
+def _synthetic_ops(rng, n_ops, n_tids=3, n_tables=8):
+    """Random op program over a bank of leaf-table-sized areas: range
+    ops (some zero-length) colliding and not colliding at table
+    granularity, interleaved with every barrier kind and several tids."""
+    base = 1 << 20
+    ops = []
+    for _ in range(n_ops):
+        roll = int(rng.integers(0, 100))
+        tid = int(rng.integers(0, n_tids))
+        t = int(rng.integers(0, n_tables))
+        s = base + t * LEAF_PAGES + int(rng.integers(0, LEAF_PAGES // 2))
+        if roll < 40:
+            ops.append(("mprotect", tid, s, int(rng.integers(0, 4)),
+                        PERM_R if roll % 2 else PERM_RW))
+        elif roll < 58:
+            ops.append(("munmap", tid, s, 1 + int(rng.integers(0, 8))))
+        elif roll < 70:
+            ops.append(("madvise", tid, s, 1 + int(rng.integers(0, 4))))
+        elif roll < 80:
+            ops.append(("mmap", tid, 1 + int(rng.integers(0, 16))))
+        elif roll < 92:
+            ops.append(("touch", tid, [s, s + 1], bool(roll % 2)))
+        else:
+            ops.append(("migrate", tid, int(rng.integers(0, 16))))
+    return ops
+
+
+def check_partition(table, windows, *, elide):
+    """The partition contract: contiguous in-order cover of the whole
+    program, and no conflicting pair shares a window."""
+    if len(table) == 0:
+        assert windows == []
+        return
+    assert windows[0][0] == 0 and windows[-1][1] == len(table)
+    for (a, b), (c, d) in zip(windows, windows[1:]):
+        assert a < b and b == c, f"gap/overlap at window ({a},{b})->({c},{d})"
+    a, b = windows[-1]
+    assert a < b
+    for lo, hi in windows:
+        for i in range(lo, hi):
+            for j in range(i + 1, hi):
+                assert not ops_conflict(table, i, j, elide=elide), \
+                    f"conflicting ops {i},{j} share window ({lo},{hi})"
+
+
+@pytest.mark.parametrize("elide", [False, True])
+def test_partition_covers_and_is_conflict_free(elide):
+    multi = 0
+    for seed in range(40):
+        rng = np.random.default_rng(90_000 + seed)
+        table = compile_trace(_synthetic_ops(rng, int(rng.integers(0, 60))))
+        windows = partition_windows(table, elide=elide)
+        check_partition(table, windows, elide=elide)
+        multi += sum(1 for lo, hi in windows if hi - lo > 1)
+        # the invariant relation is symmetric
+        for _ in range(min(len(table), 20)):
+            i = int(rng.integers(0, len(table)))
+            j = int(rng.integers(0, len(table)))
+            assert (ops_conflict(table, i, j, elide=elide)
+                    == ops_conflict(table, j, i, elide=elide))
+    # the sweep must exercise genuine windowing, not collapse to
+    # all-singletons (which would pass the conflict check vacuously)
+    assert multi > 0
+
+
+@pytest.mark.parametrize("elide", [False, True])
+def test_window_membership_rules(elide):
+    """Barriers are always singletons; multi-op windows are single-tid;
+    under elision only mprotect runs may window together."""
+    for seed in range(25):
+        rng = np.random.default_rng(91_000 + seed)
+        table = compile_trace(_synthetic_ops(rng, 50))
+        for lo, hi in partition_windows(table, elide=elide):
+            kinds = {int(table.kind[i]) for i in range(lo, hi)}
+            if kinds & BARRIERS:
+                assert hi - lo == 1
+            if hi - lo > 1:
+                assert len({int(table.tid[i]) for i in range(lo, hi)}) == 1
+                if elide:
+                    assert kinds == {KIND_CODES["mprotect"]}
+
+
+def test_zero_length_range_ops_conflict_with_nothing():
+    """A zero-length range op spans no leaf table (hi < lo) and may share
+    a window even with an op on the same table; the same op with
+    length 1 splits the window."""
+    s = 1 << 20
+    free = compile_trace([("mprotect", 0, s, 1, PERM_R),
+                          ("mprotect", 0, s, 0, PERM_R)])
+    assert partition_windows(free) == [(0, 2)]
+    clash = compile_trace([("mprotect", 0, s, 1, PERM_R),
+                           ("mprotect", 0, s, 1, PERM_RW)])
+    assert partition_windows(clash) == [(0, 1), (1, 2)]
+    assert ops_conflict(clash, 0, 1) and not ops_conflict(free, 0, 1)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(0, 80),
+           elide=st.booleans())
+    def test_hypothesis_partition_conflict_free(seed, n_ops, elide):
+        rng = np.random.default_rng(seed)
+        table = compile_trace(_synthetic_ops(rng, n_ops))
+        check_partition(table, partition_windows(table, elide=elide),
+                        elide=elide)
+
+
+# --------------------------------------------------------------------------
+# metamorphic layer: any valid partition settles byte-identically
+# --------------------------------------------------------------------------
+N_AREAS = 10
+
+
+def _setup(sim, tids):
+    """Map N_AREAS leaf-table-sized areas (each on its own leaf table —
+    the allocator packs from a table-aligned base) and touch their first
+    pages so the compiled TLB-relevance masks are non-trivial."""
+    vmas = sim.apply_mm_ops([("mmap", tids[i % len(tids)], LEAF_PAGES)
+                             for i in range(N_AREAS)])
+    sim.apply_mm_ops([("touch", tids[i % len(tids)],
+                       [v.start_vpn, v.start_vpn + 1], True)
+                      for i, v in enumerate(vmas)])
+    return [v.start_vpn for v in vmas]
+
+
+def _burst_program(rng, tids, areas):
+    """Bursts of same-tid range ops over distinct areas (genuinely
+    multi-op windows) separated by barriers and cross-tid reads."""
+    ops = []
+    live = set(range(len(areas)))
+    for _ in range(int(rng.integers(4, 9))):
+        tid = tids[int(rng.integers(0, len(tids)))]
+        k = min(len(live), int(rng.integers(2, 7)))
+        for a in rng.choice(sorted(live), size=k, replace=False):
+            a = int(a)
+            roll = int(rng.integers(0, 4))
+            if roll == 3:
+                ops.append(("munmap", tid, areas[a], LEAF_PAGES))
+                live.discard(a)
+            else:
+                ops.append(("mprotect", tid,
+                            areas[a] + int(rng.integers(0, 8)),
+                            1 + int(rng.integers(0, 4)),
+                            PERM_R if roll else PERM_RW))
+        sep = int(rng.integers(0, 3))
+        if sep == 0:
+            ops.append(("mmap", tid, 1 + int(rng.integers(0, 4))))
+        elif sep == 1 and live:
+            a = int(rng.choice(sorted(live)))
+            ops.append(("touch", tids[int(rng.integers(0, len(tids)))],
+                        [areas[a]], False))
+    return ops
+
+
+def _refine(rng, windows):
+    """A random contiguous refinement — each multi-op window is split at
+    random cut points.  Refining a conflict-free partition cannot create
+    a conflict, so the result is valid by construction (and re-checked)."""
+    out = []
+    for lo, hi in windows:
+        cuts = sorted({int(c) for c in
+                       rng.integers(lo + 1, hi, size=int(rng.integers(0, 3)))}
+                      ) if hi - lo > 1 else []
+        for a, b in zip([lo] + cuts, cuts + [hi]):
+            out.append((a, b))
+    return out
+
+
+def _run_metamorphic(policy, seed, variant, **cfg):
+    sa, ta = ref._build(policy, engine="trace", **cfg)
+    sb, tb = ref._build(policy, engine="batch", **cfg)
+    assert ta == tb
+    areas = _setup(sa, ta)
+    assert areas == _setup(sb, tb)
+    ref.assert_identical(sa, sb, f"{variant}/setup")
+    rng = np.random.default_rng(seed)
+    ops = _burst_program(rng, ta, areas)
+    # direct construction so the partition can be replaced before replay;
+    # overlap configs carry the ambient contention model on the sim and
+    # need the vectorized settlement engine, matching apply_mm_ops
+    settle = "vector" if cfg.get("concurrency") == "overlap" else None
+    eng = _TraceEngine(sa, ops, settle=settle)
+    if variant == "singletons":
+        eng.windows = [(i, i + 1) for i in range(len(ops))]
+    elif variant == "refine":
+        eng.windows = _refine(rng, eng.windows)
+    check_partition(eng.table, eng.windows, elide=sa.elide_flushes)
+    if variant == "computed" and not sa.elide_flushes:
+        assert any(hi - lo > 1 for lo, hi in eng.windows), \
+            "burst program produced no multi-op window"
+    ra = eng.run()
+    rb = sb.apply_mm_ops(ops)
+    assert [(v.start_vpn, v.end_vpn) if v is not None else None
+            for v in ra] == \
+           [(v.start_vpn, v.end_vpn) if v is not None else None
+            for v in rb]
+    ref.assert_identical(sa, sb, f"{variant}/seed{seed}")
+    sa.check_invariants()
+    sb.check_invariants()
+
+
+CONFIGS = [
+    ("seq", {}),
+    ("elide", {"elide_flushes": True}),
+    ("overlap", {"concurrency": "overlap", "contention": "coalescing"}),
+]
+
+
+@pytest.mark.parametrize("variant", ["computed", "singletons", "refine"])
+@pytest.mark.parametrize("cfg_name,cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_metamorphic_partition_settles_identically(variant, cfg_name, cfg):
+    for seed in (0, 1, 2):
+        _run_metamorphic(Policy.NUMAPTE, 95_000 + seed, variant, **cfg)
+
+
+@pytest.mark.parametrize("policy", [Policy.LINUX, Policy.MITOSIS])
+def test_metamorphic_refinements_across_policies(policy):
+    for seed in (5, 6):
+        _run_metamorphic(policy, 96_000 + seed, "refine")
+
+
+def test_compiled_fan_masks_match_filter_mode():
+    """fan_mask compilation: tlb_filter policies get the live-sharer
+    sentinel; unfiltered policies get the full node mask; non-range ops
+    get 0."""
+    sim, tids = ref._build(Policy.NUMAPTE, tlb_filter=True, engine="trace")
+    areas = _setup(sim, tids)
+    ops = [("mprotect", tids[0], areas[0], 1, PERM_R),
+           ("mmap", tids[0], 1)]
+    table = compile_trace(ops, sim=sim, asid=0)
+    assert table.fan_mask[0] == DYNAMIC_FAN and table.fan_mask[1] == 0
+    sim2, tids2 = ref._build(Policy.LINUX, tlb_filter=False, engine="trace")
+    areas2 = _setup(sim2, tids2)
+    t2 = compile_trace([("munmap", tids2[0], areas2[0], 1)], sim=sim2, asid=0)
+    assert t2.fan_mask[0] == (1 << ref.TOPO.n_nodes) - 1
+    # relevance masks: the touched first pages make area 0 relevant to
+    # its toucher's cpu, and an untouched high range relevant to nobody
+    t3 = compile_trace([("mprotect", tids2[0], areas2[0], 2, PERM_R),
+                        ("mprotect", tids2[0], areas2[0] + 100, 2, PERM_R)],
+                       sim=sim2, asid=0)
+    assert t3.rel[0] and not t3.rel[1]
