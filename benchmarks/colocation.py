@@ -25,7 +25,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import PAPER_8SOCKET, SimConfig, make_sim
+from repro.core import DEFAULT_OVERLAP_MODEL, PAPER_8SOCKET, SimConfig, \
+    make_sim
 from repro.core.pagetable import Policy
 
 from .common import csv, policies
@@ -33,12 +34,16 @@ from .common import csv, policies
 
 def run_one(policy: Policy, filt: bool, tenants: int, iters: int,
             pages: int, rounds: int, storm: bool,
-            engine: str = "trace") -> dict:
+            engine: str = "trace", contention: str = None) -> dict:
     """One colocated run; ``storm=False`` is the quiet reference (same
-    layout and setup, only the measured munmap storm is skipped)."""
+    layout and setup, only the measured munmap storm is skipped).
+    ``contention`` overrides the default overlap model (``hardware`` =
+    the IPI-free coherence upper bound: the ASID-tagged fabric never
+    touches a victim's TLB, so the leak collapses to zero)."""
     sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
                                             engine=engine,
-                                            concurrency="overlap"))
+                                            concurrency="overlap",
+                                            contention=contention))
     step = sim.topo.hw_threads_per_node
     if not 1 <= tenants <= sim.topo.n_nodes - 1:
         raise ValueError(f"tenants must be in 1..{sim.topo.n_nodes - 1}")
@@ -107,6 +112,8 @@ def run_one(policy: Policy, filt: bool, tenants: int, iters: int,
         "ipis_filtered": c.ipis_filtered,
         "responder_delay_ns": round(c.responder_delay_ns, 1),
         "ipis_coalesced": c.ipis_coalesced,
+        "hw_line_invalidations": c.hw_line_invalidations,
+        "hw_invalidation_us": round(c.hw_invalidation_ns / 1e3, 3),
     }
 
 
@@ -120,15 +127,23 @@ def main(quick: bool = False, scale: int = 1, tenants: int = None,
     iters = (150 if quick else 400) * scale
     pages, rounds = (32, 2) if quick else (64, 4)
     rows = []
-    for name, policy, filt in policies():
+    # the IPI-free hardware-coherence column (schema v9) rides the
+    # policy sweep: Linux's unfiltered fan-out, but the ASID-tagged
+    # fabric invalidates only lines the target actually caches — the
+    # cross-tenant leak vanishes without any sharer filter
+    systems = [(name, policy, filt, None)
+               for name, policy, filt in policies()]
+    systems.append(("hardware", Policy.LINUX, False, "hardware"))
+    for name, policy, filt, cont in systems:
         quiet = run_one(policy, filt, tenants, iters, pages, rounds,
-                        storm=False, engine=engine)
+                        storm=False, engine=engine, contention=cont)
         stormy = run_one(policy, filt, tenants, iters, pages, rounds,
-                        storm=True, engine=engine)
+                        storm=True, engine=engine, contention=cont)
         leak = stormy["victim_total_ns"] - quiet["victim_total_ns"]
         rows.append({
             "row_type": "colocation",
             "policy": name, "tenants": tenants,
+            "model": cont or DEFAULT_OVERLAP_MODEL,
             "victim_slowdown": round(stormy["victim_ns_per_op"]
                                      / quiet["victim_ns_per_op"], 3),
             "victim_interrupt_ns": round(leak, 1),
@@ -138,6 +153,8 @@ def main(quick: bool = False, scale: int = 1, tenants: int = None,
             "ipis_filtered": stormy["ipis_filtered"],
             "responder_delay_ns": stormy["responder_delay_ns"],
             "ipis_coalesced": stormy["ipis_coalesced"],
+            "hw_line_invalidations": stormy["hw_line_invalidations"],
+            "hw_invalidation_us": stormy["hw_invalidation_us"],
         })
     return csv("colocation", rows)
 

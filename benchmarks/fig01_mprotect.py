@@ -19,10 +19,14 @@ from .common import csv, make_spinners, mprotect_loop, policies
 
 
 def run_one(policy: Policy, tlb_filter: bool, spin: int,
-            iters: int = 200, engine: str = "trace") -> dict:
+            iters: int = 200, engine: str = "trace",
+            contention: str = None) -> dict:
     sim = make_sim(PAPER_8SOCKET,
                    SimConfig(policy=policy, prefetch_degree=0,
-                             tlb_filter=tlb_filter, engine=engine))
+                             tlb_filter=tlb_filter, engine=engine,
+                             concurrency=("overlap" if contention
+                                          else "sequential"),
+                             contention=contention))
     main = sim.spawn_thread(cpu=0)
     make_spinners(sim, spin)
     vma = sim.mmap(main, 1)
@@ -45,6 +49,15 @@ def main(quick: bool = False, scale: int = 1, engine: str = "trace") -> list:
             rows.append({"policy": name, "spin_per_socket": spin,
                          "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
                          **r})
+    # the IPI-free hardware-coherence column (schema v9): Linux's
+    # unfiltered fan-out settled line-by-line over the cache fabric —
+    # the upper bound any software shootdown scheme converges toward
+    for spin in spins:
+        r = run_one(Policy.LINUX, False, spin, iters, engine,
+                    contention="hardware")
+        rows.append({"policy": "hardware", "spin_per_socket": spin,
+                     "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
+                     **r, "model": "hardware"})
     return csv("fig01_mprotect", rows)
 
 

@@ -10,6 +10,11 @@ runs on the compiled trace engine by default (``--engine`` selects; the
 batch engine and the scalar reference ``engine="scalar"`` are
 byte-identical alternatives) — so ``--scale`` raises the iteration
 count without leaving the per-op cost regime the figure measures.
+
+A ``hardware`` column (schema v9) runs Linux's layout under the IPI-free
+``HardwareCoherence`` model and carries the ablation against a
+coalescing run of the identical trace: ``flush_work_ns`` +
+``dispatch_ack_ns`` = ``coalescing_ns``.
 """
 from __future__ import annotations
 
@@ -23,9 +28,12 @@ from .common import csv, engine_walltime_rows, policies
 
 def run_one(policy: Policy, filt: bool, op: str, n_pages: int,
             iters: int = 50, engine: str = "trace",
-            prov: dict = None) -> float:
-    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
-                                            engine=engine))
+            prov: dict = None, contention: str = None) -> float:
+    sim = make_sim(PAPER_8SOCKET,
+                   SimConfig(policy=policy, tlb_filter=filt, engine=engine,
+                             concurrency=("overlap" if contention
+                                          else "sequential"),
+                             contention=contention))
     if prov is not None:           # filled before return, see _walltime_run
         prov["sim"] = sim
     main = sim.spawn_thread(0)
@@ -91,6 +99,20 @@ def main(quick: bool = False, scale: int = 1, engine: str = "trace") -> list:
                 ns = run_one(pol, filt, op, n, iters, engine=engine)
                 rows.append({"op": op, "range": label, "policy": name,
                              "ns": round(ns), "vs_linux": round(ns / base, 3)})
+            # the IPI-free hardware-coherence column, plus the ablation
+            # against a coalescing run of the identical trace: the
+            # coalescing per-op total splits exactly into the flush work
+            # hardware still pays and the IPI dispatch + ack on top
+            coal = run_one(Policy.LINUX, False, op, n, iters, engine=engine,
+                           contention="coalescing")
+            hw = run_one(Policy.LINUX, False, op, n, iters, engine=engine,
+                         contention="hardware")
+            rows.append({"op": op, "range": label, "policy": "hardware",
+                         "ns": round(hw), "vs_linux": round(hw / base, 3),
+                         "model": "hardware",
+                         "flush_work_ns": round(hw),
+                         "dispatch_ack_ns": round(coal - hw),
+                         "coalescing_ns": round(coal)})
     # engine wall-time comparison: the same phased mmap/touch/munmap
     # workload on the compiled trace / batch engines vs the scalar
     # reference, scale-swept (quick keeps only the requested scale so the

@@ -9,6 +9,11 @@ execution (``repro.core.trace``), ``engine="batch"`` runs the per-op
 batched engine, and both are byte-identical in counters and modeled time
 to the scalar reference, so ``--scale`` can raise the munmap count
 toward paper scale.
+
+A ``hardware`` column (schema v9) reruns Linux's layout under the
+IPI-free ``HardwareCoherence`` model and decomposes a coalescing run of
+the identical trace: ``flush_work_ns`` + ``dispatch_ack_ns`` =
+``coalescing_ns`` — at full spin nearly the whole cliff is dispatch/ack.
 """
 from __future__ import annotations
 
@@ -23,9 +28,12 @@ from .common import csv, engine_walltime_rows, make_spinners, policies
 
 
 def run_one(policy: Policy, filt: bool, spin: int, iters: int = 150,
-            engine: str = "trace") -> dict:
-    sim = make_sim(PAPER_8SOCKET, SimConfig(policy=policy, tlb_filter=filt,
-                                            engine=engine))
+            engine: str = "trace", contention: str = None) -> dict:
+    sim = make_sim(PAPER_8SOCKET,
+                   SimConfig(policy=policy, tlb_filter=filt, engine=engine,
+                             concurrency=("overlap" if contention
+                                          else "sequential"),
+                             contention=contention))
     main = sim.spawn_thread(0)
     make_spinners(sim, spin)
     if engine == "scalar":
@@ -64,6 +72,23 @@ def main(quick: bool = False, scale: int = 1, engine: str = "trace") -> list:
             rows.append({"policy": name, "spin_per_socket": spin,
                          "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
                          **r})
+    # the IPI-free hardware-coherence column: Linux's unfiltered fan-out
+    # settled line-by-line over the cache fabric, plus the ablation
+    # against a coalescing run of the identical trace — the coalescing
+    # per-op total splits exactly into the flush work hardware still
+    # pays and the IPI dispatch + ack charged on top of it
+    for spin in spins:
+        coal = run_one(Policy.LINUX, False, spin, iters, engine,
+                       contention="coalescing")
+        r = run_one(Policy.LINUX, False, spin, iters, engine,
+                    contention="hardware")
+        rows.append({"policy": "hardware", "spin_per_socket": spin,
+                     "slowdown_vs_linux0": round(r["ns_per_op"] / base, 2),
+                     **r, "model": "hardware",
+                     "flush_work_ns": r["ns_per_op"],
+                     "dispatch_ack_ns": round(coal["ns_per_op"]
+                                              - r["ns_per_op"], 1),
+                     "coalescing_ns": coal["ns_per_op"]})
     # engine wall-time comparison (ROADMAP open item): the full-spin
     # munmap storm — the paper's 280-spinner regime (35/socket) — on the
     # compiled trace / batch engines vs the scalar reference, swept over

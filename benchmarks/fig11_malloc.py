@@ -32,10 +32,13 @@ from .common import csv, policies
 def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
             stateful: bool, iters: int = 150,
             engine: str = "batch", elide: bool = False,
-            readers: bool = True) -> dict:
+            readers: bool = True, contention: str = None) -> dict:
     topo = NumaTopology(n_nodes=max(2, n_sockets), cores_per_node=18)
     sim = make_sim(topo, SimConfig(policy=policy, tlb_filter=filt,
-                                   engine=engine, elide_flushes=elide))
+                                   engine=engine, elide_flushes=elide,
+                                   concurrency=("overlap" if contention
+                                                else "sequential"),
+                                   contention=contention))
     rng = np.random.default_rng(7)
     workers = []
     for node in range(n_sockets):
@@ -81,6 +84,7 @@ def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
     return {
         "ns_per_cycle": total / (iters * len(workers)),
         "ipis": d.ipis_local + d.ipis_remote,
+        "hw_line_invalidations": d.hw_line_invalidations,
         "shootdown_rounds": d.shootdown_rounds,
         "flushes_elided": d.flushes_elided,
         "forced_flushes": d.forced_flushes,
@@ -93,9 +97,13 @@ def run_one(policy: Policy, filt: bool, n_sockets: int, flavor: str,
 
 
 def _columns(quick: bool):
-    cols = [(name, pol, filt, False) for name, pol, filt in policies()
+    cols = [(name, pol, filt, False, None)
+            for name, pol, filt in policies()
             if not (quick and name == "numapte-nofilter")]
-    cols.append(("numapte+elide", Policy.NUMAPTE, True, True))
+    cols.append(("numapte+elide", Policy.NUMAPTE, True, True, None))
+    # the IPI-free hardware-coherence column (schema v9): Linux's
+    # unfiltered fan-out settled line-by-line over the cache fabric
+    cols.append(("hardware", Policy.LINUX, False, False, "hardware"))
     return cols
 
 
@@ -109,15 +117,16 @@ def main(quick: bool = False, scale: int = 1, engine: str = "trace") -> list:
             for ns_ in sockets:
                 base = run_one(Policy.LINUX, False, ns_, flavor, stateful,
                                iters, engine=engine)["ns_per_cycle"]
-                for name, pol, filt, elide in _columns(quick):
+                for name, pol, filt, elide, cont in _columns(quick):
                     r = run_one(pol, filt, ns_, flavor, stateful, iters,
-                                engine=engine, elide=elide)
+                                engine=engine, elide=elide, contention=cont)
                     rows.append({
                         "bench": "stateful" if stateful else "stateless",
                         "alloc": flavor, "sockets": ns_, "policy": name,
                         "us_per_cycle": round(r["ns_per_cycle"] / 1e3, 2),
                         "vs_linux": round(r["ns_per_cycle"] / base, 3),
                         "ipis": r["ipis"],
+                        "hw_line_invalidations": r["hw_line_invalidations"],
                         "shootdown_rounds": r["shootdown_rounds"],
                         "flushes_elided": r["flushes_elided"],
                         "forced_flushes": r["forced_flushes"],

@@ -45,7 +45,12 @@ Four scenarios:
   The cliff survives coalescing because it is dominated by the
   process-wide round's full fan-out dispatch + ack, not by handler
   queueing.  numaPTE's absolute degradation lands at ~2.3x, matching
-  Fig 10's ~2.6x munmap figure.
+  Fig 10's ~2.6x munmap figure.  A third ``hardware`` system rides the
+  sweep — Linux's unfiltered fan-out under the IPI-free
+  ``HardwareCoherence`` model — and its rows decompose the Linux cliff
+  into ``flush_work_ns`` vs ``dispatch_ack_ns`` (see
+  ``run_absolute_ramp``): the ablation showing the 41x is IPI
+  dispatch + ack, not flush work.
 * ``app-churn``     — the Table-3 btree app through the ``workloads``
   mprotect/teardown phases, unchanged from PR 2.
 
@@ -127,11 +132,14 @@ def build_program(n_threads: int, n_ops: int, seed: int,
 
 def run_one(policy: Policy, filt: bool, n_ops: int, *,
             spin: int = 8, workers_per_node: int = 2, seed: int = 11,
-            engine: str = "batch",
-            concurrency: str = "sequential") -> dict:
+            engine: str = "batch", concurrency: str = "sequential",
+            contention: str = None) -> dict:
     sim = make_sim(PAPER_8SOCKET,
                    SimConfig(policy=policy, tlb_filter=filt,
-                             engine=engine, concurrency=concurrency))
+                             engine=engine, concurrency=concurrency,
+                             contention=(contention
+                                         if concurrency == "overlap"
+                                         else None)))
     tids = []
     for node in range(sim.topo.n_nodes):
         base = node * sim.topo.hw_threads_per_node
@@ -157,8 +165,8 @@ def run_one(policy: Policy, filt: bool, n_ops: int, *,
             "ipi_queue_delay_us": round(c.ipi_queue_delay_ns / 1e3, 3),
             "responder_delay_us": round(c.responder_delay_ns / 1e3, 3),
             "overlapping_rounds": c.overlapping_rounds,
-            "model": (DEFAULT_OVERLAP_MODEL if concurrency == "overlap"
-                      else None),
+            "model": ((contention or DEFAULT_OVERLAP_MODEL)
+                      if concurrency == "overlap" else None),
             "settle_engine": sim.last_settle_engine,
             "pt_pages_freed": c.pt_pages_freed}
 
@@ -235,6 +243,8 @@ def run_storm(policy: Policy, filt: bool, n_threads: int, *,
             "ipis_coalesced": c.ipis_coalesced,
             "ipis_local": c.ipis_local, "ipis_remote": c.ipis_remote,
             "ipis_filtered": c.ipis_filtered,
+            "hw_line_invalidations": c.hw_line_invalidations,
+            "hw_invalidation_us": round(c.hw_invalidation_ns / 1e3, 3),
             # contention-model provenance only where a model actually ran
             "model": ((contention or DEFAULT_OVERLAP_MODEL)
                       if concurrency == "overlap" else None),
@@ -302,34 +312,58 @@ def run_absolute_ramp(*, spinner_loads=ABS_SPINNER_LOADS,
     normalizations: ``vs_quiet`` (the policy's single-initiator,
     zero-spinner value, Fig 1's y-axis — the sweep must therefore start
     at load 0) and ``vs_single_initiator`` (the one-initiator value at
-    the same load — the concurrency-flatness numaPTE's filter buys)."""
+    the same load — the concurrency-flatness numaPTE's filter buys).
+
+    A third system rides the sweep: ``hardware`` — Linux's unfiltered
+    fan-out settled by the IPI-free :class:`~repro.core.shootdown.
+    HardwareCoherence` model — the upper bound on what any software
+    shootdown scheme can recover.  Its rows decompose the Linux cliff on
+    the identical trace: ``flush_work_ns`` (the hardware per-op value —
+    the invalidation work itself), ``dispatch_ack_ns`` (the Linux
+    baseline row's per-op value minus it — pure IPI dispatch + ack
+    wait), and ``coalescing_ns`` (the Linux total they sum to)."""
     spinner_loads = tuple(spinner_loads)
     if not spinner_loads or spinner_loads[0] != 0:
         raise ValueError("the absolute ramp normalizes to the quiet "
                          "single-initiator baseline; spinner_loads must "
                          f"start at 0, got {spinner_loads!r}")
     rows = []
-    for name, policy, filt in (("linux", Policy.LINUX, False),
-                               ("numapte", Policy.NUMAPTE, True)):
+    linux_ns = {}                 # (spin, workers) -> linux ns_per_op
+    for name, policy, filt, model in (
+            ("linux", Policy.LINUX, False, contention),
+            ("numapte", Policy.NUMAPTE, True, contention),
+            ("hardware", Policy.LINUX, False, "hardware")):
         quiet = None
         for s in spinner_loads:
             single = None
             for w in (1, workers):
                 r = run_storm(policy, filt, w, iters=iters, spin=s,
                               engine=engine, concurrency="overlap",
-                              contention=contention, settle=settle)
+                              contention=model, settle=settle)
                 if single is None:
                     single = r["ns_per_op"]
                 if quiet is None:
                     quiet = r["ns_per_op"]
-                rows.append({
+                if name == "linux":
+                    linux_ns[(s, w)] = r["ns_per_op"]
+                row = {
                     "scenario": "fig1-absolute", "spinners": s,
                     "total_spinners": s * PAPER_8SOCKET.n_nodes,
                     "concurrency": "overlap", "policy": name,
                     "vs_quiet": round(r["ns_per_op"] / quiet, 3),
                     "vs_single_initiator":
                         round(r["ns_per_op"] / single, 3),
-                    **r})
+                    **r}
+                if name == "hardware":
+                    # ablation: hardware pays only the flush work, so the
+                    # Linux row on the identical trace splits exactly into
+                    # flush work + IPI dispatch/ack overhead
+                    total = linux_ns[(s, w)]
+                    row["flush_work_ns"] = r["ns_per_op"]
+                    row["dispatch_ack_ns"] = round(
+                        total - r["ns_per_op"], 1)
+                    row["coalescing_ns"] = total
+                rows.append(row)
                 if w == workers:
                     break   # workers == 1: one run covers both rows
     return rows
@@ -366,7 +400,11 @@ def settlement_walltime_rows(*, iters: int = 40,
 def main(quick: bool = False, scale: int = 1,
          concurrency: str = "both",
          spinners: int = RAMP_SPINNERS_DEFAULT,
-         engine: str = "trace") -> list:
+         engine: str = "trace", contention: str = None) -> list:
+    """``contention`` overrides the overlap model for the mixed-ops,
+    munmap-storm and fig1-absolute scenarios (``--contention hardware``
+    puts the whole sweep on the IPI-free upper bound; the spinner-ramp
+    keeps its explicit ``queue`` calibration model)."""
     n_ops = (600 if quick else 2500) * scale
     rows = []
     # mixed-ops: the PR-2 scenario, swept over shootdown-settlement modes
@@ -374,7 +412,7 @@ def main(quick: bool = False, scale: int = 1,
         base = None
         for name, policy, filt in policies():
             r = run_one(policy, filt, n_ops, engine=engine,
-                        concurrency=mode)
+                        concurrency=mode, contention=contention)
             if name == "linux":
                 base = r["modeled_ms"]
             rows.append({"scenario": "mixed-ops", "concurrency": mode,
@@ -390,7 +428,8 @@ def main(quick: bool = False, scale: int = 1,
             base = None
             for w in threads:
                 r = run_storm(policy, filt, w, iters=storm_iters,
-                              engine=engine, concurrency=mode)
+                              engine=engine, concurrency=mode,
+                              contention=contention)
                 if base is None:
                     base = r["ns_per_op"]
                 rows.append({"scenario": "munmap-storm", "concurrency": mode,
@@ -408,7 +447,8 @@ def main(quick: bool = False, scale: int = 1,
         rows += run_absolute_ramp(
             spinner_loads=(ABS_SPINNER_LOADS_QUICK if quick
                            else ABS_SPINNER_LOADS),
-            iters=(30 if quick else 60) * scale, engine=engine)
+            iters=(30 if quick else 60) * scale, engine=engine,
+            contention=contention)
         rows += settlement_walltime_rows(iters=(30 if quick else 60) * scale,
                                          engine=engine)
     # app churn: loading + exec + mprotect pass + teardown of the btree app

@@ -2,19 +2,37 @@
 
 ``python -m benchmarks.run [--quick] [--only NAME[,NAME...]] [--scale N]
                            [--outdir DIR] [--strict] [--spinners N]
-                           [--engine ENGINE] [--emit-root]``
+                           [--engine ENGINE] [--contention MODEL]
+                           [--emit-root]``
 
 prints ``name,key=value,...`` CSV rows for every reproduced artifact and
 writes one ``BENCH_<name>.json`` per benchmark to ``--outdir`` (default
 ``bench_out/``) so the perf trajectory is machine-readable and CI can
-archive it.  JSON schema (version 8):
+archive it.  JSON schema (version 9):
 
-    {"schema_version": 8, "name": str, "quick": bool, "scale": int,
+    {"schema_version": 9, "name": str, "quick": bool, "scale": int,
      "concurrency": str | null, "spinners": int | null,
      "tenants": int | null, "arrival_rate": float | null,
-     "engine": str | null,
+     "engine": str | null, "contention": str | null,
      "elapsed_s": float, "rows": [ {column: value, ...} ],
      "row_types": [str, ...], "error": str | null}
+
+Version 9 adds the IPI-free ``HardwareCoherence`` third system (HATRIC-
+style TLB coherence riding the cache fabric: zero IPIs, zero handler
+occupancy, a per-stale-line invalidation cost scaled by NUMA hop
+distance — ``repro.core.shootdown.HardwareCoherence``).  The mm-heavy
+benchmarks (``fig01_mprotect``, ``fig09_mm_ops``, ``fig10_munmap``,
+``fig11_12_malloc``, ``mm_concurrent``'s fig1-absolute sweep,
+``colocation``, ``serving_closed_loop``) grow a ``hardware`` policy
+column, and the fig09/fig10/fig1-absolute hardware rows carry an
+ablation decomposition of the coalescing total on the identical trace:
+``flush_work_ns`` (what hardware still pays — the TLB invalidation work
+itself) vs ``dispatch_ack_ns`` (the IPI dispatch + ack wait the
+coalescing model charges on top), with ``coalescing_ns`` recording the
+total they sum to.  Its knob: ``--contention`` overrides the overlap
+contention model for the benchmarks that take one (``contention``
+records the override in artifacts; null = each benchmark's own
+default).
 
 Version 8 adds the compiled trace engine (``repro.core.trace``: whole
 op-traces lowered into dense numpy tables, partitioned into conflict-free
@@ -134,7 +152,7 @@ BENCHES = {
     "roofline": roofline.main,
 }
 
-SCHEMA_VERSION = 8
+SCHEMA_VERSION = 9
 
 #: where --emit-root writes the canonical BENCH_<name>.json files: the
 #: repository root, resolved from this package's location so the flag
@@ -178,6 +196,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
                    tenants: Optional[int] = None,
                    arrival_rate: Optional[float] = None,
                    engine: Optional[str] = None,
+                   contention: Optional[str] = None,
                    emit_root: bool = False) -> Dict[str, str]:
     """Run benchmarks, print their CSV, and write BENCH_<name>.json files.
 
@@ -221,6 +240,11 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
                            else params["engine"].default)
             if engine is not None:
                 kwargs["engine"] = engine
+        contention_used = None
+        if "contention" in params:
+            contention_used = contention
+            if contention is not None:
+                kwargs["contention"] = contention
         print(f"# --- {name} ---", file=sys.stderr)
         t0 = time.perf_counter()
         rows, error = None, None
@@ -242,6 +266,7 @@ def run_benchmarks(names: Optional[Iterable[str]] = None, *,
             "tenants": tenants_used,
             "arrival_rate": arrival_rate_used,
             "engine": engine_used,
+            "contention": contention_used,
             "elapsed_s": round(elapsed, 3),
             "rows": rows or [],
             "row_types": sorted({row.get("row_type", "data")
@@ -351,6 +376,15 @@ def main() -> None:
                          "own default (trace for the mm-heavy ones); "
                          "'engine' is null in artifacts of benchmarks "
                          "without the knob")
+    from repro.core import CONTENTION_MODELS
+    ap.add_argument("--contention", default=None,
+                    choices=sorted(CONTENTION_MODELS),
+                    help="overlap contention-model override for the "
+                         "benchmarks with the knob (hardware = the "
+                         "IPI-free HardwareCoherence upper bound; see "
+                         "repro.core.shootdown).  Default: each "
+                         "benchmark's own model; 'contention' is null in "
+                         "artifacts unless overridden")
     ap.add_argument("--emit-root", action="store_true",
                     help="also write canonical BENCH_<name>.json files at "
                          "the repository root (the committed perf "
@@ -361,7 +395,8 @@ def main() -> None:
                    scale=args.scale, outdir=args.outdir, strict=args.strict,
                    concurrency=args.concurrency, spinners=args.spinners,
                    tenants=args.tenants, arrival_rate=args.arrival_rate,
-                   engine=args.engine, emit_root=args.emit_root)
+                   engine=args.engine, contention=args.contention,
+                   emit_root=args.emit_root)
 
 
 if __name__ == "__main__":

@@ -9,8 +9,9 @@ the modeled thread clocks — each lockstep decode step barriers the
 workers, so IPI rounds and responder stretch turn directly into p99.
 
 Rows (``row_type="serving_latency"``): per policy (``linux`` /
-``mitosis`` / ``numapte`` / ``numapte+elide``) x offered load (a
-fraction of the contention-free nominal capacity), p50/p99/mean latency,
+``mitosis`` / ``numapte`` / ``numapte+elide`` / ``hardware`` — the
+IPI-free ``HardwareCoherence`` upper bound, schema v9) x offered load
+(a fraction of the contention-free nominal capacity), p50/p99/mean latency,
 goodput vs offered load, shootdown/elision counters, the cross-tenant
 interrupt leak, and — at the saturating top load — ``runtime_vs_linux``
 (the saturated-makespan improvement, the quantity the paper's
@@ -74,6 +75,9 @@ def main(quick: bool = False, scale: int = 1,
                 "flushes_elided": r["flushes_elided"],
                 "forced_flushes": r["forced_flushes"],
                 "victim_interrupt_us": round(r["victim_interrupt_us"], 3),
+                "hw_line_invalidations": r["hw_line_invalidations"],
+                "hw_invalidation_us": round(r["hw_invalidation_us"], 3),
+                "model": r["model"],
                 "settle_engine": r["settle_engine"],
                 "mm_engine": r["mm_engine"],
             })

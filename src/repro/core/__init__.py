@@ -20,8 +20,8 @@ from .pagetable import (PERM_R, PERM_RW, PERM_W, PERM_X, PTES_PER_TABLE,
                         leaf_index)
 from .shootdown import (CONTENTION_MODELS, DEFAULT_OVERLAP_MODEL,
                         IPI_RECEIVE_NS, CoalescingContention,
-                        ContentionModel, NullContention, QueueContention,
-                        RoundSettlement, make_contention)
+                        ContentionModel, HardwareCoherence, NullContention,
+                        QueueContention, RoundSettlement, make_contention)
 from .shootdown_batch import (SETTLE_MODES, BatchSettlement, settle_round,
                               supports_vector)
 from .sim import Counters, NumaSim, Process, SegfaultError, Thread
@@ -36,6 +36,7 @@ __all__ = [
     "APPS", "AppSpec", "BatchSettlement", "CONTENTION_MODELS",
     "CoalescingContention", "ContentionModel",
     "CostModel", "Counters", "DEFAULT_OVERLAP_MODEL", "ENGINES",
+    "HardwareCoherence",
     "POLICIES", "SimConfig", "make_sim",
     "IPI_RECEIVE_NS", "LeafTable", "MallocModel", "NullContention",
     "QueueContention", "RoundSettlement", "SETTLE_MODES",

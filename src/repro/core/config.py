@@ -14,7 +14,9 @@ configs) without importing enum/class internals:
   :data:`POLICIES` (``"linux"``, ``"mitosis"``, ``"numapte"``);
 * ``contention`` — ``None`` (no ambient model), a name in
   :data:`~repro.core.shootdown.CONTENTION_MODELS` (``"null"``,
-  ``"queue"``, ``"coalescing"``), or a model instance.  A name is
+  ``"queue"``, ``"coalescing"``, ``"hardware"``), or a model instance
+  whose class is registered (or subclasses a registered model — anything
+  else raises the same ``ValueError`` as an unknown name).  A name is
   instantiated fresh per ``make_sim`` call so two sims never share busy
   horizons by accident; pass an instance to share deliberately.
 
@@ -108,10 +110,21 @@ class SimConfig:
         elif not isinstance(self.policy, Policy):
             raise TypeError(f"policy must be a Policy or one of "
                             f"{sorted(POLICIES)}, got {self.policy!r}")
-        if isinstance(self.contention, str) \
-                and self.contention not in CONTENTION_MODELS:
-            raise ValueError(f"unknown contention {self.contention!r}; "
-                             f"pick from {sorted(CONTENTION_MODELS)}")
+        if isinstance(self.contention, str):
+            if self.contention not in CONTENTION_MODELS:
+                raise ValueError(f"unknown contention {self.contention!r}; "
+                                 f"pick from {sorted(CONTENTION_MODELS)}")
+        elif self.contention is not None and not isinstance(
+                self.contention, tuple(CONTENTION_MODELS.values())):
+            # instances get the same clear error as unknown names: an
+            # unregistered model class would otherwise leak into the
+            # engines with settlement semantics nothing ever validated
+            # (subclasses of a registered model are fine — they inherit
+            # validated semantics)
+            raise ValueError(
+                f"unknown contention model "
+                f"{type(self.contention).__name__!r}; pick from "
+                f"{sorted(CONTENTION_MODELS)} (or subclass one)")
         if self.settle not in SETTLE_MODES:
             raise ValueError(f"unknown settle {self.settle!r}; "
                              f"pick from {SETTLE_MODES}")

@@ -102,7 +102,7 @@ import numpy as np
 from .pagetable import (LEAF_SHIFT, PERM_RW, PTE, PTES_PER_TABLE, VMA,
                         find_vma_sorted, next_table_aligned)
 from .shootdown import (CoalescingContention, ContentionModel,
-                        charge_responders)
+                        RoundSettlement, charge_responders)
 from .shootdown_batch import BatchSettlement, resolve_settle
 
 from .config import _UNSET, _warn_deprecated
@@ -985,12 +985,15 @@ class _MMEngine:
                 n_remote += cnt
         ctr.ipis_filtered += (self.total_occ - 1) - (n_local + n_remote)
         ctr.shootdown_rounds += 1
+        model = self.contention
+        if model is not None and model.ipi_free:
+            return self._hw_round(t, me_cpu, my_node, allowed, start, end,
+                                  model)
         ctr.ipis_local += n_local
         ctr.ipis_remote += n_remote
         c = sim.cost
         base = (c.shootdown_cost_ns(n_local, n_remote)
                 + c.tlb_invalidate_self_ns)
-        model = self.contention
         if model is not None and (n_local or n_remote):
             # same round-start time and float order as the scalar path: the
             # round starts at the initiator's working time before the
@@ -1065,4 +1068,51 @@ class _MMEngine:
                 if cpu == me_cpu or (cpu in occupied
                                      and (allowed >> node_of(cpu)) & 1):
                     tlbs[cpu].invalidate_range(start, end)
+        return t
+
+    def _hw_round(self, t: float, me_cpu: int, my_node: int, allowed: int,
+                  start: int, end: int, model, rel=None) -> float:
+        """Hardware-coherence settlement of one batched round: the batched
+        mirror of ``NumaSim._hw_shootdown``.  Only relevance-filtered
+        partitions are visited (a TLB outside ``self._relevant`` — or
+        outside the trace engine's per-op compiled mask passed as ``rel``
+        — provably holds no line in the range, and the scalar path skips
+        zero-line CPUs too), in sorted-CPU order so the counter and
+        thread-time float sequences are identical to the scalar scan.
+        Shared by the per-op batch path and the trace-window replay."""
+        sim = self.sim
+        ctr = sim.counters
+        topo = sim.topo
+        t += sim.cost.tlb_invalidate_self_ns
+        if rel is None:
+            rel = self._relevant
+        if not rel:
+            return t
+        tlbs = sim._asid_tlbs[self.proc.asid]
+        node_of = self.node_of
+        occupied = self.occupied_all
+        line_costs: Dict[int, float] = {}
+        for cpu in sorted(rel):
+            tlb = tlbs.get(cpu)
+            if tlb is None:
+                continue
+            if cpu == me_cpu:
+                tlb.invalidate_range(start, end)
+                continue
+            if cpu in occupied and (allowed >> node_of(cpu)) & 1:
+                lines = tlb.invalidate_range(start, end)
+                if not lines:
+                    continue
+                hops = topo.hops(my_node, node_of(cpu))
+                cost_cpu = model.line_cost_ns(lines, hops)
+                ctr.hw_line_invalidations += lines
+                ctr.hw_invalidation_ns += cost_cpu
+                line_costs[cpu] = cost_cpu
+        if line_costs:
+            charge_responders(
+                RoundSettlement(target_stretch=line_costs), 0.0,
+                sorted(line_costs), sim._cpu_threads,
+                lambda thr: self._wtime(thr.tid),
+                lambda thr, v: self._set_time(thr.tid, v),
+                count_ipis=False, asid=self.proc.asid)
         return t

@@ -48,7 +48,7 @@ round costs *beyond* the classic charges:
     already-pending handler (Linux's flush batching): the responder pays
     no new handler occupancy for them (the ``ipis_coalesced`` counter).
 
-Three models ship:
+Four models ship:
 
   * :class:`NullContention` — the zero-delay model: every round settles to
     exactly zero extra cost, so an ``overlap``-mode run is byte-identical
@@ -68,6 +68,12 @@ Three models ship:
     flushes for reused pages", arXiv:2409.10946, quantifies how much this
     coalescing matters).  The initiator still waits for the merged
     handler to finish; the responder pays nothing extra.
+  * :class:`HardwareCoherence` — the IPI-free upper bound (HATRIC): no
+    dispatch, no handler, no ack wait; each target pays only a per-line
+    invalidation cost for the stale entries its TLB actually holds,
+    scaled by NUMA hop distance.  Differencing it against a coalescing
+    run on the identical trace decomposes the Fig 1 cliff into "IPI
+    dispatch+ack" vs "flush work".
 
 Determinism: targets are visited in sorted CPU order inside the models,
 so float accumulation order (and therefore every modeled time and the
@@ -86,6 +92,18 @@ from typing import Callable, Dict, FrozenSet, Iterable, Mapping, Optional
 #: both sides (CPU busy horizon *and* thread charge) — see
 #: ``ContentionModel.handler_ns``.
 IPI_RECEIVE_NS = 700.0
+
+#: per-stale-TLB-entry invalidation cost under hardware TLB coherence: the
+#: coherence fabric unicasts one invalidation message per cached
+#: translation (HATRIC's Tomasulo-style per-line tracking), so the cost is
+#: proportional to how many stale entries the target TLB actually holds —
+#: not to the fan-out of a software IPI broadcast.
+HW_LINE_INVALIDATE_NS = 40.0
+
+#: additional per-line cost per NUMA hop between the initiating CPU's node
+#: and the target TLB's node (the invalidation rides the same interconnect
+#: as coherence traffic; see ``NumaTopology.hops``).
+HW_HOP_NS = 20.0
 
 _NO_CPUS: FrozenSet[int] = frozenset()
 
@@ -112,7 +130,8 @@ _ZERO = RoundSettlement()
 
 
 def charge_responders(s: RoundSettlement, handler: float, targets,
-                      cpu_threads, read_time, write_time) -> None:
+                      cpu_threads, read_time, write_time, *,
+                      count_ipis: bool = True, asid=None) -> None:
     """Apply one settled round's responder charges to the target threads.
 
     Both engines — the scalar ``NumaSim._shootdown`` and the batched
@@ -123,6 +142,12 @@ def charge_responders(s: RoundSettlement, handler: float, targets,
     shared code and the scalar==batch parity is structural, not merely
     test-enforced.  ``ipis_received`` counts every delivery, merged or
     not.
+
+    :class:`HardwareCoherence` rounds reuse this helper with
+    ``count_ipis=False`` (no interrupt is delivered — the invalidation
+    rides the coherence fabric) and ``asid`` set to the initiating
+    process: a hardware invalidation stalls only threads whose TLB
+    context it targets, never an unrelated tenant time-sharing the CPU.
     """
     stretch = s.target_stretch
     coalesced = s.coalesced_cpus
@@ -130,13 +155,16 @@ def charge_responders(s: RoundSettlement, handler: float, targets,
         pay_handler = cpu not in coalesced
         extra = stretch.get(cpu, 0.0)
         for thr in cpu_threads.get(cpu, ()):
+            if asid is not None and thr.asid != asid:
+                continue
             t = read_time(thr)
             if pay_handler:
                 t += handler
             if extra:
                 t += extra
             write_time(thr, t)
-            thr.ipis_received += 1
+            if count_ipis:
+                thr.ipis_received += 1
 
 
 class ContentionModel:
@@ -167,6 +195,12 @@ class ContentionModel:
     #: threads exactly this (keeps busy horizons and thread charges in
     #: agreement even for custom-``handler_ns`` models).
     handler_ns: float = IPI_RECEIVE_NS
+
+    #: True for models that settle rounds with no IPIs at all (hardware
+    #: TLB coherence): the engines take the invalidation-message path —
+    #: zero dispatch, zero handler occupancy, zero ack wait — instead of
+    #: calling ``settle``.  Software models leave this False.
+    ipi_free: bool = False
 
     def settle(self, t_start: float, my_cpu: int, targets: Iterable[int],
                node_of: Callable[[int], int], cost) -> RoundSettlement:
@@ -338,11 +372,63 @@ class CoalescingContention(QueueContention):
     merge_pending = True
 
 
+class HardwareCoherence(ContentionModel):
+    """Hardware TLB coherence: zero IPIs, per-line invalidation messages.
+
+    The third system alongside the software schemes (HATRIC,
+    arXiv:1701.07517): TLBs participate in the cache-coherence protocol,
+    so a PTE write invalidates remote translations with unicast coherence
+    messages instead of a process-wide IPI broadcast.  Every software cost
+    the contention engine models disappears — no dispatch, no
+    interrupt-handler occupancy, no synchronous ack wait, no receive-queue
+    contention — which makes this model the *upper bound* that decomposes
+    the Fig 1 cliff: differencing a hardware run against a coalescing run
+    on the identical trace splits each op's cost into ``dispatch_ack_ns``
+    (the part only software pays) vs ``flush_work_ns`` (the part any
+    scheme pays).
+
+    What it *does* charge: per stale TLB entry actually cached on a target
+    CPU, ``line_ns`` plus ``hop_ns`` per NUMA hop between the initiator's
+    node and the target's node.  The engines count the stale lines
+    (entries of the invalidated VPN range present in each target TLB),
+    price the round via :meth:`line_cost_ns`, and deliver the charge
+    through :func:`charge_responders` with ``count_ipis=False`` and the
+    initiating ASID — so counters, thread-time float sequences, and
+    cross-tenant isolation stay comparable with the software models.  The
+    initiator pays only its own local ``tlb_invalidate_self_ns``; its cost
+    is independent of fan-out, which is why no cliff survives.
+
+    ``settle`` is never reached by the engines (they branch on
+    ``ipi_free`` first) but is implemented as the zero settlement so the
+    model honors the full :class:`ContentionModel` interface.
+    """
+
+    ipi_free = True
+    handler_ns = 0.0  # no interrupt handler exists to occupy a CPU
+
+    def __init__(self, *, line_ns: float = HW_LINE_INVALIDATE_NS,
+                 hop_ns: float = HW_HOP_NS):
+        self.line_ns = float(line_ns)
+        self.hop_ns = float(hop_ns)
+
+    def line_cost_ns(self, n_lines: int, hops: int) -> float:
+        """Cost of invalidating ``n_lines`` stale entries ``hops`` away."""
+        return n_lines * (self.line_ns + hops * self.hop_ns)
+
+    def settle(self, t_start, my_cpu, targets, node_of, cost
+               ) -> RoundSettlement:
+        return _ZERO
+
+    def reset(self) -> None:
+        pass
+
+
 #: selectable contention models by name (benchmark CLI / row labels).
 CONTENTION_MODELS = {
     "null": NullContention,
     "queue": QueueContention,
     "coalescing": CoalescingContention,
+    "hardware": HardwareCoherence,
 }
 
 #: the model ``concurrency="overlap"`` uses when none is given: Linux's
@@ -352,9 +438,24 @@ DEFAULT_OVERLAP_MODEL = "coalescing"
 
 
 def make_contention(name: Optional[str]) -> ContentionModel:
-    """Instantiate a contention model by registry name (None = default)."""
+    """Instantiate (or validate) a contention model.
+
+    ``name`` may be a registry name (None = the overlap default), which
+    returns a fresh instance, or an already-constructed
+    :class:`ContentionModel` instance, which passes through unchanged —
+    but only if its class is registered (or subclasses a registered
+    model): an unregistered instance raises the same clear ``ValueError``
+    an unknown name does, instead of leaking into the engines where its
+    unknown settlement semantics would surface as silent divergence.
+    """
     if name is None:
         name = DEFAULT_OVERLAP_MODEL
+    if isinstance(name, ContentionModel):
+        if not isinstance(name, tuple(CONTENTION_MODELS.values())):
+            raise ValueError(
+                f"unknown contention model {type(name).__name__!r}; pick "
+                f"from {sorted(CONTENTION_MODELS)} (or subclass one)")
+        return name
     try:
         return CONTENTION_MODELS[name]()
     except KeyError:

@@ -61,7 +61,7 @@ from .costmodel import CostModel
 from .pagetable import (PERM_RW, PTE, PTES_PER_TABLE, LeafTable,
                         PageTableStore, Policy, VMA, leaf_base_vpn, leaf_id,
                         leaf_index, next_table_aligned)
-from .shootdown import (IPI_RECEIVE_NS, ContentionModel,
+from .shootdown import (IPI_RECEIVE_NS, ContentionModel, RoundSettlement,
                         charge_responders)
 from .shootdown_batch import (SETTLE_MODES, settle_round, supports_vector)
 from .tlb import DEFAULT_TLB_ENTRIES, TLB
@@ -94,6 +94,8 @@ class Counters:
     flushes_elided: int = 0      # unmap shootdown rounds skipped lazily
     deferred_invalidations: int = 0  # stale (cpu, vpn) entries recorded
     forced_flushes: int = 0      # deferred flushes forced by reuse/touch
+    hw_line_invalidations: int = 0   # stale entries killed by hw coherence
+    hw_invalidation_ns: float = 0.0  # total per-line hw invalidation cost
     pt_pages_alloc: int = 0
     pt_pages_freed: int = 0
     data_pages_alloc: int = 0
@@ -778,7 +780,29 @@ class NumaSim:
                 for vpn in mine:
                     tlb.invalidate(vpn)
         targets = set(stale_map)
-        if targets:
+        model = self.contention
+        if targets and model is not None and model.ipi_free:
+            # hardware coherence: the forced flush is still one precise
+            # round, but it sends no IPIs — each recorded CPU drops
+            # exactly its stale vpns and pays per line actually present.
+            ctr.shootdown_rounds += 1
+            self._charge(tid, c.tlb_invalidate_self_ns)
+            line_costs: Dict[int, float] = {}
+            for cpu in sorted(targets):
+                tlb = ptlbs.get(cpu)
+                lines = 0
+                if tlb is not None:
+                    for vpn in stale_map[cpu]:
+                        lines += tlb.invalidate(vpn)
+                if not lines:
+                    continue
+                hops = self.topo.hops(my_node, self.topo.node_of_cpu(cpu))
+                cost_cpu = model.line_cost_ns(lines, hops)
+                ctr.hw_line_invalidations += lines
+                ctr.hw_invalidation_ns += cost_cpu
+                line_costs[cpu] = cost_cpu
+            self._hw_charge_lines(me, line_costs)
+        elif targets:
             n_local = sum(1 for cpu in targets
                           if self.topo.node_of_cpu(cpu) == my_node)
             n_remote = len(targets) - n_local
@@ -915,6 +939,13 @@ class NumaSim:
         targets.discard(me.cpu)
         filtered = len(running_cpus - {me.cpu}) - len(targets)
         ctr.ipis_filtered += filtered
+        model = self.contention
+        if model is not None and model.ipi_free:
+            # hardware TLB coherence: no IPIs dispatched, no handlers, no
+            # ack wait — per-line invalidation messages only.
+            ctr.shootdown_rounds += 1
+            self._hw_shootdown(me, targets, start_vpn, end_vpn, model)
+            return
         n_local = sum(1 for cpu in targets
                       if self.topo.node_of_cpu(cpu) == my_node)
         n_remote = len(targets) - n_local
@@ -956,6 +987,50 @@ class NumaSim:
             for t in self._cpu_threads.get(cpu, ()):
                 t.time_ns += IPI_RECEIVE_NS
                 t.ipis_received += 1
+
+    def _hw_shootdown(self, me: Thread, targets, start_vpn: int,
+                      end_vpn: int, model) -> None:
+        """Settle one round under hardware TLB coherence (``ipi_free``).
+
+        The initiator pays only its own local invalidation — its cost is
+        independent of fan-out.  Each target CPU's partition drops its
+        stale entries; CPUs that actually held lines are charged the
+        per-line cost (scaled by NUMA hop distance), accumulated and
+        delivered in sorted-CPU order so every engine produces the
+        identical float sequence.  Zero-line CPUs are skipped entirely,
+        which is what makes the batch/trace relevance filters (which
+        never even visit provably-line-free CPUs) structurally
+        equivalent to this full scan.
+        """
+        ctr, c = self.counters, self.cost
+        topo = self.topo
+        my_node = topo.node_of_cpu(me.cpu)
+        self._charge(me.tid, c.tlb_invalidate_self_ns)
+        ptlbs = self._asid_tlbs[me.asid]
+        ptlbs[me.cpu].invalidate_range(start_vpn, end_vpn)
+        line_costs: Dict[int, float] = {}
+        for cpu in sorted(targets):
+            lines = ptlbs[cpu].invalidate_range(start_vpn, end_vpn)
+            if not lines:
+                continue
+            hops = topo.hops(my_node, topo.node_of_cpu(cpu))
+            cost_cpu = model.line_cost_ns(lines, hops)
+            ctr.hw_line_invalidations += lines
+            ctr.hw_invalidation_ns += cost_cpu
+            line_costs[cpu] = cost_cpu
+        self._hw_charge_lines(me, line_costs)
+
+    def _hw_charge_lines(self, me: Thread, line_costs) -> None:
+        """Deliver per-target hardware line charges through the shared
+        two-sided helper: zero handler, no ``ipis_received``, and only
+        threads of the initiating address space stall."""
+        if line_costs:
+            charge_responders(
+                RoundSettlement(target_stretch=line_costs), 0.0,
+                sorted(line_costs), self._cpu_threads,
+                lambda thr: thr.time_ns,
+                lambda thr, v: setattr(thr, "time_ns", v),
+                count_ipis=False, asid=me.asid)
 
     def _settle_contended(self, me: Thread, targets, c):
         """Settle one contended round through the configured engine: the

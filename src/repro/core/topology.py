@@ -34,6 +34,20 @@ class NumaTopology:
         base = node * self.hw_threads_per_node
         return range(base, base + self.hw_threads_per_node)
 
+    def hops(self, a: int, b: int) -> int:
+        """NUMA hop distance between two nodes: 0 on-node, otherwise the
+        socket-ring distance capped at 2 (the paper's 8-socket QPI glueless
+        topology reaches any socket within two hops; smaller topologies
+        degenerate to 0/1 naturally).  Callers pass valid node ids — this
+        sits on the per-shootdown hot path, so it does not re-validate."""
+        if a == b:
+            return 0
+        d = a - b if a > b else b - a
+        ring = self.n_nodes - d
+        if ring < d:
+            d = ring
+        return 2 if d > 2 else d
+
     def all_cpus(self) -> range:
         return range(self.total_hw_threads)
 

@@ -349,6 +349,8 @@ class _TraceEngine(_MMEngine):
                 if hi - lo > 1 and self._window_eligible(lo, hi):
                     if self.contention is None:
                         self._window_seq(lo, hi)
+                    elif self.contention.ipi_free:
+                        self._window_hw(lo, hi)
                     else:
                         self._window_overlap(lo, hi)
                 else:
@@ -376,8 +378,10 @@ class _TraceEngine(_MMEngine):
                 return False
             if self.proc.lazy_pages:
                 return False
-        if self.contention is not None and self.vec is None:
+        if self.contention is not None and self.vec is None \
+                and not self.contention.ipi_free:
             return False    # overlap windows need the vectorized engine
+            # (hardware-coherence windows never settle through it)
         return bool(table.rel is not None)
 
     # ------------------------------------------------------------ fan-outs
@@ -535,6 +539,93 @@ class _TraceEngine(_MMEngine):
         if self_inc:
             self.self_rounds[me_cpu] = \
                 self.self_rounds.get(me_cpu, 0) + self_inc
+        self._set_time(tid, t)
+
+    # ----------------------------------------- hardware-coherence window
+    def _window_hw(self, lo: int, hi: int) -> None:
+        """Replay a single-initiator window under hardware TLB coherence
+        ("HATRIC over the trace"): the structure of ``_window_seq`` with
+        every round settled IPI-free through the shared
+        ``_MMEngine._hw_round`` — no dispatch/ack base, no
+        ``ipis_local/remote``, no lazy round accrual (nothing accrues:
+        responders are charged per line, eagerly).  The compiled fan-out
+        cache still supplies the ``ipis_filtered`` accounting and the
+        per-op relevance masks bound which partitions can hold lines."""
+        sim = self.sim
+        ctr, c = sim.counters, sim.cost
+        ops = self.ops
+        table = self.table
+        model = self.contention
+        tid = int(table.tid[lo])
+        self._settle_ipis(tid)     # structural parity: a no-op here
+        t = self._wtime(tid)
+        me_cpu = sim.threads[tid].cpu
+        my_node = self.node_of(me_cpu)
+        syscall = c.syscall_fixed_ns
+        teardown = c.pt_teardown_ns
+        store = self.proc.store
+        store_get = store.tables.get
+        oracle = self.proc.oracle
+        oracle_get = oracle.get
+        pop = oracle.pop
+        kinds = table.kind
+        tc = self._touch_cpus
+        for i in range(lo, hi):
+            op = ops[i]
+            kind = int(kinds[i])
+            start, n = op[2], op[3]
+            end = start + n
+            t += syscall
+            if kind == _MPROTECT:
+                perms = op[4]
+                t, touched = self._update_range(tid, t, start, n, perms)
+                if n > PTES_PER_TABLE:
+                    for vpn in self._present_vpns(touched, start, end):
+                        oracle[vpn] = (oracle[vpn][0], perms)
+                else:
+                    for vpn in range(start, end):
+                        e = oracle_get(vpn)
+                        if e is not None:
+                            oracle[vpn] = (e[0], perms)
+                vma = self._vma_at(start)
+                if vma is not None and vma.start_vpn == start \
+                        and vma.n_pages == n:
+                    vma.perms = perms
+            else:   # munmap / madvise (eager mode only: window guards)
+                if n > PTES_PER_TABLE:
+                    t0_ = start >> LEAF_SHIFT
+                    t1_ = (end - 1) >> LEAF_SHIFT
+                    present = self._present_vpns(range(t0_, t1_ + 1),
+                                                 start, end)
+                else:
+                    present = None
+                t, touched = self._update_range(tid, t, start, n, None)
+                freed = 0
+                if present is None:
+                    for vpn in range(start, end):
+                        if pop(vpn, None) is not None:
+                            freed += 1
+                else:
+                    for vpn in present:
+                        if pop(vpn, None) is not None:
+                            freed += 1
+                ctr.data_pages_freed += freed
+            allowed = self._allowed(i, touched)
+            ctr.ipis_filtered += self._fan(allowed, me_cpu, my_node)[2]
+            ctr.shootdown_rounds += 1
+            rel = table.rel[i]
+            t = self._hw_round(t, me_cpu, my_node, allowed, start, end,
+                               model, rel=(rel if not tc
+                                           else set(rel) | tc))
+            if kind == _MUNMAP:
+                for ti in touched:
+                    tbl = store_get(ti)
+                    if tbl is not None and tbl.empty():
+                        k = tbl.n_copies()
+                        ctr.pt_pages_freed += k
+                        t += teardown * k
+                        store.drop_table(ti)
+                self._carve_vmas(start, end)
         self._set_time(tid, t)
 
     # ------------------------------------------------ overlap-mode window

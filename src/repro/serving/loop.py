@@ -42,14 +42,19 @@ from ..core.pagetable import PERM_R
 __all__ = ["KVChurnAdapter", "Request", "SERVING_POLICIES",
            "nominal_capacity_rps", "poisson_trace", "run_closed_loop"]
 
-#: the four serving policies the closed loop sweeps: SimConfig overrides
-#: on top of the shared overlap + coalescing contention base
+#: the serving policies the closed loop sweeps: SimConfig overrides on
+#: top of the shared overlap + coalescing contention base (an entry may
+#: override ``contention`` itself — ``hardware`` settles every shootdown
+#: over the IPI-free ``HardwareCoherence`` fabric, the upper bound on
+#: what any software scheme can recover)
 SERVING_POLICIES: Dict[str, dict] = {
     "linux": dict(policy="linux", tlb_filter=False),
     "mitosis": dict(policy="mitosis", tlb_filter=False),
     "numapte": dict(policy="numapte", tlb_filter=True),
     "numapte+elide": dict(policy="numapte", tlb_filter=True,
                           elide_flushes=True),
+    "hardware": dict(policy="numapte", tlb_filter=True,
+                     contention="hardware"),
 }
 
 #: modeled compute per lockstep decode step (forward pass + sampling);
@@ -169,10 +174,10 @@ def run_closed_loop(policy: str, *, arrival_rate_rps: float,
     if policy not in SERVING_POLICIES:
         raise ValueError(f"unknown serving policy {policy!r}; "
                          f"pick from {sorted(SERVING_POLICIES)}")
-    sim = make_sim(topology, SimConfig(concurrency="overlap",
-                                       contention="coalescing",
-                                       engine=engine,
-                                       **SERVING_POLICIES[policy]))
+    cfg = dict(concurrency="overlap", contention="coalescing",
+               engine=engine)
+    cfg.update(SERVING_POLICIES[policy])     # may override contention
+    sim = make_sim(topology, SimConfig(**cfg))
     step_cpus = sim.topo.hw_threads_per_node
     workers = [sim.spawn_thread(node * step_cpus)
                for node in range(sim.topo.n_nodes)]
@@ -260,6 +265,9 @@ def run_closed_loop(policy: str, *, arrival_rate_rps: float,
         "forced_flushes": c.forced_flushes,
         "victim_interrupt_us": sum(sim.thread_time_ns(t)
                                    for t in tenant_tids) / 1e3,
+        "hw_line_invalidations": c.hw_line_invalidations,
+        "hw_invalidation_us": c.hw_invalidation_ns / 1e3,
+        "model": cfg["contention"],
         "settle_engine": getattr(sim, "last_settle_engine", None),
         "mm_engine": getattr(sim, "last_mm_engine", None),
     }

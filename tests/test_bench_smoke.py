@@ -37,6 +37,9 @@ def test_bench_json_schema(tmp_path):
         # benchmarks without the knob; the signature default otherwise)
         assert d["engine"] == ("batch" if name == "fig07_migration"
                                else None)
+        # schema v9: the contention-model override (null = not overridden
+        # or the benchmark has no knob)
+        assert d["contention"] is None
         assert d["row_types"] == ["data"]
         assert d["error"] is None
         assert d["elapsed_s"] >= 0
@@ -116,16 +119,28 @@ def test_colocation_artifact(tmp_path):
     assert d["error"] is None
     json.dumps(d)
     rows = {r["policy"]: r for r in d["rows"]}
-    assert {"linux", "mitosis", "numapte-nofilter", "numapte"} <= set(rows)
+    assert {"linux", "mitosis", "numapte-nofilter", "numapte",
+            "hardware"} <= set(rows)
     for r in d["rows"]:
         assert r["row_type"] == "colocation"
         assert r["tenants"] == 2
         for field in ("victim_slowdown", "victim_interrupt_ns",
                       "victim_ipis", "storm_ns_per_op", "ipis_remote",
                       "ipis_filtered", "responder_delay_ns",
-                      "ipis_coalesced"):
+                      "ipis_coalesced", "model", "hw_line_invalidations",
+                      "hw_invalidation_us"):
             assert field in r, field
+    # schema v9: the IPI-free hardware column — Linux's unfiltered
+    # fan-out, yet the ASID-tagged fabric leaks nothing to the victims
+    hw = rows["hardware"]
+    assert hw["model"] == "hardware"
+    assert hw["victim_slowdown"] == 1.0
+    assert hw["victim_interrupt_ns"] == 0.0
+    assert hw["victim_ipis"] == 0
+    assert hw["responder_delay_ns"] == 0.0
+    assert hw["ipis_coalesced"] == 0
     numapte = rows["numapte"]
+    assert numapte["model"] == "coalescing"
     assert numapte["victim_slowdown"] == 1.0
     assert numapte["victim_interrupt_ns"] == 0.0
     assert numapte["victim_ipis"] == 0
@@ -144,12 +159,14 @@ def test_colocation_artifact(tmp_path):
 
 
 def test_serving_closed_loop_artifact(tmp_path):
-    """Schema v7: the closed-loop serving benchmark — four policies per
-    offered load, latency quantiles monotone nondecreasing in the offered
-    load (1% tolerance for batching-alignment jitter), goodput never
-    above offered, saturated rows carrying ``runtime_vs_linux``, the
-    vectorized settlement provenance on every row, and the
-    ``--arrival-rate`` knob recorded in the payload when passed."""
+    """Schema v7 (v9: + the ``hardware`` policy): the closed-loop serving
+    benchmark — five policies per offered load, latency quantiles
+    monotone nondecreasing in the offered load (1% tolerance for
+    batching-alignment jitter), goodput never above offered, saturated
+    rows carrying ``runtime_vs_linux``, per-row settlement provenance
+    (vector for the software models; the hardware fabric has nothing to
+    vector-settle), and the ``--arrival-rate`` knob recorded in the
+    payload when passed."""
     from benchmarks.serving_closed_loop import LOAD_FACTORS_QUICK
 
     written = run_benchmarks(["serving_closed_loop"], quick=True,
@@ -161,11 +178,12 @@ def test_serving_closed_loop_artifact(tmp_path):
     assert d["error"] is None
     json.dumps(d)
 
-    policies = ("linux", "mitosis", "numapte", "numapte+elide")
+    policies = ("linux", "mitosis", "numapte", "numapte+elide", "hardware")
     by = {}
     for r in d["rows"]:
         assert r["row_type"] == "serving_latency"
-        assert r["settle_engine"] == "vector"
+        assert r["settle_engine"] == ("sequential" if r["policy"] ==
+                                      "hardware" else "vector")
         assert r["goodput_rps"] <= r["offered_rps"]
         assert 0 < r["p50_us"] <= r["p99_us"]
         by[(r["policy"], r["load_factor"])] = r
@@ -185,6 +203,21 @@ def test_serving_closed_loop_artifact(tmp_path):
     for f in LOAD_FACTORS_QUICK:
         assert by[("numapte+elide", f)]["ipis"] <= by[("numapte", f)]["ipis"]
         assert by[("numapte+elide", f)]["flushes_elided"] > 0
+    # schema v9: the hardware column is IPI-free at every offered load —
+    # zero software shootdown traffic and zero cross-tenant leak — and
+    # its saturated makespan is at least as good as Linux's
+    for f in LOAD_FACTORS_QUICK:
+        hw = by[("hardware", f)]
+        assert hw["model"] == "hardware"
+        assert hw["ipis"] == 0 and hw["ipis_coalesced"] == 0
+        assert hw["responder_delay_us"] == 0.0
+        assert hw["ipi_queue_delay_us"] == 0.0
+        assert hw["victim_interrupt_us"] == 0.0
+        # KV blocks are touched only by their owning worker, so there
+        # are no stale remote lines to invalidate — the win is pure
+        # elision of dispatch+ack, not cheaper invalidation work
+        assert hw["hw_line_invalidations"] == 0
+    assert by[("hardware", top)]["runtime_vs_linux"] >= 1.0
 
     # the --arrival-rate knob overrides the nominal-capacity base rate
     # and is recorded in the payload
@@ -261,6 +294,27 @@ def test_mm_bench_json_artifacts(tmp_path):
     assert at_max["numapte"]["ipis_filtered"] > 0
     assert at_max["linux"]["slowdown_vs_linux0"] > \
         at_max["numapte"]["slowdown_vs_linux0"]
+    # schema v9: the hardware column is flat and IPI-free at full spin
+    assert at_max["hardware"]["model"] == "hardware"
+    assert at_max["hardware"]["ipis_local"] == 0
+    assert at_max["hardware"]["ipis_remote"] == 0
+    assert at_max["hardware"]["slowdown_vs_linux0"] <= \
+        at_max["numapte"]["slowdown_vs_linux0"]
+
+    # fig09/fig10: hardware rows carry the ablation decomposition —
+    # both parts non-negative and reassembling the coalescing total on
+    # the identical trace (fields independently rounded, hence the 1ns
+    # reassembly tolerance)
+    for name in ("fig09_mm_ops", "fig10_munmap"):
+        hw_rows = [r for r in _load(written[name])["rows"]
+                   if r.get("policy") == "hardware"]
+        assert hw_rows, name
+        for r in hw_rows:
+            assert r["model"] == "hardware"
+            assert r["flush_work_ns"] >= 0, (name, r)
+            assert r["dispatch_ack_ns"] >= 0, (name, r)
+            assert abs(r["flush_work_ns"] + r["dispatch_ack_ns"]
+                       - r["coalescing_ns"]) <= 1.01, (name, r)
 
     # fig09/fig10: the scale-swept engine wall-time comparison rows —
     # trace + batch vs the scalar reference, with per-engine provenance
@@ -342,23 +396,30 @@ def test_mm_bench_json_artifacts(tmp_path):
         assert pol["linux"]["ns_per_op"] >= pol["numapte"]["ns_per_op"]
 
     # fig1-absolute: the schema-v4 spinner-swept rows — the quick sweep
-    # must reach the paper's full 280-spinner regime under the default
-    # (coalescing) model, with every overlap row recording which
+    # must reach the paper's full 280-spinner regime, software rows under
+    # the default (coalescing) model and, since schema v9, a third
+    # ``hardware`` system settled sequentially (HardwareCoherence has no
+    # vectorized settlement), with every overlap row recording which
     # settlement engine produced it (satellite: no silent engine mixing)
     from benchmarks.mm_concurrent import ABS_WORKERS
     absrows = [r for r in rows if r["scenario"] == "fig1-absolute"]
     assert absrows, "fig1-absolute rows missing"
-    seen_engines = set()
+    sw_engines, hw_engines = set(), set()
     byabs = {}
     for r in absrows:
         assert r["concurrency"] == "overlap"
-        assert r["model"] == "coalescing"          # the default model
         assert r["total_spinners"] == \
             r["spinners"] * 8                      # 8-socket testbed
         assert r["settle_engine"] in ("vector", "sequential", "mixed")
-        seen_engines.add(r["settle_engine"])
+        if r["policy"] == "hardware":
+            assert r["model"] == "hardware"
+            hw_engines.add(r["settle_engine"])
+        else:
+            assert r["model"] == "coalescing"      # the default model
+            sw_engines.add(r["settle_engine"])
         byabs[(r["policy"], r["spinners"], r["n_threads"])] = r
-    assert seen_engines == {"vector"}, seen_engines
+    assert sw_engines == {"vector"}, sw_engines
+    assert hw_engines == {"sequential"}, hw_engines
     loads = sorted({r["spinners"] for r in absrows})
     assert loads[0] == 0 and loads[-1] == 35, loads   # quiet -> 280
     top_l = byabs[("linux", 35, ABS_WORKERS)]
@@ -371,6 +432,19 @@ def test_mm_bench_json_artifacts(tmp_path):
         if r["policy"] == "numapte":
             assert r["responder_delay_us"] == 0.0
             assert r["vs_single_initiator"] < 2.0
+        if r["policy"] == "hardware":
+            # IPI-free upper bound: flat under load, with the ablation
+            # decomposition reassembling the Linux coalescing total
+            assert r["ipis_local"] == 0 and r["ipis_remote"] == 0
+            assert r["vs_single_initiator"] <= 1.1
+            assert r["flush_work_ns"] >= 0
+            assert r["dispatch_ack_ns"] >= 0
+            assert abs(r["flush_work_ns"] + r["dispatch_ack_ns"]
+                       - r["coalescing_ns"]) <= 0.11, r
+    top_h = byabs[("hardware", 35, ABS_WORKERS)]
+    # at the 280-spinner top nearly the whole cliff is dispatch+ack
+    assert top_h["dispatch_ack_ns"] > top_h["flush_work_ns"]
+    assert top_h["ns_per_op"] <= top_n["ns_per_op"]
 
     # the settlement engine_walltime row: the vectorized settlement vs
     # the scalar model loops at the top of the 280-spinner regime
@@ -419,12 +493,15 @@ def test_mm_concurrent_rows_deterministic(tmp_path):
                                  outdir=str(tmp_path / sub), strict=True)
         r = _load(written["mm_concurrent"])["rows"]
         # every overlap-settled modeled row must state its engine, and a
-        # single artifact must not mix engines across its settled rows
-        engines = {row["settle_engine"] for row in r
-                   if row.get("row_type", "data") == "data"
-                   and row.get("concurrency") == "overlap"
-                   and "settle_engine" in row}
-        assert engines == {"vector"}, engines
+        # single artifact must not mix engines within a model: software
+        # rows settle "vector", hardware rows "sequential" (schema v9)
+        for row in r:
+            if (row.get("row_type", "data") == "data"
+                    and row.get("concurrency") == "overlap"
+                    and "settle_engine" in row):
+                want = ("sequential" if row.get("model") == "hardware"
+                        else "vector")
+                assert row["settle_engine"] == want, row
         # engine_walltime rows are host measurements by definition —
         # validated in test_mm_bench_json_artifacts, excluded here like
         # every other wall field
@@ -461,6 +538,39 @@ def test_emit_root_refresh_byte_stable_across_runs(tmp_path, monkeypatch):
                    for r in d["rows"])
     assert any(r["scenario"] == "fig1-absolute" and r["spinners"] == 35
                for r in d["rows"])
+    # the schema-v9 hardware system is part of the committed artifact
+    assert any(r["scenario"] == "fig1-absolute"
+               and r.get("policy") == "hardware" for r in d["rows"])
+
+
+def test_contention_knob_recorded_and_applied(tmp_path):
+    """Schema v9: ``--contention hardware`` must be recorded in the
+    payload and actually steer the ambient model of every overlap
+    scenario — except the spinner-ramp, which pins an explicit ``queue``
+    model by construction (it *is* the queue-depth ablation)."""
+    written = run_benchmarks(["mm_concurrent"], quick=True,
+                             outdir=str(tmp_path), strict=True,
+                             contention="hardware")
+    d = _load(written["mm_concurrent"])
+    assert d["contention"] == "hardware"
+    saw_override = False
+    for r in d["rows"]:
+        # model is None on sequential-concurrency rows (no overlap model
+        # ran) and absent on rows without a contention dimension
+        if r.get("row_type", "data") != "data" or r.get("model") is None:
+            continue
+        if r.get("scenario") == "spinner-ramp":
+            assert r["model"] == "queue", r
+            continue
+        assert r["model"] == "hardware", r
+        saw_override = True
+        if "settle_engine" in r:
+            assert r["settle_engine"] == "sequential", r
+        if "ipi_queue_delay_us" in r:
+            assert r["ipi_queue_delay_us"] == 0.0, r
+        if "responder_delay_us" in r:
+            assert r["responder_delay_us"] == 0.0, r
+    assert saw_override
 
 
 def test_fig6_prefetch_rows_consistent(tmp_path):

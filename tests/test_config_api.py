@@ -27,9 +27,11 @@ import warnings
 import numpy as np
 import pytest
 
-from repro.core import (APPS, CoalescingContention, NumaSim, Policy,
-                        QueueContention, SimConfig, build_app, make_sim,
-                        run_app, run_mprotect_phase, run_teardown_phase)
+from repro.core import (APPS, CONTENTION_MODELS, CoalescingContention,
+                        ContentionModel, HardwareCoherence, NumaSim, Policy,
+                        QueueContention, SimConfig, build_app, make_contention,
+                        make_sim, run_app, run_mprotect_phase,
+                        run_teardown_phase)
 
 from test_mm_batch_differential import (TOPO, _build, _random_choices,
                                         assert_identical, materialize)
@@ -78,6 +80,43 @@ def test_string_registries_resolve():
     model = CoalescingContention()
     shared = SimConfig(contention=model)
     assert make_sim(TOPO, shared).contention is model
+
+
+def test_hardware_registry_round_trip():
+    """Schema v9: ``"hardware"`` is a first-class registry citizen —
+    resolvable by name, instantiated fresh per ``make_sim``, and carrying
+    the IPI-free settlement contract the engines branch on."""
+    assert CONTENTION_MODELS["hardware"] is HardwareCoherence
+    cfg = SimConfig(contention="hardware")
+    model = cfg.resolved_contention()
+    assert isinstance(model, HardwareCoherence)
+    assert model.ipi_free and model.handler_ns == 0.0
+    # a name resolves fresh per call — never a shared singleton
+    assert cfg.resolved_contention() is not model
+    assert isinstance(make_contention("hardware"), HardwareCoherence)
+    a, b = make_sim(TOPO, cfg), make_sim(TOPO, cfg)
+    assert isinstance(a.contention, HardwareCoherence)
+    assert a.contention is not b.contention
+    # instances pass through (deliberate sharing), like every model
+    shared = HardwareCoherence()
+    assert make_sim(TOPO, SimConfig(contention=shared)).contention is shared
+
+
+def test_unregistered_contention_instance_rejected():
+    """An instance whose class is neither registered nor a subclass of a
+    registered model gets the same loud ``ValueError`` as an unknown
+    name; subclasses inherit validated settlement semantics and pass."""
+    class Rogue(ContentionModel):
+        handler_ns = 1.0
+
+    with pytest.raises(ValueError, match=r"or subclass one"):
+        SimConfig(contention=Rogue())
+
+    class TunedHardware(HardwareCoherence):
+        pass
+
+    tuned = TunedHardware()
+    assert make_sim(TOPO, SimConfig(contention=tuned)).contention is tuned
 
 
 def test_config_validation():

@@ -1,0 +1,247 @@
+"""Differential pinning of the ``HardwareCoherence`` backend (schema v9).
+
+``contention="hardware"`` settles every shootdown over the IPI-free
+coherence fabric: zero dispatch, zero handler occupancy, zero ack wait —
+only per-line invalidation messages, priced by stale-entry count and NUMA
+hop distance.  The model is mirrored in all three execution tiers (the
+scalar ``_shootdown`` path, the batched ``mm_batch`` engine, and the
+compiled trace engine's windowed settlement), and this suite pins them to
+each other: identical op interleavings must leave the three simulators in
+byte-identical states — every ``Counters`` field (including
+``hw_line_invalidations`` / ``hw_invalidation_ns``), float-exact thread
+times and ``ipis_received``, TLB contents *and insertion order*,
+page-table replicas and sharer masks, the oracle, and the VMA layout.
+
+The acceptance sweep replays >= 100 seeded interleavings (36 per policy,
+108 total) across {eager, elide_flushes} x {sequential, overlap} x
+{single-process, multi-tenant}, reusing the shadow-allocator materializer
+and tenant-churn helpers of the batch and trace differential suites.  A
+fast slice of the same matrix runs in tier-1.
+
+Overlap seeds additionally assert the zero-IPI contract after the run:
+no software shootdown machinery may fire under hardware coherence (the
+semantic half lives in ``test_shootdown_contention``'s metamorphic
+layer).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import test_mm_batch_differential as ref
+import test_trace_differential as tr
+from repro.core import (CONTENTION_MODELS, HardwareCoherence, Policy,
+                        SimConfig, make_contention)
+
+POLICIES = ref.POLICIES
+SEEDS_PER_POLICY = 36          # 3 policies x 36 = 108 interleavings
+ENGINES3 = ("scalar", "batch", "trace")
+
+
+def assert_no_ipi_machinery(sim, tag=""):
+    """Under ``HardwareCoherence`` no software shootdown cost may exist:
+    no IPIs sent or received, no receive-queue delay, no responder
+    stretch, no coalescing — ever."""
+    c = sim.counters
+    assert c.ipis_local == 0, f"{tag}: ipis_local"
+    assert c.ipis_remote == 0, f"{tag}: ipis_remote"
+    assert c.ipi_queue_delay_ns == 0.0, f"{tag}: ipi_queue_delay_ns"
+    assert c.responder_delay_ns == 0.0, f"{tag}: responder_delay_ns"
+    assert c.ipis_coalesced == 0, f"{tag}: ipis_coalesced"
+    assert c.overlapping_rounds == 0, f"{tag}: overlapping_rounds"
+    for tid, t in sim.threads.items():
+        assert t.ipis_received == 0, f"{tag}: thread {tid} ipis_received"
+
+
+def run_hw_differential(policy, choices, *, chunk=7, tlb_filter=True,
+                        prefetch=0, elide=False, overlap=False,
+                        tenant=False, tag=""):
+    """Scalar vs batch vs trace in chunked lockstep over one materialized
+    program, all three under ``contention="hardware"``, asserting
+    byte-identical state and engine provenance at every sync point."""
+    cfg = dict(elide_flushes=elide, contention="hardware",
+               concurrency=("overlap" if overlap else "sequential"))
+    sims, tids, tenants = {}, None, {}
+    for eng in ENGINES3:
+        s, t = ref._build(policy, prefetch=prefetch, tlb_filter=tlb_filter,
+                          engine=eng, **cfg)
+        sims[eng] = s
+        assert tids is None or t == tids
+        tids = t
+        if tenant:
+            tenants[eng] = tr._spawn_tenant(s)
+    scalar = sims["scalar"]
+    ops = ref.materialize(choices, scalar._next_vpn)
+    rng = np.random.default_rng(7919 * (len(ops) + 1) + chunk)
+    for i in range(0, len(ops), chunk):
+        part = ops[i:i + chunk]
+        results = {}
+        for eng in ENGINES3:
+            r = sims[eng].apply_mm_ops(part)
+            assert sims[eng].last_mm_engine == eng, tag  # per-row provenance
+            results[eng] = [(v.vma_id, v.start_vpn, v.end_vpn)
+                            if v is not None else None for v in r]
+            if overlap:
+                # HardwareCoherence has no vectorized settlement: the
+                # resolver must pick the model's own sequential loop
+                assert sims[eng].last_settle_engine == "sequential", tag
+        assert results["batch"] == results["scalar"] == results["trace"], \
+            f"{tag}: op results @ chunk {i}"
+        ref.assert_identical(scalar, sims["batch"], f"{tag}/batch/chunk{i}")
+        ref.assert_identical(scalar, sims["trace"], f"{tag}/trace/chunk{i}")
+        if tenant:
+            n_pages = 1 + int(rng.integers(1, 64))
+            for eng in ENGINES3:
+                tid = tenants[eng][(i // max(chunk, 1)) % len(tenants[eng])]
+                tr._tenant_churn(sims[eng], tid, n_pages)
+            ref.assert_identical(scalar, sims["batch"], f"{tag}/batch/ten{i}")
+            ref.assert_identical(scalar, sims["trace"], f"{tag}/trace/ten{i}")
+    for s in sims.values():
+        s.check_invariants()
+        if overlap:
+            # hardware settlement really ran for these batches: no IPI
+            # machinery may have fired anywhere, in any engine
+            assert_no_ipi_machinery(s, tag)
+    return sims
+
+
+# --------------------------------------------------------------------------
+# acceptance sweep (slow, like the batch/trace differential siblings)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+def test_hardware_random_interleavings_byte_identical(policy):
+    """36 seeded interleavings per policy (108 total >= the 100-seed
+    acceptance floor), scalar vs batch vs trace in lockstep under
+    ``contention="hardware"``, sweeping elide / overlap / multi-tenant /
+    filter / prefetch via the trace suite's deterministic flag spread."""
+    for seed in range(SEEDS_PER_POLICY):
+        rng = np.random.default_rng(400_000 + seed)
+        choices = ref._random_choices(rng, int(rng.integers(6, 36)))
+        run_hw_differential(
+            policy, choices, chunk=int(rng.integers(1, 12)),
+            tag=f"{policy.value}/hw-seed{seed}", **tr._seed_flags(seed))
+
+
+# --------------------------------------------------------------------------
+# fast tier-1 slice of the same matrix
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", [Policy.LINUX, Policy.NUMAPTE])
+@pytest.mark.parametrize("seed", [0, 1, 3, 6])
+def test_hardware_differential_fast_slice(policy, seed):
+    """Four seeds per policy covering every elide/overlap/tenant corner
+    (seed 0: overlap; 1: elide+tenant; 3: elide+tenant; 6: overlap+tenant)
+    — the always-on guard for the three-tier hardware mirror."""
+    rng = np.random.default_rng(400_000 + seed)
+    choices = ref._random_choices(rng, int(rng.integers(6, 36)))
+    run_hw_differential(policy, choices, chunk=int(rng.integers(1, 12)),
+                        tag=f"fast/{policy.value}/hw-seed{seed}",
+                        **tr._seed_flags(seed))
+
+
+# --------------------------------------------------------------------------
+# targeted differentials (fast; always on)
+# --------------------------------------------------------------------------
+def test_hardware_registered_and_validated():
+    """Registry contract: "hardware" is a first-class contention model,
+    selectable by name through SimConfig, instantiated fresh per sim."""
+    assert CONTENTION_MODELS["hardware"] is HardwareCoherence
+    m = make_contention("hardware")
+    assert isinstance(m, HardwareCoherence)
+    assert m.ipi_free and m.handler_ns == 0.0
+    a, _ = ref._build(Policy.NUMAPTE, contention="hardware")
+    b, _ = ref._build(Policy.NUMAPTE, contention="hardware")
+    assert isinstance(a.contention, HardwareCoherence)
+    assert a.contention is not b.contention   # fresh instance per sim
+    cfg = SimConfig(contention="hardware")
+    assert cfg.resolved_contention() is not cfg.resolved_contention()
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_hardware_segfault_mid_batch_identical(policy):
+    """A touch op hitting a hole mid-batch raises SegfaultError after
+    applying exactly the same partial state in all three tiers, hardware
+    rounds included (an overlap batch, so the model is live)."""
+    from repro.core import SegfaultError
+    from repro.core.pagetable import PERM_R
+
+    cfg = dict(contention="hardware", concurrency="overlap")
+    sims = {eng: ref._build(policy, engine=eng, **cfg) for eng in ENGINES3}
+    (sa, ta) = sims["scalar"]
+    vmas = {}
+    for eng, (s, t) in sims.items():
+        vmas[eng] = s.mmap(t[0], 8)
+    assert len({(v.start_vpn, v.end_vpn) for v in vmas.values()}) == 1
+    va = vmas["scalar"]
+    hole = va.end_vpn + 99_999
+    ops = [("touch", ta[0], list(range(va.start_vpn, va.end_vpn)), True),
+           ("mprotect", ta[1], va.start_vpn, 8, PERM_R),
+           ("touch", ta[1], [va.start_vpn, hole]),
+           ("munmap", ta[0], va.start_vpn, 8)]
+    for eng, (s, _) in sims.items():
+        with pytest.raises(SegfaultError):
+            s.apply_mm_ops(ops)
+    ref.assert_identical(sa, sims["batch"][0], f"{policy.value}/hw-segv/b")
+    ref.assert_identical(sa, sims["trace"][0], f"{policy.value}/hw-segv/t")
+    assert_no_ipi_machinery(sa, f"{policy.value}/hw-segv")
+
+
+def test_hardware_elide_forced_flush_identical():
+    """The elision bookkeeping interacts with the hardware path: deferred
+    unmap flushes, when forced by frame reuse, settle as one precise
+    IPI-free round charging only the stale lines actually present — and
+    the lazy state stays byte-identical across all three tiers."""
+    cfg = dict(contention="hardware", concurrency="overlap",
+               elide_flushes=True)
+    sims = {eng: ref._build(Policy.NUMAPTE, engine=eng, **cfg)
+            for eng in ENGINES3}
+    for eng, (sim, t) in sims.items():
+        v1 = sim.apply_mm_ops([("mmap", t[0], 8)])[0]
+        v2 = sim.apply_mm_ops([("mmap", t[1], 8)])[0]
+        sim.apply_mm_ops([
+            ("touch", t[0], list(range(v1.start_vpn, v1.end_vpn)), True),
+            ("touch", t[1], [v1.start_vpn, v2.start_vpn], True),
+            ("touch", t[0], [v2.start_vpn])])
+        # elided unmaps (deferred shootdowns): stale entries pile up on
+        # t[0]'s and t[1]'s partitions ...
+        sim.apply_mm_ops([("munmap", t[0], v1.start_vpn, 8),
+                          ("madvise", t[1], v2.start_vpn, 1)])
+        # ... then a re-touch of the madvised page forces the whole
+        # deferred flush as one precise IPI-free hardware round
+        sim.apply_mm_ops([("touch", t[0], [v2.start_vpn], True)])
+    sa = sims["scalar"][0]
+    assert sa.counters.flushes_elided > 0
+    assert sa.counters.forced_flushes > 0
+    assert sa.counters.hw_line_invalidations > 0
+    ref.assert_identical(sa, sims["batch"][0], "hw-elide/batch")
+    ref.assert_identical(sa, sims["trace"][0], "hw-elide/trace")
+    assert_no_ipi_machinery(sa, "hw-elide")
+
+
+def test_hardware_multi_tenant_asid_isolation_identical():
+    """Cross-tenant contract: the fabric is ASID-tagged, so one tenant's
+    hardware rounds never move another tenant's clocks — in any tier."""
+    cfg = dict(contention="hardware", concurrency="overlap")
+    sims = {eng: ref._build(Policy.LINUX, tlb_filter=False, engine=eng,
+                            **cfg) for eng in ENGINES3}
+    for eng, (sim, t) in sims.items():
+        tenants = tr._spawn_tenant(sim)
+        # the tenant maps + touches its own heap, then goes idle
+        v = sim.apply_mm_ops([("mmap", tenants[0], 4)])[0]
+        sim.apply_mm_ops([("touch", tenants[0],
+                           list(range(v.start_vpn, v.end_vpn)), True)])
+        t_tenant = [sim.threads[x].time_ns for x in tenants]
+        # the main process storms: map, share across threads, unmap
+        vm = sim.apply_mm_ops([("mmap", t[0], 16)])[0]
+        sim.apply_mm_ops([("touch", t[0], list(range(vm.start_vpn,
+                                                     vm.end_vpn)), True)])
+        sim.apply_mm_ops([("touch", t[1], [vm.start_vpn, vm.start_vpn + 1]),
+                          ("touch", t[2], [vm.start_vpn])])
+        sim.apply_mm_ops([("munmap", t[0], vm.start_vpn, 16)])
+        assert sim.counters.hw_line_invalidations > 0, eng
+        # the victim tenant's clocks never moved
+        assert [sim.threads[x].time_ns for x in tenants] == t_tenant, eng
+    sa = sims["scalar"][0]
+    ref.assert_identical(sa, sims["batch"][0], "hw-tenant/batch")
+    ref.assert_identical(sa, sims["trace"][0], "hw-tenant/trace")
+    assert_no_ipi_machinery(sa, "hw-tenant")

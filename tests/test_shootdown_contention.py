@@ -25,19 +25,34 @@ Metamorphic/property layer (hypothesis-when-available, seeded always-on):
 * coalescing never increases a CPU's total handler occupancy;
 * a model's custom ``handler_ns`` drives the CPU busy horizon *and* the
   target-thread charge — they can never silently disagree.
+
+Hardware-coherence metamorphic layer (schema v9, ``HardwareCoherence``):
+
+* every software shootdown counter (IPIs sent, queue delay, responder
+  delay, coalesced merges, per-thread ``ipis_received``) is exactly zero
+  under the IPI-free fabric, for every policy;
+* a reader's per-round charge is exactly ``line_cost_ns`` — strictly
+  monotone in the stale-entry count and in the NUMA hop distance (with
+  the ring-distance cap pinning far sockets to the 2-hop price);
+* TLB content/order, sharer masks, replicas, the oracle and the VMA
+  layout are identical to the classic sequential reference — hardware
+  coherence reprices invalidations, it never changes *what* is
+  invalidated.
 """
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
-from repro.core import (CoalescingContention, CostModel, IPI_RECEIVE_NS,
-                        NullContention, NumaSim, PAPER_8SOCKET, Policy,
-                        QueueContention, RoundSettlement, SimConfig,
-                        make_sim)
+from repro.core import (CoalescingContention, CostModel, HardwareCoherence,
+                        IPI_RECEIVE_NS, NullContention, NumaSim,
+                        PAPER_8SOCKET, Policy, QueueContention,
+                        RoundSettlement, SimConfig, make_sim)
 from repro.core.pagetable import leaf_id
+from repro.core.shootdown import HW_HOP_NS, HW_LINE_INVALIDATE_NS
 
 from test_mm_batch_differential import (POLICIES, _build, _random_choices,
+                                        _table_state, _vma_state,
                                         assert_identical, materialize)
 
 try:
@@ -624,3 +639,112 @@ def test_queue_contention_reset_and_settlement_shape():
     assert not m.busy_until and not m.initiator_until and m.clock == 0.0
     s3 = m.settle(0.0, 0, [4, 5], node_of, cost)
     assert not s3.contended
+
+
+# --------------------------------------------------------------------------
+# hardware coherence: metamorphic layer (schema v9)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+def test_hardware_zero_ipi_machinery_every_policy(policy):
+    """Under ``HardwareCoherence`` the software shootdown machinery never
+    fires, whatever the fan-out policy: zero IPIs sent, zero queue delay,
+    zero responder stretch, zero coalesced merges, zero per-thread
+    ``ipis_received`` — while the rounds themselves still run (and are
+    counted) and the pure responder's clock never moves at all."""
+    sim, victim, t0 = _interleaved_munmap_sim(HardwareCoherence(),
+                                              policy=policy)
+    c = sim.counters
+    assert c.shootdown_rounds > 0
+    assert c.ipis_local == 0 and c.ipis_remote == 0
+    assert c.ipi_queue_delay_ns == 0.0
+    assert c.responder_delay_ns == 0.0
+    assert c.ipis_coalesced == 0 and c.overlapping_rounds == 0
+    for t in sim.threads.values():
+        assert t.ipis_received == 0
+    # the victim holds no stale line of any stormed range: its modeled
+    # clock is untouched (under Linux's classic fan-out it pays handlers)
+    assert sim.threads[victim].time_ns == t0
+
+
+def _hw_reader_charge(k, reader_node, pages=16):
+    """One initiator on node 0 munmaps a ``pages``-page VMA after a
+    reader ``reader_node`` sockets around the ring cached ``k`` of its
+    translations; returns the reader's charge for the single hardware
+    round."""
+    sim = make_sim(PAPER_8SOCKET, SimConfig(
+        policy=Policy.LINUX, tlb_filter=False, contention="hardware"))
+    main = sim.spawn_thread(0)
+    reader = sim.spawn_thread(reader_node * sim.topo.hw_threads_per_node)
+    vma = sim.mmap(main, pages)
+    for vpn in range(vma.start_vpn, vma.end_vpn):
+        sim.touch(main, vpn, write=True)
+    for vpn in range(vma.start_vpn, vma.start_vpn + k):
+        sim.touch(reader, vpn)
+    t0 = sim.threads[reader].time_ns
+    sim.munmap(main, vma.start_vpn, pages)
+    sim.check_invariants()
+    return sim.threads[reader].time_ns - t0, sim
+
+
+def test_hardware_charge_monotone_in_stale_lines():
+    """The per-round charge is exactly ``line_cost_ns(k, hops)`` — the
+    reader pays per stale entry actually cached, so the charge is zero at
+    k=0 and strictly monotone in the stale-line count."""
+    model = HardwareCoherence()
+    hops = PAPER_8SOCKET.hops(0, 1)
+    charges = []
+    for k in range(0, 9):
+        got, sim = _hw_reader_charge(k, reader_node=1)
+        assert got == model.line_cost_ns(k, hops), k
+        assert sim.counters.hw_line_invalidations == k
+        assert sim.counters.hw_invalidation_ns == got
+        charges.append(got)
+    assert charges[0] == 0.0
+    assert charges == sorted(charges)
+    assert all(b > a for a, b in zip(charges, charges[1:]))
+
+
+def test_hardware_charge_monotone_in_hop_distance():
+    """Same stale-line count, farther reader: the charge grows with the
+    NUMA hop distance, and the ring-distance cap prices the far sockets
+    at exactly the 2-hop rate."""
+    k = 6
+    by_node = {node: _hw_reader_charge(k, node)[0] for node in (1, 2, 4)}
+    assert by_node[1] == k * (HW_LINE_INVALIDATE_NS + HW_HOP_NS)
+    assert by_node[2] == k * (HW_LINE_INVALIDATE_NS + 2 * HW_HOP_NS)
+    assert by_node[2] > by_node[1]
+    # ring distance min(d, n-d) capped at 2: node 4 pays the 2-hop price
+    assert by_node[4] == by_node[2]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_hardware_state_matches_sequential_reference(policy):
+    """Hardware coherence reprices invalidations but never changes what
+    is invalidated: over seeded interleavings, TLB content *and order*,
+    sharer masks and replicas, the oracle and the VMA layout all match
+    the classic sequential no-model reference exactly (only times and
+    the charge counters differ), and the round/filter counters agree."""
+    for seed in range(6):
+        rng = np.random.default_rng(300_000 + seed)
+        choices = _random_choices(rng, 20)
+        hw, _ = _build(policy, concurrency="overlap",
+                       contention="hardware")
+        sq, _ = _build(policy, concurrency="sequential")
+        ops = ref_ops = materialize(choices, hw._next_vpn)
+        hw.apply_mm_ops(ops)
+        sq.apply_mm_ops(ref_ops)
+        tag = f"{policy.value}/hw-vs-seq/seed{seed}"
+        assert hw._oracle == sq._oracle, tag
+        for cpu in set(hw.tlbs) | set(sq.tlbs):
+            assert list(hw.tlbs[cpu].entries.items()) == \
+                list(sq.tlbs[cpu].entries.items()), f"{tag}: cpu {cpu}"
+        assert _table_state(hw) == _table_state(sq), tag
+        assert _vma_state(hw) == _vma_state(sq), tag
+        assert hw.counters.shootdown_rounds == \
+            sq.counters.shootdown_rounds, tag
+        assert hw.counters.ipis_filtered == sq.counters.ipis_filtered, tag
+        assert hw.counters.ipis_local == 0 and hw.counters.ipis_remote == 0
+        for t in hw.threads:
+            assert hw.threads[t].ipis_received == 0, tag
+        hw.check_invariants()
+        sq.check_invariants()
